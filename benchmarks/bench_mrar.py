@@ -1,0 +1,104 @@
+"""Paper Fig. 7 — Min-Rewiring Achievement Rate across consecutive
+reconfigurations.
+
+MRAR^ST = Σ_l cos(x_l, x_{l-1})^ST / Σ_l cos(x_l, x_{l-1})^REF  (eq. 16).
+
+REF is warm-started MDMCF with Hungarian slot matching — our best rewiring
+minimizer (the paper uses exact ILP; no ILP solver ships here, and the
+paper itself shows MDMCF within 4% of ILP, so the reference substitution
+shifts all MRARs by <4%; documented in EXPERIMENTS.md).
+Compared: MDMCF(warm) vs MCF(cold, MinRewiring-[39] style) vs
+Uniform-ILP* (Lagrangian-relaxed stand-in) — the paper's three regimes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.logical import random_feasible_demand
+from repro.core.reconfig import (
+    config_cosine,
+    mdmcf_cold,
+    mdmcf_reconfigure,
+    uniform_best_effort,
+)
+from repro.core.topology import ClusterSpec
+
+from .common import save
+
+
+def _sequence_cos(spec, demands, step_fn):
+    prev = None
+    cs = []
+    for C in demands:
+        res = step_fn(spec, C, prev)
+        if prev is not None:
+            cs.append(config_cosine(res.config, prev))
+        prev = res.config
+    return float(np.sum(cs))
+
+
+def run(quick: bool = True) -> dict:
+    pod_counts = [16, 64] if quick else [16, 32, 64, 128]
+    n_seq = 8 if quick else 20
+    rows = []
+    for P in pod_counts:
+        spec = ClusterSpec(num_pods=P, k_spine=16, k_leaf=16)
+        rng = np.random.default_rng(2)
+        # temporally consecutive topologies: each is a perturbation of the
+        # last (a fraction of jobs churn), as in the paper's §6.2 setup
+        demands = [random_feasible_demand(spec, rng, fill=1.0, num_groups=2)]
+        for _ in range(n_seq - 1):
+            # multi-tenant churn: ~10% of links turn over per event (one job
+            # arrives/leaves), the regime the Min-Rewiring objective targets
+            base = demands[-1].copy()
+            churn = random_feasible_demand(spec, rng, fill=0.1, num_groups=2)
+            mixed = np.maximum(base - churn, 0) + churn
+            # re-clip to feasibility
+            for h in range(mixed.shape[0]):
+                deg = mixed[h].sum(axis=1)
+                while (deg > spec.k_spine).any():
+                    p = int(np.argmax(deg))
+                    q = int(np.argmax(mixed[h, p]))
+                    mixed[h, p, q] -= 1
+                    mixed[h, q, p] -= 1
+                    deg = mixed[h].sum(axis=1)
+            demands.append(mixed)
+
+        # REF = MDMCF warm + Hungarian slot matching (ILP substitute)
+        ref = _sequence_cos(
+            spec, demands, lambda s, C, old: mdmcf_reconfigure(s, C, old=old)
+        )
+        # MCF = MinRewiring-[39]-style: decomposition reuse, no slot align
+        mcf = _sequence_cos(
+            spec, demands,
+            lambda s, C, old: mdmcf_reconfigure(s, C, old=old, slot_match=False),
+        )
+        cold = _sequence_cos(spec, demands, lambda s, C, old: mdmcf_cold(s, C))
+        uni = _sequence_cos(
+            spec, demands, lambda s, C, old: uniform_best_effort(s, C)
+        )
+        rows.append(
+            {
+                "nodes": spec.num_gpus,
+                "MRAR_MDMCF(warm+slot)": 1.0,
+                "MRAR_MCF(decomp-reuse)": mcf / ref if ref else 1.0,
+                "MRAR_cold": cold / ref if ref else 1.0,
+                "MRAR_Uniform-ILP*": uni / ref if ref else 1.0,
+            }
+        )
+    payload = {"rows": rows, "paper_claim": {
+        "MDMCF_vs_MCF_gain_pct": 2.77, "Uniform_vs_ITV_ILP_drop_pct": 16.14}}
+    save("mrar", payload)
+    return payload
+
+
+def main():
+    for r in run(quick=False)["rows"]:
+        print(
+            f"mrar,{r['nodes']},warm=1.0,mcf={r['MRAR_MCF(decomp-reuse)']:.4f},"
+            f"cold={r['MRAR_cold']:.4f},uniform={r['MRAR_Uniform-ILP*']:.4f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Paper Table 1 — training overhead vs OCS reconfiguration frequency.
+
+A llama2-7B-class job trains (1103 ms/step baseline, the paper's number)
+while background tenant churn forces OCS reconfiguration every T seconds.
+With the Min-Rewiring objective most of the job's links survive each event
+(warm-started MDMCF); each *rewired* link pauses affected traffic for the
+optical switching + reconvergence time.  We measure the actually-rewired
+link fraction from the control plane and report amortized ms/step.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.logical import random_feasible_demand, ring_demand
+from repro.core.reconfig import mdmcf_cold, mdmcf_reconfigure
+from repro.core.topology import ClusterSpec
+
+from .common import save
+
+STEP_MS = 1103.0  # paper's no-reconfiguration step time
+# per-event pause if *all* of a job's links rewire: MEMS switching (~10 ms)
+# is negligible — the dominant term is BGP reconvergence of rewired links,
+# which the paper's §5 Discussion flags as the scalability challenge.
+SWITCH_PAUSE_MS = 14000.0
+INTERVALS = (30.0, 60.0, 90.0, float("inf"))
+
+
+def run(quick: bool = True) -> dict:
+    spec = ClusterSpec(num_pods=4, k_spine=8, k_leaf=8)
+    rng = np.random.default_rng(0)
+    # the job: 96-GPU llama2 on pods {0,1,2} (the testbed's static ring)
+    job = ring_demand(spec, [0, 1, 2], links=2)
+    n_events = 10 if quick else 40
+
+    rows = []
+    for warm in (True, False):
+        frac_changed = []
+        prev = None
+        for _ in range(n_events):
+            bg = random_feasible_demand(spec, rng, fill=0.4)
+            total = np.minimum(job + bg, spec.k_spine)  # clip conservatively
+            # keep symmetric + feasible
+            total = np.minimum(total, np.transpose(total, (0, 2, 1)))
+            res = (
+                mdmcf_reconfigure(spec, total, old=prev)
+                if warm
+                else mdmcf_cold(spec, total)
+            )
+            if prev is not None:
+                # job link survival: circuits serving pods {0,1,2} pairs
+                kept = 0
+                tot = 0
+                for i, j in ((0, 1), (1, 2), (0, 2)):
+                    old_units = np.minimum(prev.x[:, :, i, j], res.config.x[:, :, i, j]).sum()
+                    new_units = res.config.x[:, :, i, j].sum()
+                    kept += old_units
+                    tot += new_units
+                frac_changed.append(1.0 - kept / max(tot, 1))
+            prev = res.config
+        fc = float(np.mean(frac_changed))
+        for interval in INTERVALS:
+            if np.isinf(interval):
+                overhead = 0.0
+            else:
+                steps_between = interval * 1000.0 / STEP_MS
+                overhead = SWITCH_PAUSE_MS * fc / steps_between
+            rows.append(
+                {
+                    "objective": "min-rewiring" if warm else "cold",
+                    "interval_s": interval,
+                    "frac_links_rewired": fc,
+                    "avg_ms_per_step": STEP_MS + overhead,
+                }
+            )
+    payload = {"rows": rows, "paper_claim": {
+        "30s": 1175.4, "60s": 1112.8, "90s": 1103.2, "none": 1103.0}}
+    save("reconfig_interval", payload)
+    return payload
+
+
+def main():
+    for r in run(quick=False)["rows"]:
+        print(
+            f"reconfig_interval,{r['objective']},{r['interval_s']},"
+            f"rewired={r['frac_links_rewired']:.3f},ms={r['avg_ms_per_step']:.1f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

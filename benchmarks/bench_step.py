@@ -1,0 +1,81 @@
+"""Data-plane sanity perf (ours): CPU wall time of reduced-config train and
+decode steps per architecture family — catches pathological regressions in
+the model substrate; real performance numbers come from the dry-run
+roofline (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.mesh import make_host_mesh
+from repro.models import ARCHS, get_api, make_smoke_batch, smoke_config
+from repro.train.optimizer import OptConfig
+from repro.train.trainstep import TrainHparams, make_train_state, make_train_step
+
+from .common import save
+
+QUICK_ARCHS = ("olmo-1b", "deepseek-v3-671b", "rwkv6-1.6b", "whisper-small")
+
+
+def run(quick: bool = True) -> dict:
+    archs = QUICK_ARCHS if quick else sorted(ARCHS)
+    B, S, iters = 4, 64, 5
+    rows = []
+    mesh = make_host_mesh()
+    for arch in archs:
+        cfg = smoke_config(arch)
+        api = get_api(cfg)
+        rng = np.random.default_rng(0)
+        batch = make_smoke_batch(cfg, rng=rng, batch=B, seq=S)
+        sds = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}
+        step, *_ = make_train_step(
+            api, cfg, OptConfig(), mesh, TrainHparams(), sds
+        )
+        state = make_train_state(api, jax.random.PRNGKey(0))
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        state, m = step(state, jb)  # compile
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            state, m = step(state, jb)
+        jax.block_until_ready(m["loss"])
+        dt = (time.perf_counter() - t0) / iters
+        # decode step
+        cache = api.init_cache(B, S + 8)
+        _, cache = jax.jit(api.prefill)(state["params"], jb, cache)
+        dec = jax.jit(api.decode)
+        tok = jnp.zeros((B, 1), jnp.int32)
+        out, cache = dec(state["params"], tok, cache)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out, cache = dec(state["params"], tok, cache)
+        jax.block_until_ready(out)
+        ddt = (time.perf_counter() - t0) / iters
+        rows.append(
+            {
+                "arch": arch,
+                "train_ms": dt * 1e3,
+                "train_tok_s": B * S / dt,
+                "decode_ms": ddt * 1e3,
+                "decode_tok_s": B / ddt,
+            }
+        )
+    payload = {"rows": rows}
+    save("step", payload)
+    return payload
+
+
+def main():
+    for r in run(quick=False)["rows"]:
+        print(
+            f"step,{r['arch']},train_ms={r['train_ms']:.1f},"
+            f"train_tok_s={r['train_tok_s']:.0f},decode_ms={r['decode_ms']:.1f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Paper Fig. 2a / 4a — testbed throughput reproduction (static scenario +
+48h trace).
+
+Static scenario (§5): 3 pods, 96 GPUs, TP=8 PP=2 DP=6 (EP=2 for
+PanguAlpha/GPT2).  The DP ring over 3 pods is a *triangle at full degree* —
+the Fig. 1 counterexample.  Uniform cannot realize it (chromatic index
+3Δ/2 > K_spine), so two flows contend on one link; Cross Wiring realizes it
+exactly.  Step time = compute + comm/φ, with per-model testbed comm
+fractions α calibrated the way the paper calibrates its simulator ζ
+("based on the results of our testbed experiments" — here: to the paper's
+own reported deltas, since this container has no 128-NPU testbed).
+
+The same αs then drive the 48h-trace run (Fig 4a) as a consistency check:
+the resulting average/maximum job-time reduction emerges from the model
+rather than being fitted.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.reconfig import mdmcf_reconfigure, uniform_exact_small
+from repro.core.topology import ClusterSpec
+from repro.sim import SimConfig, Simulator, generate_trace, summarize
+
+from .common import save
+
+# testbed comm fractions on 100G RoCE (heavier than the 1.6T sim fabric);
+# EP=2 models (pangu/gpt2) carry extra all-to-all in the DP domain
+TESTBED_ALPHA = {
+    "llama-7b": 0.22,
+    "llama2-7b": 0.22,
+    "llama2-13b": 0.28,
+    "pangu-alpha-6b": 0.40,
+    "gpt2-13b": 0.36,
+}
+
+
+def static_scenario() -> dict:
+    """3-pod triangle at full degree on the 128-NPU testbed geometry."""
+    spec = ClusterSpec(num_pods=4, k_spine=4, k_leaf=4, tau=1)  # 16/pod... geometry
+    # demand: full-degree triangle over pods {0,1,2}: 2 links per pair/group
+    H = spec.num_ocs_groups
+    C = np.zeros((H, 4, 4), dtype=np.int64)
+    for i in range(3):
+        for j in range(3):
+            if i != j:
+                C[:, i, j] = spec.k_spine // 2
+    itv = mdmcf_reconfigure(spec, C)
+    uni = uniform_exact_small(spec, C)
+    phi_itv = 1.0
+    # Uniform: unrealized pair demand reroutes over the 2-hop detour, adding
+    # transit load on the realized links — the paper's "2 flows contention".
+    realized = uni.config.realized_bidirectional().sum(axis=0)
+    demand = C.sum(axis=0)
+    pairs = [(0, 1), (1, 2), (0, 2)]
+    load = {e: float(min(demand[e], realized[e])) for e in pairs}
+    for i, j in pairs:
+        deficit = max(0.0, float(demand[i, j] - realized[i, j]))
+        if deficit:
+            k = ({0, 1, 2} - {i, j}).pop()  # detour pod
+            for e in ((min(i, k), max(i, k)), (min(j, k), max(j, k))):
+                load[e] += deficit
+    fracs = [
+        realized[e] / load[e] for e in pairs if demand[e] > 0 and load[e] > 0
+    ]
+    phi_uni = float(np.clip(min(fracs), 0.05, 1.0))
+
+    rows = []
+    for model, alpha in TESTBED_ALPHA.items():
+        t_itv = 1.0 + alpha * (1.0 / phi_itv - 1.0)
+        t_uni = 1.0 + alpha * (1.0 / phi_uni - 1.0)
+        rows.append(
+            {
+                "model": model,
+                "phi_uniform": phi_uni,
+                "throughput_gain_pct": (t_uni / t_itv - 1.0) * 100,
+            }
+        )
+    return {"ltrr_uniform_exact": uni.ltrr, "rows": rows}
+
+
+def trace_48h(quick: bool = True) -> dict:
+    """Fig 4a: 50-job 48h trace on the 128-NPU 4-pod testbed."""
+    from repro.sim.trace import COMM_FRACTION
+
+    saved = dict(COMM_FRACTION)
+    COMM_FRACTION.update(TESTBED_ALPHA)  # testbed fabric calibration
+    try:
+        jobs = generate_trace(
+            50 if quick else 50, num_gpus=128, workload_level=0.72, seed=7,
+            max_job_gpus=128,
+        )
+        out = {}
+        for arch, strat in (
+            ("best", "none"),  # stands in for the paper's leaf-spine optimum
+            ("cross_wiring", "mdmcf"),
+            ("uniform", "greedy"),
+        ):
+            sim = Simulator(
+                SimConfig(
+                    architecture=arch, strategy=strat,
+                    num_pods=4, k_spine=4, k_leaf=8,  # 4 pods × 32 GPUs
+                ),
+                jobs,
+            )
+            recs = sim.run()
+            out[f"{arch}/{strat}"] = {
+                **summarize(recs),
+                "jrt_list": [r.jrt for r in recs],
+            }
+        cw = np.array(out["cross_wiring/mdmcf"]["jrt_list"])
+        un = np.array(out["uniform/greedy"]["jrt_list"])
+        ls = np.array(out["best/none"]["jrt_list"])
+        return {
+            "avg_jrt_reduction_vs_uniform_pct": float((1 - cw.mean() / un.mean()) * 100),
+            "max_jrt_reduction_vs_uniform_pct": float(np.max(1 - cw / un) * 100),
+            "gap_to_leafspine_pct": float((cw.mean() / ls.mean() - 1) * 100),
+        }
+    finally:
+        COMM_FRACTION.clear()
+        COMM_FRACTION.update(saved)
+
+
+def run(quick: bool = True) -> dict:
+    payload = {
+        "static": static_scenario(),
+        "trace_48h": trace_48h(quick),
+        "paper_claim": {
+            "static_gain_up_to_pct": 39.5,
+            "trace_avg_reduction_pct": 3.9,
+            "trace_max_reduction_pct": 28.3,
+            "gap_to_leafspine_within_pct": 1.0,
+        },
+    }
+    save("throughput", payload)
+    return payload
+
+
+def main():
+    p = run(quick=False)
+    for r in p["static"]["rows"]:
+        print(
+            f"throughput,static,{r['model']},phi_uni={r['phi_uniform']:.3f},"
+            f"gain={r['throughput_gain_pct']:.1f}%"
+        )
+    t = p["trace_48h"]
+    print(
+        f"throughput,48h,avg_red={t['avg_jrt_reduction_vs_uniform_pct']:.1f}%,"
+        f"max_red={t['max_jrt_reduction_vs_uniform_pct']:.1f}%,"
+        f"leafspine_gap={t['gap_to_leafspine_pct']:.2f}%"
+    )
+
+
+if __name__ == "__main__":
+    main()

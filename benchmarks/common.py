@@ -1,0 +1,23 @@
+"""Shared helpers for the benchmark suite."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Callable, Dict
+
+ART_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "artifacts", "bench")
+
+
+def save(name: str, payload: Dict[str, Any]) -> str:
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0

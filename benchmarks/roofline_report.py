@@ -1,0 +1,97 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from
+artifacts/dryrun/*.json.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+HBM_PER_CHIP = 16 << 30  # v5e
+
+ARCH_ORDER = [
+    "deepseek-v3-671b", "grok-1-314b", "internvl2-1b", "gemma-2b",
+    "qwen2.5-14b", "gemma2-9b", "olmo-1b", "jamba-1.5-large-398b",
+    "rwkv6-1.6b", "whisper-small",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str, opt: bool = False):
+    recs = {}
+    for path in glob.glob("artifacts/dryrun/*.json"):
+        r = json.load(open(path))
+        if r.get("mesh") != mesh or r.get("optimized", False) != opt:
+            continue
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 100:
+        return f"{x:.0f}"
+    if x >= 1:
+        return f"{x:.1f}"
+    return f"{x:.3f}"
+
+
+def dominant_frac(r):
+    """Roofline fraction: useful model compute time / dominant term."""
+    if not r.get("ok"):
+        return None
+    per_chip_model_s = (r["model_flops"] / _chips(r)) / 197e12
+    dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    return per_chip_model_s / dom if dom else None
+
+
+def _chips(r):
+    n = 1
+    for s in r["mesh"].split("x"):
+        n *= int(s)
+    return n
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--optimized", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.mesh, args.optimized)
+
+    print(f"### Roofline — mesh {args.mesh}"
+          + (" (optimized)" if args.optimized else " (baseline)"))
+    print()
+    print("| arch | shape | compute_s | memory_s | coll_s | bottleneck | "
+          "HBM GiB/chip | fits | useful | roofline-frac | policy |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if r is None:
+                continue
+            if not r.get("ok"):
+                print(f"| {arch} | {shape} | FAIL | | | | | | | | "
+                      f"{r.get('error','')[:60]} |")
+                continue
+            mem = r.get("per_device_bytes", 0)
+            fits = "yes" if mem <= HBM_PER_CHIP else f"NO ({mem/2**30:.0f}G)"
+            frac = dominant_frac(r)
+            pol = r.get("policy", {})
+            pol_s = f"fsdp={'Y' if pol.get('fsdp') else 'n'},ga={pol.get('grad_accum',1)}"
+            print(
+                f"| {arch} | {shape} | {fmt_s(r['compute_s'])} | "
+                f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+                f"{r['bottleneck']} | {mem/2**30:.1f} | {fits} | "
+                f"{r['useful_ratio']:.2f} | "
+                f"{frac:.3f} | {pol_s} |"
+            )
+    print()
+
+
+if __name__ == "__main__":
+    main()

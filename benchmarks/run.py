@@ -1,0 +1,111 @@
+"""Benchmark driver — one benchmark per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick (CI) pass
+  PYTHONPATH=src python -m benchmarks.run --full     # recorded numbers
+  PYTHONPATH=src python -m benchmarks.run --only ltrr jct
+
+Each benchmark prints ``name,…`` CSV lines and writes
+``artifacts/bench/<name>.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from . import (
+    bench_jct,
+    bench_ltrr,
+    bench_mrar,
+    bench_reconfig_interval,
+    bench_reconfig_time,
+    bench_step,
+    bench_throughput,
+)
+
+BENCHES = {
+    "ltrr": (bench_ltrr, "Fig 2b/5: logical topology realization rate"),
+    "reconfig_time": (bench_reconfig_time, "Fig 2c/6: reconfiguration runtime"),
+    "mrar": (bench_mrar, "Fig 7: min-rewiring achievement rate"),
+    "jct": (bench_jct, "Fig 8a-d: multi-tenant JRT/JWT/JCT"),
+    "throughput": (bench_throughput, "Fig 2a/4a: testbed throughput"),
+    "reconfig_interval": (bench_reconfig_interval, "Table 1: reconfig frequency"),
+    "step": (bench_step, "ours: per-arch step sanity perf"),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+
+    names = args.only if args.only else list(BENCHES)
+    for name in names:
+        mod, desc = BENCHES[name]
+        t0 = time.perf_counter()
+        print(f"== {name}: {desc} " + "=" * max(1, 46 - len(name) - len(desc)))
+        payload = mod.run(quick=not args.full)
+        _summarize(name, payload)
+        print(f"-- {name} done in {time.perf_counter() - t0:.1f}s\n", flush=True)
+
+
+def _summarize(name: str, payload: dict) -> None:
+    if name == "ltrr":
+        for r in payload["rows"]:
+            print(
+                f"ltrr,{r['nodes']},{r['strategy']},avg={r['ltrr_avg']:.4f},"
+                f"min={r['ltrr_min']:.4f}"
+            )
+    elif name == "reconfig_time":
+        for r in payload["rows"]:
+            keys = [k for k in r if k != "nodes"]
+            print(
+                f"reconfig_time,{r['nodes']},"
+                + ",".join(f"{k}={r[k]:.4f}s" for k in keys)
+            )
+    elif name == "mrar":
+        for r in payload["rows"]:
+            print(
+                f"mrar,{r['nodes']},warm=1.0,"
+                f"mcf={r['MRAR_MCF(decomp-reuse)']:.4f},"
+                f"cold={r['MRAR_cold']:.4f},"
+                f"uniformILP*={r['MRAR_Uniform-ILP*']:.4f}"
+            )
+    elif name == "jct":
+        for scale, by in payload["results"].items():
+            for pair, s in by.items():
+                print(
+                    f"jct,{scale},{pair},avg_jct={s['avg_jct']:.1f},"
+                    f"avg_jwt={s['avg_jwt']:.1f},"
+                    f"slow_avg={s['jrt_slow_vs_best_avg']:+.4f},"
+                    f"slow_max={s['jrt_slow_vs_best_max']:+.3f},"
+                    f"affected={s['pct_affected']:.1f}%"
+                )
+    elif name == "throughput":
+        for r in payload["static"]["rows"]:
+            print(
+                f"throughput,static,{r['model']},"
+                f"gain={r['throughput_gain_pct']:.1f}%"
+            )
+        t = payload["trace_48h"]
+        print(
+            f"throughput,48h,avg_red={t['avg_jrt_reduction_vs_uniform_pct']:.1f}%,"
+            f"max_red={t['max_jrt_reduction_vs_uniform_pct']:.1f}%,"
+            f"leafspine_gap={t['gap_to_leafspine_pct']:+.2f}%"
+        )
+    elif name == "reconfig_interval":
+        for r in payload["rows"]:
+            print(
+                f"reconfig_interval,{r['objective']},T={r['interval_s']}s,"
+                f"ms_per_step={r['avg_ms_per_step']:.1f}"
+            )
+    elif name == "step":
+        for r in payload["rows"]:
+            print(
+                f"step,{r['arch']},train_ms={r['train_ms']:.1f},"
+                f"decode_ms={r['decode_ms']:.1f}"
+            )
+
+
+if __name__ == "__main__":
+    main()

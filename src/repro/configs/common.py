@@ -1,0 +1,73 @@
+"""Shared plumbing for per-architecture config modules.
+
+Each ``configs/<arch>.py`` declares:
+
+* ``ARCH_ID``   — the assignment's architecture id (``--arch`` value).
+* ``config()``  — the exact full-scale :class:`~repro.models.config.ModelConfig`
+  from the assignment table (public literature).
+* ``PLAN``      — a :class:`ParallelismPlan`: how the architecture's traffic
+  maps onto the paper's cluster (§3.1): TP/EP confined to the intra-pod
+  electrical fabric (mesh axis ``model``), DP/PP across pods over the OCS
+  core (mesh axes ``pod``/``data``).  The launcher turns this into the
+  logical-topology demand handed to the Cross Wiring control plane.
+
+The full configs are exercised only through the dry-run (ShapeDtypeStruct,
+no allocation); CPU smoke tests use ``models.registry.smoke_config``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelismPlan:
+    """How one architecture occupies the paper's cluster.
+
+    Attributes
+    ----------
+    tp:
+        tensor-parallel ways — always intra-pod (mesh axis ``model``), the
+        paper's §3.1 containment ("each Pod could host ... the TP traffic").
+    ep:
+        expert-parallel ways — intra-pod; shares the ``model`` axis with TP
+        (experts sharded over ``model``; the EP all-to-all stays on the
+        electrical fabric).
+    dp_cross_pod:
+        whether the DP gradient ring crosses pods — this is the traffic the
+        OCS core carries and the control plane provisions (ring demand over
+        the job's pods).
+    seq_shard_long:
+        long-context cells (batch=1) shard the sequence/state dim of the
+        cache over the DP axes instead of the batch dim.
+    ocs_links_per_ring_hop:
+        how many parallel spine-level links the launcher requests per
+        adjacent pod pair in the job's DP ring (per spine group).
+    notes:
+        one-line applicability note for DESIGN.md §Arch-applicability.
+    """
+
+    tp: int
+    ep: int = 1
+    dp_cross_pod: bool = True
+    seq_shard_long: bool = False
+    ocs_links_per_ring_hop: int = 4
+    notes: str = ""
+
+
+def job_demand(plan: ParallelismPlan, spec, pods: Tuple[int, ...]):
+    """Logical-topology demand this job asks from the control plane.
+
+    The cross-pod traffic of an LLM job under the paper's containment policy
+    is the DP gradient ring over the pods it occupies (PP would add the same
+    chain pattern); TP/EP never leave the pod, so they produce no OCS demand.
+    """
+    from ..core.logical import ring_demand
+
+    if not plan.dp_cross_pod or len(pods) < 2:
+        import numpy as np
+
+        return np.zeros(
+            (spec.num_ocs_groups, spec.num_pods, spec.num_pods), dtype=np.int64
+        )
+    return ring_demand(spec, list(pods), plan.ocs_links_per_ring_hop)

@@ -1,0 +1,53 @@
+"""Cross Wiring control plane: physical topology, decomposition theorems,
+OCS reconfiguration, logical-topology demands (the paper's contribution)."""
+from .topology import ClusterSpec, CrossWiring, OCSConfig, Uniform, demand_feasible
+from .decomposition import (
+    edge_color_bipartite,
+    halve_matrix,
+    integer_matrix_decompose,
+    symmetric_split,
+    symmetric_split_euler,
+    symmetric_split_mcf,
+)
+from .reconfig import (
+    ReconfigResult,
+    check_ilp_constraints,
+    config_cosine,
+    helios_matching,
+    ltrr,
+    mdmcf_cold,
+    mdmcf_reconfigure,
+    uniform_best_effort,
+    uniform_exact_small,
+    uniform_greedy,
+)
+from .logical import Job, Placement, jobs_to_demand, random_feasible_demand, ring_demand
+
+__all__ = [
+    "ClusterSpec",
+    "CrossWiring",
+    "OCSConfig",
+    "Uniform",
+    "demand_feasible",
+    "edge_color_bipartite",
+    "halve_matrix",
+    "integer_matrix_decompose",
+    "symmetric_split",
+    "symmetric_split_euler",
+    "symmetric_split_mcf",
+    "ReconfigResult",
+    "check_ilp_constraints",
+    "config_cosine",
+    "helios_matching",
+    "ltrr",
+    "mdmcf_cold",
+    "mdmcf_reconfigure",
+    "uniform_best_effort",
+    "uniform_exact_small",
+    "uniform_greedy",
+    "Job",
+    "Placement",
+    "jobs_to_demand",
+    "random_feasible_demand",
+    "ring_demand",
+]

@@ -1,0 +1,169 @@
+"""Logical topology demands: generation from jobs and random workloads.
+
+A *logical topology* is a tensor ``C[h, i, j]`` — the number of bidirectional
+links required between the h-th spines of pods i and j (paper §4.2).  It must
+be symmetric (L2-compatibility, eq. 11) and degree-feasible (eq. 12).
+
+Two sources of demand:
+
+* :func:`random_feasible_demand` — configuration-model random multigraphs,
+  used by the LTRR/MRAR/runtime benchmarks (paper §6.2's "100 distinct
+  logical topologies ... fully utilize all ports in each Pod").
+* :func:`jobs_to_demand` — the multi-tenant path: each training job's
+  parallelism plan (TP/EP confined in-pod, DP/PP across pods, §3.1 Remark)
+  becomes ring/chain traffic between the pods it occupies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .topology import ClusterSpec
+
+__all__ = [
+    "random_feasible_demand",
+    "Job",
+    "Placement",
+    "jobs_to_demand",
+    "ring_demand",
+]
+
+
+def random_feasible_demand(
+    spec: ClusterSpec,
+    rng: np.random.Generator,
+    fill: float = 1.0,
+    num_groups: Optional[int] = None,
+) -> np.ndarray:
+    """Random symmetric demand with row sums ≤ K_spine (== K_spine·fill).
+
+    Uses the configuration model: each pod contributes ``round(K_spine·fill)``
+    stubs per spine group; stubs are shuffled and paired.  Self-pairs are
+    repaired by swapping with another pair (bounded retries, then dropped),
+    keeping the diagonal zero.
+    """
+    P = spec.num_pods
+    H = num_groups if num_groups is not None else spec.num_ocs_groups
+    per = int(round(spec.k_spine * fill))
+    per = max(0, min(per, spec.k_spine))
+    C = np.zeros((H, P, P), dtype=np.int64)
+    for h in range(H):
+        stubs = np.repeat(np.arange(P), per)
+        if stubs.size % 2:
+            stubs = stubs[:-1]
+        rng.shuffle(stubs)
+        pairs = stubs.reshape(-1, 2)
+        for t in range(len(pairs)):
+            i, j = pairs[t]
+            retries = 0
+            while i == j and retries < 20:
+                s = rng.integers(0, len(pairs))
+                u, v = pairs[s]
+                # swap j with u
+                pairs[t, 1], pairs[s, 0] = u, j
+                i, j = pairs[t]
+                retries += 1
+        for i, j in pairs:
+            if i != j:
+                C[h, i, j] += 1
+                C[h, j, i] += 1
+    assert (C.sum(axis=2) <= spec.k_spine).all()
+    return C
+
+
+def ring_demand(
+    spec: ClusterSpec, pods: Sequence[int], links: int, num_groups: Optional[int] = None
+) -> np.ndarray:
+    """Demand of a bidirectional ring over ``pods`` with ``links`` parallel
+    links per adjacent pair per spine group (the DP all-reduce pattern)."""
+    P = spec.num_pods
+    H = num_groups if num_groups is not None else spec.num_ocs_groups
+    C = np.zeros((H, P, P), dtype=np.int64)
+    n = len(pods)
+    if n < 2:
+        return C
+    for h in range(H):
+        for t in range(n):
+            i, j = pods[t], pods[(t + 1) % n]
+            if i == j:
+                continue
+            C[h, i, j] += links
+            C[h, j, i] += links
+        if n == 2:
+            # the two ring directions collapse onto the same pair
+            pass
+    return C
+
+
+@dataclasses.dataclass
+class Job:
+    """A multi-tenant LLM training job (paper §6.3 workload model)."""
+
+    job_id: int
+    num_gpus: int
+    arrival: float
+    service_time: float  # JRT on the ideal `Best` fabric
+    model: str = "llama-7b"
+    tp: int = 8
+    ep: int = 1
+
+    @property
+    def dp_pp_ways(self) -> int:
+        return max(1, self.num_gpus // self.tp)
+
+
+@dataclasses.dataclass
+class Placement:
+    """GPUs allocated to a job: pod -> gpu count."""
+
+    job_id: int
+    pods: Dict[int, int]
+
+    def pod_list(self) -> List[int]:
+        return sorted(self.pods)
+
+
+def jobs_to_demand(
+    spec: ClusterSpec,
+    placements: Sequence[Placement],
+    links_per_job: Optional[int] = None,
+) -> np.ndarray:
+    """Aggregate logical-topology demand of concurrently running jobs.
+
+    Each job contributes a DP ring across its pods.  Per-pod spine-port
+    budget is allocated proportionally to the job's GPU share in that pod;
+    demands are clipped to keep the total feasible (eq. 12)."""
+    P, H, K = spec.num_pods, spec.num_ocs_groups, spec.k_spine
+    C = np.zeros((H, P, P), dtype=np.int64)
+    # remaining egress budget per (h, pod)
+    budget = np.full((H, P), K, dtype=np.int64)
+    for pl in placements:
+        pods = pl.pod_list()
+        if len(pods) < 2:
+            continue
+        # links per adjacent pair: share of pod capacity this job owns
+        frac = min(1.0, max(pl.pods[p] for p in pods) / spec.gpus_per_pod)
+        want = links_per_job if links_per_job is not None else max(
+            1, int(round(K * frac / 2))
+        )
+        ring = ring_demand(spec, pods, want)
+        # clip to remaining budget
+        for h in range(H):
+            deg = ring[h].sum(axis=1)
+            over = deg > budget[h]
+            while over.any():
+                p = int(np.nonzero(over)[0][0])
+                nz = np.nonzero(ring[h, p])[0]
+                if nz.size == 0:
+                    break
+                q = int(nz[np.argmax(ring[h, p, nz])])
+                ring[h, p, q] -= 1
+                ring[h, q, p] -= 1
+                deg = ring[h].sum(axis=1)
+                over = deg > budget[h]
+            budget[h] -= ring[h].sum(axis=1)
+        C += ring
+    assert (C.sum(axis=2) <= K).all()
+    return C

@@ -1,0 +1,357 @@
+"""OCS reconfiguration algorithms (paper §3.2 ILP model, §4.2, §6.2).
+
+Strategies implemented:
+
+* :func:`mdmcf_reconfigure` — the paper's polynomial-time algorithm for the
+  Cross Wiring physical topology ("ITV-MDMCF"): Thm 3.1 symmetric split,
+  then Thm 3.2's sub-permutation specialization (bipartite edge coloring)
+  with a warm start + Hungarian slot matching for the Min-Rewiring objective
+  (eq. 7).  Realizes **every** feasible logical topology exactly (Thm 4.1).
+
+* :func:`mdmcf_cold` — same without warm start / slot matching (the "MCF"
+  baseline of Minimal Rewiring [39], which ignores rewiring cost).
+
+* :func:`uniform_greedy` — greedy per-OCS maximal matching under the Uniform
+  physical topology (Qian Lv-style heuristic [21]).
+
+* :func:`uniform_best_effort` — greedy multigraph edge coloring with
+  ``K_spine`` colors + restarts; our scalable stand-in for the paper's
+  Lagrangian-relaxed "Uniform-ILP".
+
+* :func:`uniform_exact_small` — exhaustive optimum for tiny instances; used
+  to *certify* the paper's Fig. 1 counterexample (a 3-pod full mesh is
+  unrealizable under Uniform).
+
+* :func:`helios_matching` — Helios-style [8,9] repeated max-weight bipartite
+  matching on the remaining demand, under Cross Wiring wiring rules.
+
+All strategies emit an :class:`~repro.core.topology.OCSConfig` and are
+checked against the ILP constraints (1)–(6) by :func:`check_ilp_constraints`.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .decomposition import edge_color_bipartite, symmetric_split
+from .topology import ClusterSpec, CrossWiring, OCSConfig, Uniform, demand_feasible
+
+__all__ = [
+    "mdmcf_reconfigure",
+    "mdmcf_cold",
+    "uniform_greedy",
+    "uniform_best_effort",
+    "uniform_exact_small",
+    "helios_matching",
+    "check_ilp_constraints",
+    "ltrr",
+    "config_cosine",
+    "ReconfigResult",
+]
+
+
+class ReconfigResult:
+    """Output of a reconfiguration strategy."""
+
+    def __init__(self, config: OCSConfig, demand: np.ndarray, seconds: float):
+        self.config = config
+        self.demand = demand
+        self.seconds = seconds
+
+    @property
+    def ltrr(self) -> float:
+        return ltrr(self.config, self.demand)
+
+
+def _cos(u: np.ndarray, v: np.ndarray) -> float:
+    u = u.astype(np.float64).ravel()
+    v = v.astype(np.float64).ravel()
+    nu, nv = np.linalg.norm(u), np.linalg.norm(v)
+    if nu == 0 or nv == 0:
+        return 1.0 if nu == nv else 0.0
+    return float(min(1.0, max(-1.0, u @ v / (nu * nv))))
+
+
+def ltrr(config: OCSConfig, C: np.ndarray) -> float:
+    """Logical Topology Realization Rate (paper eq. 15):
+    cosine between realized bidirectional link counts and the demand."""
+    realized = config.realized_bidirectional()
+    return _cos(realized, C)
+
+
+def config_cosine(a: OCSConfig, b: OCSConfig) -> float:
+    """cos(x_l, x_{l-1}) — the MRAR building block (paper eq. 16)."""
+    return _cos(a.x, b.x)
+
+
+# --------------------------------------------------------------------------
+# ITV-MDMCF (Cross Wiring)
+# --------------------------------------------------------------------------
+
+def mdmcf_reconfigure(
+    spec: ClusterSpec,
+    C: np.ndarray,
+    old: Optional[OCSConfig] = None,
+    method: str = "euler",
+    slot_match: bool = True,
+) -> ReconfigResult:
+    """The paper's polynomial-time reconfiguration under Cross Wiring.
+
+    ``C``: demand of shape ``(H, P, P)`` satisfying (11)(12).  Realizes it
+    exactly.  ``method`` selects the Thm 3.1 implementation ("euler" fast
+    path or "mcf" oracle).  With ``old`` given, the edge coloring is
+    warm-started from the previous even-OCS sub-permutations and color
+    classes are then Hungarian-matched to OCS slots to minimize rewiring.
+    """
+    t0 = time.perf_counter()
+    C = np.asarray(C)
+    if not demand_feasible(C, spec):
+        raise ValueError("demand violates (11)(12); not a feasible logical topology")
+    H, P, _ = C.shape
+    K2 = spec.k_spine // 2
+    cfg = OCSConfig(spec, num_groups=H)
+    for h in range(H):
+        A = symmetric_split(C[h], method=method)
+        warm = old.x[h, 0::2] if old is not None else None
+        colors = edge_color_bipartite(A, K2, warm=warm)
+        order = np.arange(K2)
+        if old is not None and slot_match:
+            # overlap[t, s] = links kept if color class t lands on slot s
+            old_even = old.x[h, 0::2].astype(np.int32)
+            old_odd = old.x[h, 1::2].astype(np.int32)
+            cint = colors.astype(np.int32)
+            overlap = np.einsum("tij,sij->ts", cint, old_even) + np.einsum(
+                "tji,sij->ts", cint, old_odd
+            )
+            from scipy.optimize import linear_sum_assignment
+
+            rows, cols_idx = linear_sum_assignment(-overlap)
+            order = np.empty(K2, dtype=np.int64)
+            order[cols_idx] = rows  # slot s gets color class order[s]
+        for s in range(K2):
+            m = colors[order[s]]
+            cfg.x[h, 2 * s] = m
+            cfg.x[h, 2 * s + 1] = m.T
+    cfg.validate()
+    return ReconfigResult(cfg, C, time.perf_counter() - t0)
+
+
+def mdmcf_cold(
+    spec: ClusterSpec, C: np.ndarray, old: Optional[OCSConfig] = None, method: str = "euler"
+) -> ReconfigResult:
+    """MDMCF without rewiring awareness (the MinRewiring-MCF baseline)."""
+    return mdmcf_reconfigure(spec, C, old=None, method=method, slot_match=False)
+
+
+# --------------------------------------------------------------------------
+# Uniform baselines
+# --------------------------------------------------------------------------
+
+def uniform_greedy(
+    spec: ClusterSpec, C: np.ndarray, old: Optional[OCSConfig] = None
+) -> ReconfigResult:
+    """Greedy per-OCS maximal matching under Uniform wiring [21-style].
+
+    Each OCS hosts a symmetric matching; greedily saturate the heaviest
+    remaining demands first.  May leave demand unrealized (LTRR < 1)."""
+    t0 = time.perf_counter()
+    C = np.asarray(C)
+    H, P, _ = C.shape
+    cfg = OCSConfig(spec, num_groups=H)
+    for h in range(H):
+        rem = C[h].astype(np.int64).copy()
+        for k in range(spec.k_spine):
+            matched = np.zeros(P, dtype=bool)
+            iu, ju = np.nonzero(np.triu(rem, k=1))
+            weights = rem[iu, ju]
+            for idx in np.argsort(-weights):
+                i, j = int(iu[idx]), int(ju[idx])
+                if matched[i] or matched[j] or rem[i, j] <= 0:
+                    continue
+                matched[i] = matched[j] = True
+                rem[i, j] -= 1
+                rem[j, i] -= 1
+                cfg.x[h, k, i, j] = 1
+                cfg.x[h, k, j, i] = 1
+    cfg.validate()
+    return ReconfigResult(cfg, C, time.perf_counter() - t0)
+
+
+def uniform_best_effort(
+    spec: ClusterSpec,
+    C: np.ndarray,
+    old: Optional[OCSConfig] = None,
+    restarts: int = 4,
+    seed: int = 0,
+) -> ReconfigResult:
+    """Greedy multigraph edge coloring with K_spine colors (+ restarts).
+
+    Stand-in for the paper's Lagrangian-relaxed Uniform-ILP at scale: tries
+    to cover the demand multigraph by K_spine symmetric matchings; overflow
+    demand is dropped.  A proper K_spine-coloring exists iff the demand is
+    realizable under Uniform — odd-cycle demands at full degree are not
+    (chromatic index > Δ), which is the paper's Fig. 1 suboptimality.
+    """
+    t0 = time.perf_counter()
+    C = np.asarray(C)
+    H, P, _ = C.shape
+    rng = np.random.default_rng(seed)
+    best: Optional[OCSConfig] = None
+    best_score = -1.0
+    for r in range(restarts):
+        cfg = OCSConfig(spec, num_groups=H)
+        for h in range(H):
+            edges: List[Tuple[int, int]] = []
+            iu, ju = np.nonzero(np.triu(C[h], k=1))
+            for i, j in zip(iu.tolist(), ju.tolist()):
+                edges.extend([(i, j)] * int(C[h, i, j]))
+            order = rng.permutation(len(edges)) if r else np.arange(len(edges))
+            # free[v] = boolean over colors
+            free = np.ones((P, spec.k_spine), dtype=bool)
+            for e in order:
+                i, j = edges[int(e)]
+                both = np.nonzero(free[i] & free[j])[0]
+                if both.size == 0:
+                    continue  # dropped (unrealizable under Uniform greedily)
+                c = int(both[0])
+                free[i, c] = free[j, c] = False
+                cfg.x[h, c, i, j] = 1
+                cfg.x[h, c, j, i] = 1
+        score = ltrr(cfg, C)
+        if score > best_score:
+            best, best_score = cfg, score
+    assert best is not None
+    best.validate()
+    return ReconfigResult(best, C, time.perf_counter() - t0)
+
+
+def uniform_exact_small(spec: ClusterSpec, C: np.ndarray) -> ReconfigResult:
+    """Exhaustive optimum under Uniform (tiny instances only).
+
+    Maximizes realized links over all per-OCS symmetric matchings.  Used in
+    tests to certify unrealizability (e.g. paper Fig. 1's 3-pod full mesh).
+    """
+    t0 = time.perf_counter()
+    C = np.asarray(C)
+    H, P, _ = C.shape
+    if P > 6 or spec.k_spine > 6:
+        raise ValueError("exact solver is for tiny instances")
+
+    # all matchings on P vertices (as lists of pairs)
+    verts = list(range(P))
+    matchings: List[Tuple[Tuple[int, int], ...]] = []
+
+    def gen(avail: Tuple[int, ...], cur: Tuple[Tuple[int, int], ...]):
+        matchings.append(cur)
+        if len(avail) < 2:
+            return
+        a = avail[0]
+        rest = avail[1:]
+        for t, b in enumerate(rest):
+            gen(rest[:t] + rest[t + 1 :], cur + ((a, b),))
+        gen(rest, cur)  # leave `a` unmatched
+
+    gen(tuple(verts), ())
+    matchings = list(dict.fromkeys(matchings))
+
+    cfg = OCSConfig(spec, num_groups=H)
+    for h in range(H):
+        best_assign: Optional[List[Tuple[Tuple[int, int], ...]]] = None
+        best_links = -1
+
+        def dfs(k: int, rem: np.ndarray, links: int, chosen):
+            nonlocal best_assign, best_links
+            ub = links + int(np.triu(rem, 1).sum())
+            if ub <= best_links:
+                return
+            if k == spec.k_spine:
+                if links > best_links:
+                    best_links, best_assign = links, list(chosen)
+                return
+            for m in matchings:
+                if any(rem[i, j] <= 0 for i, j in m):
+                    continue
+                rem2 = rem.copy()
+                for i, j in m:
+                    rem2[i, j] -= 1
+                    rem2[j, i] -= 1
+                dfs(k + 1, rem2, links + len(m), chosen + [m])
+
+        dfs(0, C[h].astype(np.int64).copy(), 0, [])
+        assert best_assign is not None
+        for k, m in enumerate(best_assign):
+            for i, j in m:
+                cfg.x[h, k, i, j] = 1
+                cfg.x[h, k, j, i] = 1
+    cfg.validate()
+    return ReconfigResult(cfg, C, time.perf_counter() - t0)
+
+
+def helios_matching(
+    spec: ClusterSpec, C: np.ndarray, old: Optional[OCSConfig] = None
+) -> ReconfigResult:
+    """Helios-style repeated max-weight matching, on Cross Wiring.
+
+    For each even/odd OCS pair, extract a max-weight matching of the
+    remaining (symmetric) demand via scipy's linear_sum_assignment on the
+    demand matrix.  No optimality guarantee — included as the paper's
+    'Helios' comparison point.
+    """
+    from scipy.optimize import linear_sum_assignment
+
+    t0 = time.perf_counter()
+    C = np.asarray(C)
+    H, P, _ = C.shape
+    cfg = OCSConfig(spec, num_groups=H)
+    K2 = spec.k_spine // 2
+    for h in range(H):
+        rem = C[h].astype(np.int64).copy()
+        for t in range(K2):
+            w = rem.astype(np.float64)
+            # maximize total weight of a directed sub-permutation
+            rows, cols = linear_sum_assignment(-w)
+            m = np.zeros((P, P), dtype=np.int8)
+            for i, j in zip(rows, cols):
+                if rem[i, j] > 0:
+                    m[i, j] = 1
+            # keep symmetric consumption: even OCS carries m, odd carries mᵀ;
+            # each unit consumes one bidirectional demand link.
+            cfg.x[h, 2 * t] = m
+            cfg.x[h, 2 * t + 1] = m.T
+            rem -= np.minimum(rem, (m + m.T).astype(np.int64))
+    cfg.validate()
+    return ReconfigResult(cfg, C, time.perf_counter() - t0)
+
+
+# --------------------------------------------------------------------------
+# ILP constraint checker (paper §3.2, constraints (1)–(6))
+# --------------------------------------------------------------------------
+
+def check_ilp_constraints(
+    spec: ClusterSpec,
+    C: np.ndarray,
+    cfg: OCSConfig,
+    topology: str = "cross_wiring",
+    require_exact: bool = True,
+) -> None:
+    """Assert the ILP model's constraints hold for ``cfg``.
+
+    (1) Σ_k x_ijkh == C_ijh          (demand satisfaction; ``require_exact``)
+    (2)(3) per-spine port budgets    (≤ K_spine egress/ingress)
+    (4)(5) per-OCS sub-permutation
+    (6) L2-compatibility             (Cross Wiring pairing / Uniform symmetry)
+    """
+    x = cfg.x.astype(np.int64)
+    realized = x.sum(axis=1)  # (H, P, P) directed circuits
+    if require_exact:
+        assert (realized == C).all(), "constraint (1): demand not met exactly"
+    assert (x.sum(axis=(1, 3)) <= spec.k_spine).all(), "constraint (2)"
+    assert (x.sum(axis=(1, 2)) <= spec.k_spine).all(), "constraint (3)"
+    cfg.validate()  # (4)(5)
+    if topology == "cross_wiring":
+        assert CrossWiring(spec).l2_feasible(cfg), "constraint (6): pairing"
+    else:
+        assert Uniform(spec).l2_feasible(cfg), "constraint (6): symmetry"

@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the compute hot-spots (+ pure-jnp oracles).
+
+The paper's own contribution is the cluster control plane (no custom
+kernels), but the data plane it feeds has three hot-spots worth TPU-native
+kernels; each is a ``pl.pallas_call`` with explicit BlockSpec VMEM tiling,
+validated in interpret mode against ``ref.py``:
+
+* :mod:`.flash_attention` — tiled online-softmax attention (causal, GQA,
+  sliding window, softcap) for the 32k prefill cells.
+* :mod:`.rmsnorm` — fused single-pass RMSNorm (memory-bound).
+* :mod:`.rwkv6_wkv` — chunked WKV6 linear recurrence with the state in VMEM
+  (the long_500k SSM cells).
+
+``ops`` is the dispatching entry layer; ``ref`` holds the oracles.
+"""
+from . import ops, ref
+from .flash_attention import flash_attention
+from .rmsnorm import rmsnorm
+from .rwkv6_wkv import wkv6
+
+__all__ = ["ops", "ref", "flash_attention", "rmsnorm", "wkv6"]

@@ -1,0 +1,183 @@
+"""Pallas TPU flash attention (forward) — the compute hot-spot of every
+attention arch in the pool at the 32k-prefill cells.
+
+TPU-native adaptation (not a CUDA port): the kernel is organized around the
+MXU and VMEM —
+
+* 4-D grid ``(batch, q_head, q_block, kv_block)`` with the *kv* dimension
+  innermost and sequential; the online-softmax running state (m, l, acc)
+  lives in VMEM scratch that persists across kv iterations of one q block.
+* BlockSpecs tile Q/K/V into ``(block_q, head_dim)`` / ``(block_k, head_dim)``
+  VMEM windows; ``head_dim`` and block sizes are multiples of 128 so both
+  matmuls (q·kᵀ and p·v) land on the MXU with hardware-aligned shapes.
+* GQA is handled in the index map: q head ``h`` reads kv head ``h // group``
+  — no KV duplication in HBM.
+* Causal + sliding-window masking is computed from ``broadcasted_iota`` and
+  fully-masked tiles are skipped with ``pl.when`` (a real TPU grid would
+  prune them via the index map; the guard keeps the semantics identical).
+
+Supports: causal or full attention, sliding window, attention-logit softcap
+(grok/gemma2), GQA/MQA.  fp32 accumulation regardless of input dtype.
+
+Validated against ``ref.mha_reference`` in interpret mode (tests sweep
+shapes, dtypes, window sizes, softcaps, group counts).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128  # TPU vector lane width; m/l scratch padded to it
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,  # (1, 1, bq, d), (1, 1, bk, d) VMEM windows
+    o_ref,  # (1, 1, bq, d)
+    m_scr, l_scr, acc_scr,  # VMEM scratch: (bq, LANES), (bq, LANES), (bq, d)
+    *,
+    scale: float,
+    causal: bool,
+    window: Optional[int],
+    softcap: Optional[float],
+    kv_len: int,
+    block_q: int,
+    block_k: int,
+    num_kv_blocks: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # A tile is live unless causality/window rules it out entirely.
+    live = True
+    if causal:
+        live = k_start <= q_start + block_q - 1
+    if window is not None:
+        # newest q position in tile must still see the oldest k position
+        live = jnp.logical_and(live, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(live)
+    def _tile():
+        q = q_ref[0, 0].astype(jnp.float32) * scale
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        ok = k_pos < kv_len  # mask K padding
+        if causal:
+            ok = jnp.logical_and(ok, k_pos <= q_pos)
+        if window is not None:
+            ok = jnp.logical_and(ok, k_pos > q_pos - window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[:, :1]  # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)  # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)  # (bq, 1)
+        l_new = alpha * l_scr[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[:, :1]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "scale", "block_q", "block_k", "interpret",
+    ),
+)
+def flash_attention(
+    q: jnp.ndarray,  # (B, Hq, Sq, D)
+    k: jnp.ndarray,  # (B, Hkv, Sk, D)
+    v: jnp.ndarray,  # (B, Hkv, Sk, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Tiled online-softmax attention.  Returns (B, Hq, Sq, D)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    if Hq % Hkv:
+        raise ValueError("num q heads must be a multiple of num kv heads")
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    q_pad = (-Sq) % bq
+    k_pad = (-Sk) % bk
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, q_pad), (0, 0)))
+    if k_pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, k_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, k_pad), (0, 0)))
+    Sq_p, Sk_p = Sq + q_pad, Sk + k_pad
+    n_q, n_k = Sq_p // bq, Sk_p // bk
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=float(scale),
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        kv_len=Sk,
+        block_q=bq,
+        block_k=bk,
+        num_kv_blocks=n_k,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq_p, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    if q_pad:
+        out = out[:, :, :Sq]
+    return out

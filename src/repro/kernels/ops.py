@@ -1,0 +1,85 @@
+"""Public kernel entry points: backend dispatch + layout adaptation.
+
+Each op picks the Pallas TPU kernel on TPU backends and an exact XLA
+fallback elsewhere (CPU tests can also force the Pallas path in interpret
+mode via ``force_pallas=True``, which is how the correctness suite runs the
+kernels on this container).
+
+Layouts at this boundary follow the *model* convention (B, S, H, D); the
+kernels use (B, H, S, D) internally for contiguous VMEM tiles.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _flash
+from .rmsnorm import rmsnorm as _rmsnorm
+from .rwkv6_wkv import wkv6 as _wkv6
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(
+    q: jnp.ndarray,  # (B, Sq, Hq, D)
+    k: jnp.ndarray,  # (B, Sk, Hkv, D)
+    v: jnp.ndarray,  # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    force_pallas: bool = False,
+) -> jnp.ndarray:
+    """Flash attention with model-layout inputs; returns (B, Sq, Hq, D)."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    if _on_tpu() or force_pallas:
+        out = _flash(
+            qt, kt, vt,
+            causal=causal, window=window, softcap=softcap, scale=scale,
+            interpret=not _on_tpu(),
+        )
+    else:
+        out = ref.mha_reference(
+            qt, kt, vt, causal=causal, window=window, softcap=softcap, scale=scale
+        )
+    return jnp.swapaxes(out, 1, 2)
+
+
+def rmsnorm(
+    x: jnp.ndarray,
+    scale: jnp.ndarray,
+    *,
+    eps: float = 1e-6,
+    force_pallas: bool = False,
+) -> jnp.ndarray:
+    if _on_tpu() or force_pallas:
+        return _rmsnorm(x, scale, eps=eps, interpret=not _on_tpu())
+    return ref.rmsnorm_reference(x, scale, eps=eps)
+
+
+def wkv6(
+    r: jnp.ndarray,  # (B, S, H, K)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    log_w: jnp.ndarray,
+    u: jnp.ndarray,  # (H, K)
+    s0: jnp.ndarray,  # (B, H, K, V)
+    *,
+    chunk: int = 32,
+    force_pallas: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """WKV6 with model-layout inputs; returns (y (B,S,H,V), s_final)."""
+    rt, kt, vt, lwt = (jnp.swapaxes(a, 1, 2) for a in (r, k, v, log_w))
+    if _on_tpu() or force_pallas:
+        y, sf = _wkv6(rt, kt, vt, lwt, u, s0, chunk=chunk, interpret=not _on_tpu())
+    else:
+        y, sf = ref.wkv6_reference(rt, kt, vt, lwt, u, s0)
+    return jnp.swapaxes(y, 1, 2), sf

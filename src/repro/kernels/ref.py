@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness contracts.
+
+These are deliberately naive (materialize full score matrices, sequential
+scans) so the tests compare the tiled kernels against the most obviously
+correct implementation.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_reference(
+    q: jnp.ndarray,  # (B, Hq, Sq, D)
+    k: jnp.ndarray,  # (B, Hkv, Sk, D)
+    v: jnp.ndarray,  # (B, Hkv, Sk, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rmsnorm_reference(
+    x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6
+) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * r * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def wkv6_reference(
+    r: jnp.ndarray,  # (B, H, T, K)
+    k: jnp.ndarray,  # (B, H, T, K)
+    v: jnp.ndarray,  # (B, H, T, V)
+    log_w: jnp.ndarray,  # (B, H, T, K)  (log of per-channel decay, < 0)
+    u: jnp.ndarray,  # (H, K)  bonus for the current token
+    s0: jnp.ndarray,  # (B, H, K, V)  initial state
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential WKV6:  y_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ);
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ.  Exact step-by-step oracle."""
+    B, H, T, K = r.shape
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    wf = jnp.exp(log_w.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inputs):
+        rt, kt, vt, wt = inputs  # (B,H,K),(B,H,K),(B,H,V),(B,H,K)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,K,V)
+        att = S + uf[None, :, :, None] * kv
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, att)
+        S2 = wt[..., :, None] * S + kv
+        return S2, yt
+
+    seq = (
+        jnp.moveaxis(rf, 2, 0),
+        jnp.moveaxis(kf, 2, 0),
+        jnp.moveaxis(vf, 2, 0),
+        jnp.moveaxis(wf, 2, 0),
+    )
+    S_final, ys = jax.lax.scan(step, s0.astype(jnp.float32), seq)
+    y = jnp.moveaxis(ys, 0, 2)  # (B, H, T, V)
+    return y.astype(r.dtype), S_final

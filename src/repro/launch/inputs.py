@@ -1,0 +1,85 @@
+"""Shape cells and ShapeDtypeStruct input specs for the dry-run.
+
+Each assigned architecture is paired with the LM shape set:
+  train_4k     seq 4096,   global_batch 256   (train_step)
+  prefill_32k  seq 32768,  global_batch 32    (serve prefill)
+  decode_32k   seq 32768,  global_batch 128   (serve decode, 1 new token)
+  long_500k    seq 524288, global_batch 1     (long-context decode)
+
+Skip rules (per assignment + DESIGN.md §4): long_500k only for ssm/hybrid
+(rwkv6, jamba); everything else runs all of train/prefill/decode.
+Modality frontends are stubs: whisper gets frame embeddings, internvl2 gets
+patch embeddings, as precomputed inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import ARCHS, ModelConfig, get_api
+
+S = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq: int
+    batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+LONG_CONTEXT_ARCHS = ("rwkv6-1.6b", "jamba-1.5-large-398b")
+
+
+def cells_for(arch: str) -> Tuple[str, ...]:
+    base = ("train_4k", "prefill_32k", "decode_32k")
+    if arch in LONG_CONTEXT_ARCHS:
+        return base + ("long_500k",)
+    return base
+
+
+def dryrun_model_config(arch: str) -> ModelConfig:
+    """Full config tuned for lowering: activation checkpointing on the layer
+    stacks (production norm at 4k seq — recompute attention probs in bwd)."""
+    return ARCHS[arch].replace(remat_policy="full")
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the lowered step's *data* arguments.
+
+    train:   {"tokens","targets"(,"frames"/"patches")}
+    prefill: {"batch": ..., "cache": zero-shaped cache}
+    decode:  {"tokens": (B,1), "cache": cache at full seq}
+    """
+    B, L = cell.batch, cell.seq
+    api = get_api(cfg)
+    i32 = jnp.int32
+
+    def modality(d: Dict[str, Any], batch: int) -> Dict[str, Any]:
+        if cfg.family == "audio":
+            d["frames"] = S((batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        if cfg.family == "vlm":
+            d["patches"] = S((batch, cfg.vision_tokens, cfg.vision_dim), jnp.float32)
+        return d
+
+    if cell.kind == "train":
+        return modality({"tokens": S((B, L), i32), "targets": S((B, L), i32)}, B)
+    cache = jax.eval_shape(lambda: api.init_cache(B, L))
+    if cell.kind == "prefill":
+        return {
+            "batch": modality({"tokens": S((B, L), i32)}, B),
+            "cache": cache,
+        }
+    return {"tokens": S((B, 1), i32), "cache": cache}

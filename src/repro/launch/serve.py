@@ -1,0 +1,62 @@
+"""Batched serving driver: prefill + greedy KV-cache decode.
+
+Example (CPU container):
+  PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
+      --batch 4 --prompt-len 32 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from .. import configs
+from ..models import get_api, smoke_config
+from ..serve.engine import ServeEngine
+import jax
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(configs.ARCH_IDS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else configs.get_config(args.arch)
+    api = get_api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    inputs = {
+        "tokens": rng.integers(
+            0, cfg.vocab_size, size=(args.batch, args.prompt_len)
+        ).astype(np.int32)
+    }
+    if cfg.family == "audio":
+        inputs["frames"] = rng.normal(
+            size=(args.batch, cfg.encoder_seq, cfg.d_model)
+        ).astype(np.float32)
+    if cfg.family == "vlm":
+        inputs["patches"] = rng.normal(
+            size=(args.batch, cfg.vision_tokens, cfg.vision_dim)
+        ).astype(np.float32)
+
+    s_max = args.prompt_len + args.max_new + (
+        cfg.vision_tokens if cfg.family == "vlm" else 0
+    ) + 2
+    eng = ServeEngine(api, params, batch=args.batch, s_max=s_max)
+
+    t0 = time.perf_counter()
+    out = eng.generate(inputs, max_new_tokens=args.max_new)
+    dt = time.perf_counter() - t0
+    toks = args.batch * args.max_new
+    print(f"generated {out.shape} in {dt:.2f}s → {toks/dt:,.1f} tok/s")
+    print("first row:", out[0][:12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""End-to-end training driver: control plane (Cross Wiring) + data plane.
+
+The launcher mirrors the paper's running-stage workflow (§2.1):
+
+1. **Scheduler / control plane** — the job is placed onto pods of the
+   OCS cluster; its parallelism plan (TP/EP in-pod, DP ring across pods)
+   becomes a logical-topology demand; MDMCF computes the OCS configuration
+   (polynomial time) and reports LTRR + reconfiguration wall time.
+2. **Data plane** — the sharded train step runs under the JAX mesh whose
+   axes mirror the cluster (model=in-pod electrical, data/pod=across the
+   optical core), with checkpointing and auto-resume.
+
+On this CPU container use ``--smoke`` (reduced config, host mesh).  On a
+real TPU/Trainium fleet the same script runs the full config on the
+production mesh.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --smoke \
+      --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import configs
+from ..ckpt.manager import latest_step, restore_checkpoint, save_checkpoint
+from ..core.logical import ring_demand
+from ..core.reconfig import mdmcf_reconfigure
+from ..core.topology import ClusterSpec
+from ..models import get_api, smoke_config
+from ..train.data import DataConfig, SyntheticData
+from ..train.optimizer import OptConfig
+from ..train.trainstep import TrainHparams, make_train_state, make_train_step
+from .mesh import make_host_mesh, make_production_mesh
+
+
+def control_plane(arch: str, num_pods_used: int, cluster_pods: int = 8):
+    """Place the job, derive its OCS demand, run MDMCF.  Returns a report."""
+    spec = ClusterSpec(num_pods=cluster_pods, k_spine=16, k_leaf=16)
+    plan = configs.get_plan(arch)
+    pods = tuple(range(num_pods_used))
+    demand = configs.job_demand(plan, spec, pods)
+    t0 = time.perf_counter()
+    res = mdmcf_reconfigure(spec, demand) if demand.any() else None
+    dt = time.perf_counter() - t0
+    return {
+        "spec": spec,
+        "plan": plan,
+        "pods": pods,
+        "demand_links": int(demand.sum() // 2),
+        "ltrr": (res.ltrr if res is not None else 1.0),
+        "reconfig_s": dt,
+        "config": (res.config if res is not None else None),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(configs.ARCH_IDS))
+    ap.add_argument("--smoke", action="store_true", help="reduced config on host mesh")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--hierarchical", action="store_true")
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--pods", type=int, default=2, help="pods the job occupies")
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args()
+
+    # ---- control plane ----------------------------------------------------
+    cp = control_plane(args.arch, args.pods)
+    print(
+        f"[control-plane] arch={args.arch} pods={cp['pods']} "
+        f"plan(tp={cp['plan'].tp}, ep={cp['plan'].ep}) "
+        f"demand={cp['demand_links']} links  LTRR={cp['ltrr']:.3f} "
+        f"mdmcf={cp['reconfig_s']*1e3:.1f} ms"
+    )
+
+    # ---- data plane ---------------------------------------------------------
+    cfg = smoke_config(args.arch) if args.smoke else configs.get_config(args.arch)
+    api = get_api(cfg)
+    mesh = make_host_mesh() if args.smoke else make_production_mesh()
+    data = SyntheticData(
+        DataConfig(vocab_size=cfg.vocab_size, batch=args.batch, seq=args.seq),
+        model_cfg=cfg,
+    )
+    opt = OptConfig(lr=args.lr, warmup_steps=5, total_steps=max(args.steps, 10))
+    hp = TrainHparams(
+        grad_accum=args.grad_accum,
+        hierarchical=args.hierarchical,
+        compress=args.compress,
+        zero1=args.zero1,
+    )
+    b0 = data.batch_at(0)
+    sds = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in b0.items()}
+    step_fn, s_shard, _ = make_train_step(api, cfg, opt, mesh, hp, sds)
+
+    state = make_train_state(api, jax.random.PRNGKey(0))
+    start = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        start = latest_step(args.ckpt_dir) + 1
+        state = restore_checkpoint(
+            args.ckpt_dir,
+            jax.eval_shape(lambda: make_train_state(api, jax.random.PRNGKey(0))),
+        )
+        print(f"[resume] from step {start - 1}")
+
+    pending = None
+    t0 = time.perf_counter()
+    for i in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+        state, metrics = step_fn(state, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            toks = args.batch * args.seq * (i - start + 1)
+            dt = time.perf_counter() - t0
+            print(
+                f"step {i:5d}  loss {float(metrics['loss']):.4f}  "
+                f"lr {float(metrics['lr']):.2e}  {toks/dt:,.0f} tok/s"
+            )
+        if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+            if pending is not None:
+                pending.join()
+            pending = save_checkpoint(args.ckpt_dir, i, state, background=True)
+    if pending is not None:
+        pending.join()
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, args.steps - 1, state)
+        print(f"[ckpt] final at step {args.steps - 1}")
+
+
+if __name__ == "__main__":
+    main()

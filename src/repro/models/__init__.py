@@ -1,0 +1,3 @@
+"""Model substrate: 10 assigned architectures behind one functional API."""
+from .config import MLAConfig, MambaConfig, ModelConfig, MoEConfig, RWKVConfig
+from .registry import ARCHS, ModelAPI, get_api, make_smoke_batch, smoke_config

@@ -1,0 +1,200 @@
+"""Shared neural-net building blocks (pure JAX, functional params-as-pytrees).
+
+Conventions
+-----------
+* every module is `init_foo(key, cfg, ...) -> params` + `foo(params, x, ...)`
+* params are nested dicts of jnp arrays; layer stacks carry a leading
+  ``num_layers`` axis and are consumed by ``jax.lax.scan``
+* weights are stored in ``cfg.param_dtype`` and matmuls run in
+  ``cfg.compute_dtype`` with fp32 softmax/norm accumulations
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: Optional[float] = None):
+    s = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * s).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg) -> dict:
+    d = cfg.d_model
+    if cfg.norm_kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), cfg.pdtype)}
+    if cfg.norm_kind == "layernorm":
+        return {"scale": jnp.ones((d,), cfg.pdtype), "bias": jnp.zeros((d,), cfg.pdtype)}
+    if cfg.norm_kind == "nonparametric":  # olmo
+        return {}
+    raise ValueError(cfg.norm_kind)
+
+
+def norm(params: dict, x: jnp.ndarray, kind: str, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if kind == "layernorm":
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg, d_ff: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        return {
+            "wi": dense_init(k1, d, f, cfg.pdtype),
+            "wg": dense_init(k2, d, f, cfg.pdtype),
+            "wo": dense_init(k3, f, d, cfg.pdtype),
+        }
+    return {"wi": dense_init(k1, d, f, cfg.pdtype), "wo": dense_init(k3, f, d, cfg.pdtype)}
+
+
+def mlp(params: dict, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    h = x @ params["wi"].astype(x.dtype)
+    if kind == "swiglu":
+        g = x @ params["wg"].astype(x.dtype)
+        h = jax.nn.silu(g) * h
+    elif kind == "geglu":
+        g = x @ params["wg"].astype(x.dtype)
+        h = jax.nn.gelu(g, approximate=True) * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    return h @ params["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg) -> dict:
+    p = {"tok": embed_init(key, cfg.vocab_size, cfg.d_model, cfg.pdtype)}
+    if not cfg.tie_embeddings:
+        p["out"] = dense_init(
+            jax.random.fold_in(key, 1), cfg.d_model, cfg.vocab_size, cfg.pdtype
+        )
+    return p
+
+
+def embed(params: dict, tokens: jnp.ndarray, cfg) -> jnp.ndarray:
+    x = params["tok"].astype(cfg.cdtype)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.cdtype)
+    return x
+
+
+def unembed(params: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        logits = x @ params["tok"].astype(x.dtype).T
+    else:
+        logits = x @ params["out"].astype(x.dtype)
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray, mask=None) -> jnp.ndarray:
+    """Mean next-token NLL.  logits (..., V) fp32, targets int (...)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()
+
+
+def cross_entropy_fused(
+    h: jnp.ndarray,
+    embed_params: dict,
+    targets: jnp.ndarray,
+    cfg,
+    mask=None,
+    chunk: int = 512,
+) -> jnp.ndarray:
+    """Fused unembed + NLL, chunked over the sequence.
+
+    Never materializes the full (B, S, V) logits — at 1M-token global
+    batches with 100k+ vocabs that tensor alone is hundreds of GB/device.
+    Each chunk's logits are produced, reduced to (lse, gold) and discarded;
+    the backward pass recomputes them chunk-wise (jax.checkpoint).
+    """
+    B, S, d = h.shape
+    if S % chunk:
+        chunk = S if S < chunk else math.gcd(S, chunk)
+    n = S // chunk
+    hc = h.reshape(B, n, chunk, d).swapaxes(0, 1)  # (n, B, chunk, d)
+    tc = targets.reshape(B, n, chunk).swapaxes(0, 1)
+    mc = mask.reshape(B, n, chunk).swapaxes(0, 1) if mask is not None else None
+
+    @jax.checkpoint
+    def chunk_nll(hx, tx):
+        logits = unembed(embed_params, hx, cfg)  # (B, chunk, V) fp32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tx[..., None], axis=-1)[..., 0]
+        return logz - gold  # (B, chunk)
+
+    def body(carry, xs):
+        if mc is not None:
+            hx, tx, mx = xs
+            nll = chunk_nll(hx, tx) * mx
+            return (carry[0] + nll.sum(), carry[1] + mx.sum()), None
+        hx, tx = xs
+        nll = chunk_nll(hx, tx)
+        return (carry[0] + nll.sum(), carry[1] + nll.size), None
+
+    xs = (hc, tc, mc) if mc is not None else (hc, tc)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), xs)
+    return tot / jnp.maximum(cnt, 1)

@@ -1,0 +1,129 @@
+"""Mixture-of-Experts FFN with capacity-based gather/scatter dispatch.
+
+Expert-parallel by construction: the expert axis is sharded over the mesh's
+``model`` axis (in-pod, per the paper's §3.1 remark that pods are sized to
+contain EP traffic), so the gather/scatter turns into an in-pod all-to-all
+under GSPMD.
+
+Dispatch is index-based (gather + scatter-add), NOT the O(T·E·C) one-hot
+einsum — at DeepSeek-V3 scale the einsum dispatch tensor alone would be
+hundreds of GB.  Router runs in fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def init_moe(key, cfg) -> dict:
+    e = cfg.moe
+    d = cfg.d_model
+    f = e.d_expert
+    ks = jax.random.split(key, 5)
+    glu = cfg.mlp_kind in ("swiglu", "geglu")
+    scale = 1.0 / math.sqrt(d)
+
+    def stack(k, a, b, s):
+        return (jax.random.normal(k, (e.num_experts, a, b)) * s).astype(cfg.pdtype)
+
+    p = {
+        "router": dense_init(ks[0], d, e.num_experts, jnp.float32),
+        "wi": stack(ks[1], d, f, scale),
+        "wo": stack(ks[3], f, d, 1.0 / math.sqrt(f)),
+    }
+    if glu:
+        p["wg"] = stack(ks[2], d, f, scale)
+    if e.num_shared:
+        sf = f * e.num_shared
+        p["shared"] = {
+            "wi": dense_init(ks[4], d, sf, cfg.pdtype),
+            "wo": dense_init(jax.random.fold_in(ks[4], 1), sf, d, cfg.pdtype),
+        }
+        if glu:
+            p["shared"]["wg"] = dense_init(jax.random.fold_in(ks[4], 2), d, sf, cfg.pdtype)
+    return p
+
+
+def _expert_ffn(p: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """x: (E, C, d) -> (E, C, d), batched over experts."""
+    h = jnp.einsum("ecd,edf->ecf", x, p["wi"].astype(x.dtype))
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        g = jnp.einsum("ecd,edf->ecf", x, p["wg"].astype(x.dtype))
+        act = jax.nn.silu if cfg.mlp_kind == "swiglu" else (
+            lambda t: jax.nn.gelu(t, approximate=True)
+        )
+        h = act(g) * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(x.dtype))
+
+
+def moe_mlp(
+    params: dict, x: jnp.ndarray, cfg, capacity: Optional[int] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y, aux_loss).  x: (B, S, d)."""
+    e = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32)) @ params["router"]
+    if e.router == "sigmoid":  # deepseek-v3 style scores
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(scores, e.top_k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance auxiliary loss (Switch-style) -----------------------
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = probs.mean(axis=0)  # (E,)
+    onehot_top1 = jax.nn.one_hot(expert_idx[:, 0], e.num_experts, dtype=jnp.float32)
+    ce = onehot_top1.mean(axis=0)
+    aux = e.num_experts * jnp.sum(me * ce)
+
+    # ---- capacity-based slotting ------------------------------------------
+    C = capacity if capacity is not None else int(
+        math.ceil(T * e.top_k / e.num_experts * e.capacity_factor)
+    )
+    C = max(C, 1)
+    # membership (T, k) -> position of token t among tokens routed to expert
+    flat_e = expert_idx.reshape(-1)  # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, e.num_experts, dtype=jnp.int32)  # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1  # position per (slot, expert)
+    pos_te = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]  # (T*k,)
+    keep = pos_te < C
+    slot = jnp.where(keep, pos_te, C)  # overflow -> dropped (mode="drop")
+
+    tok_of = jnp.arange(T).repeat(e.top_k)  # (T*k,)
+    # dispatch index table (E, C): token feeding each expert slot (T = empty)
+    dispatch = jnp.full((e.num_experts, C), T, dtype=jnp.int32)
+    dispatch = dispatch.at[flat_e, slot].set(tok_of, mode="drop")
+    gates_ec = jnp.zeros((e.num_experts, C), dtype=jnp.float32)
+    gates_ec = gates_ec.at[flat_e, slot].set(gate_vals.reshape(-1), mode="drop")
+
+    xpad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    xin = xpad[dispatch]  # (E, C, d) gather  -> all-to-all under EP sharding
+    out = _expert_ffn(params, xin, cfg)  # (E, C, d)
+    out = out * gates_ec[..., None].astype(out.dtype)
+
+    y = jnp.zeros((T + 1, d), out.dtype)
+    y = y.at[dispatch.reshape(-1)].add(out.reshape(-1, d))
+    y = y[:T]
+
+    if e.num_shared:
+        sp = params["shared"]
+        h = xt @ sp["wi"].astype(xt.dtype)
+        if "wg" in sp:
+            g = xt @ sp["wg"].astype(xt.dtype)
+            h = jax.nn.silu(g) * h
+        else:
+            h = jax.nn.gelu(h, approximate=True)
+        y = y + h @ sp["wo"].astype(xt.dtype)
+
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,204 @@
+"""Architecture registry: the 10 assigned architectures as ModelConfigs,
+reduced smoke variants, and a uniform ModelAPI (init/loss/prefill/decode)
+so the trainer, server, dry-run, and tests are architecture-agnostic.
+
+Sources for the full configs are the assignment table (public literature);
+structural details (MLA dims, mamba dims, first-dense layers) follow the
+cited papers/HF configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import MLAConfig, MambaConfig, ModelConfig, MoEConfig, RWKVConfig
+from . import transformer, vlm, whisper
+
+
+# Canonical per-arch definitions live in repro/configs/<arch>.py; this dict
+# is the runtime registry assembled from them (``--arch`` lookups).
+from .. import configs as _configs
+
+ARCHS: Dict[str, ModelConfig] = {
+    arch_id: _configs.get_config(arch_id) for arch_id in _configs.ARCH_IDS
+}
+
+
+def smoke_config(name: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    full = ARCHS[name]
+    kw: Dict[str, Any] = dict(
+        num_layers=4,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=512,
+        param_dtype="float32",
+        compute_dtype="float32",
+    )
+    if full.attn_kind == "mla":
+        kw["mla"] = MLAConfig(
+            q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+            qk_rope_head_dim=8, v_head_dim=16,
+        )
+    if full.num_kv_heads == 1:
+        kw["num_kv_heads"] = 1
+    if full.moe is not None:
+        # capacity_factor = E/top_k makes capacity == T (dropless): smoke
+        # tests check prefill/decode consistency, and capacity drops are
+        # batch-global (non-causal) by design.
+        kw["moe"] = dataclasses.replace(
+            full.moe,
+            num_experts=4,
+            top_k=2,
+            d_expert=64,
+            first_dense=min(full.moe.first_dense, 1),
+            capacity_factor=2.0,
+        )
+        if full.moe.first_dense:
+            kw["num_layers"] = 5  # 1 dense + 4 moe
+    if full.block_pattern is not None:
+        kw["num_layers"] = len(full.block_pattern)
+        if full.moe is not None:
+            kw["num_layers"] = max(
+                kw["num_layers"],
+                len(full.block_pattern),
+            )
+    if full.mamba is not None:
+        kw["mamba"] = MambaConfig(d_state=4, d_conv=4, expand=2)
+    if full.rwkv is not None:
+        kw["rwkv"] = RWKVConfig(head_dim=16, decay_lora=8, tokenshift_lora=8)
+        kw["num_heads"] = 4
+        kw["num_kv_heads"] = 4
+    if full.local_global:
+        kw["num_layers"] = 4
+        kw["sliding_window"] = 8
+    if full.is_encoder_decoder:
+        kw["num_layers"] = 2
+        return full.replace(
+            encoder_layers=2, encoder_seq=16, max_target_positions=64, **kw
+        )
+    if full.family == "vlm":
+        kw["vision_tokens"] = 8
+        kw["vision_dim"] = 32
+    return full.replace(**kw)
+
+
+# ---------------------------------------------------------------------------
+# uniform model API
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable  # (key) -> params
+    loss: Callable  # (params, batch) -> scalar
+    prefill: Callable  # (params, batch, cache) -> (logits, cache)
+    decode: Callable  # (params, tokens, cache) -> (logits, cache)
+    init_cache: Callable  # (batch, s_max) -> cache pytree
+
+
+def get_api(cfg: ModelConfig) -> ModelAPI:
+    fam = cfg.family
+    if fam == "audio":
+        def init(key):
+            return whisper.init_whisper(
+                key, cfg, max_target_positions=cfg.max_target_positions
+            )
+
+        def loss(params, batch):
+            return whisper.whisper_loss(params, batch, cfg)
+
+        def prefill(params, batch, cache, last_only=False):
+            enc = whisper.encode(params, batch["frames"], cfg)
+            logits, nc = whisper.decode(
+                params, batch["tokens"], enc, cfg, cache=cache, mode="prefill",
+                last_only=last_only,
+            )
+            nc["enc"] = enc
+            return logits, nc
+
+        def decode_step(params, tokens, cache):
+            logits, nc = whisper.decode(
+                params, tokens, cache["enc"], cfg, cache=cache, mode="decode"
+            )
+            nc["enc"] = cache["enc"]
+            return logits, nc
+
+        def make_cache(batch, s_max):
+            c = whisper.init_whisper_cache(cfg, batch, s_max)
+            c["enc"] = jnp.zeros((batch, cfg.encoder_seq, cfg.d_model), cfg.cdtype)
+            return c
+
+        return ModelAPI(cfg, init, loss, prefill, decode_step, make_cache)
+
+    if fam == "vlm":
+        def init(key):
+            return vlm.init_vlm(key, cfg)
+
+        def loss(params, batch):
+            return vlm.vlm_loss(params, batch, cfg)
+
+        def prefill(params, batch, cache, last_only=False):
+            logits, _, nc = vlm.apply_vlm(
+                params, batch["tokens"], batch["patches"], cfg, cache=cache,
+                mode="prefill", last_only=last_only,
+            )
+            return logits, nc
+
+        def decode_step(params, tokens, cache):
+            logits, _, nc = vlm.apply_vlm(params, tokens, None, cfg, cache=cache, mode="decode")
+            return logits, nc
+
+        def make_cache(batch, s_max):
+            # the vision prefix occupies the first vision_tokens cache slots
+            return transformer.init_cache(cfg, batch, s_max + cfg.vision_tokens)
+
+        return ModelAPI(cfg, init, loss, prefill, decode_step, make_cache)
+
+    # decoder-only LM families: dense | moe | hybrid | ssm
+    def init(key):
+        return transformer.init_lm(key, cfg)
+
+    def loss(params, batch):
+        return transformer.lm_loss(params, batch, cfg)
+
+    def prefill(params, batch, cache, last_only=False):
+        logits, _, nc = transformer.apply_lm(
+            params, batch["tokens"], cfg, cache=cache, mode="prefill",
+            last_only=last_only,
+        )
+        return logits, nc
+
+    def decode_step(params, tokens, cache):
+        logits, _, nc = transformer.apply_lm(
+            params, tokens, cfg, cache=cache, mode="decode"
+        )
+        return logits, nc
+
+    def make_cache(batch, s_max):
+        return transformer.init_cache(cfg, batch, s_max)
+
+    return ModelAPI(cfg, init, loss, prefill, decode_step, make_cache)
+
+
+def make_smoke_batch(cfg: ModelConfig, rng=None, batch: int = 2, seq: int = 16):
+    rng = rng or np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, size=(batch, seq)).astype(np.int32)
+    tgts = np.roll(toks, -1, axis=1).astype(np.int32)
+    b = {"tokens": jnp.asarray(toks), "targets": jnp.asarray(tgts)}
+    if cfg.family == "audio":
+        b["frames"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+        )
+    if cfg.family == "vlm":
+        b["patches"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.vision_tokens, cfg.vision_dim)).astype(np.float32)
+        )
+    return b

@@ -1,0 +1,162 @@
+"""RWKV-6 "Finch" block: attention-free time mixing with data-dependent
+per-channel decay (arXiv:2404.05892), plus squared-ReLU channel mixing.
+
+The WKV recurrence (state S_t ∈ ℝ^{K×V} per head):
+
+    y_t = r_t · (S_{t-1} + diag(u) k_t vᵀ_t)
+    S_t = diag(w_t) S_{t-1} + k_t vᵀ_t
+
+is computed with the shared :func:`~repro.models.ssm.diag_ssm_scan` engine
+(exact chunked scan — numerically stable; no decay-ratio divisions).  The
+Pallas kernel in ``repro.kernels.rwkv6_wkv`` implements the same contract for
+TPU with the state held in VMEM.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+from .ssm import chunked_scan, scan_chunk
+
+
+def _dims(cfg):
+    rc = cfg.rwkv
+    H = cfg.d_model // rc.head_dim
+    return rc, H, rc.head_dim
+
+
+def init_rwkv_time(key, cfg) -> dict:
+    rc, H, K = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 12)
+    p = {
+        "mu": (jax.random.uniform(ks[0], (5, d)) * 0.5 + 0.25).astype(cfg.pdtype),
+        # shared token-shift lora: x -> 5 per-channel lerp adjustments
+        "ts_a": dense_init(ks[1], d, 5 * rc.tokenshift_lora, cfg.pdtype),
+        "ts_b": dense_init(ks[2], rc.tokenshift_lora, 5 * d, cfg.pdtype, scale=0.01),
+        "wr": dense_init(ks[3], d, d, cfg.pdtype),
+        "wk": dense_init(ks[4], d, d, cfg.pdtype),
+        "wv": dense_init(ks[5], d, d, cfg.pdtype),
+        "wg": dense_init(ks[6], d, d, cfg.pdtype),
+        "wo": dense_init(ks[7], d, d, cfg.pdtype),
+        "w0": (jax.random.normal(ks[8], (d,)) * 0.5 - 0.5).astype(jnp.float32),
+        "w_a": dense_init(ks[9], d, rc.decay_lora, cfg.pdtype),
+        "w_b": dense_init(ks[10], rc.decay_lora, d, cfg.pdtype, scale=0.01),
+        "u": (jax.random.normal(ks[11], (d,)) * 0.1).astype(jnp.float32),
+        "ln_scale": jnp.ones((d,), cfg.pdtype),  # per-head group norm scale
+    }
+    return p
+
+
+def rwkv_time_mix(
+    params: dict,
+    x: jnp.ndarray,
+    cfg,
+    state: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    chunk: int = 64,
+):
+    """x (B,S,d) -> (y, new_state).  state = (x_prev (B,1,d), wkv (B,H,K,V))."""
+    rc, H, K = _dims(cfg)
+    B, S, d = x.shape
+    if state is not None:
+        x_prev_in, wkv0 = state
+        xs = jnp.concatenate([x_prev_in.astype(x.dtype), x[:, :-1]], axis=1)
+    else:
+        xs = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        wkv0 = jnp.zeros((B, H, K, K), jnp.float32)
+
+    # Finch ddlerp token shift: per-channel static mu + low-rank dynamic term
+    delta = xs - x
+    base = x + delta * params["mu"][0][None, None]
+    dyn = jnp.tanh(base @ params["ts_a"].astype(x.dtype)).reshape(
+        B, S, 5, rc.tokenshift_lora
+    )
+    dyn = jnp.einsum(
+        "bsfr,rfd->bsfd",
+        dyn,
+        params["ts_b"].astype(x.dtype).reshape(rc.tokenshift_lora, 5, d),
+    )
+    mixed = x[:, :, None] + delta[:, :, None] * (
+        params["mu"].astype(x.dtype)[None, None] + dyn
+    )  # (B,S,5,d)
+    xr, xk, xv, xw, xg = [mixed[:, :, i] for i in range(5)]
+
+    r = (xr @ params["wr"].astype(x.dtype)).reshape(B, S, H, K)
+    k = (xk @ params["wk"].astype(x.dtype)).reshape(B, S, H, K)
+    v = (xv @ params["wv"].astype(x.dtype)).reshape(B, S, H, K)
+    g = jax.nn.silu(xg @ params["wg"].astype(x.dtype))
+    wlog = params["w0"][None, None] + jnp.tanh(
+        xw @ params["w_a"].astype(x.dtype)
+    ).astype(jnp.float32) @ params["w_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wlog)).reshape(B, S, H, K)  # (0,1) decay
+    u = params["u"].astype(jnp.float32).reshape(H, K)
+
+    def chunk_fn(h, ac):
+        r_c, k_c, v_c, w_c = ac  # (B,Q,H,K) each
+        kv = k_c.astype(jnp.float32)[..., :, None] * v_c.astype(jnp.float32)[
+            ..., None, :
+        ]  # (B,Q,H,K,V)
+        decay = jnp.broadcast_to(w_c.astype(jnp.float32)[..., :, None], kv.shape)
+        states, h2 = scan_chunk(decay, kv, h)
+        # y_t = r_t · (S_{t-1} + diag(u) k_t vᵀ_t); S_{t-1} = shifted states
+        prev = jnp.concatenate([h[:, None], states[:, :-1]], axis=1)
+        att = prev + u[None, None, :, :, None] * kv
+        y_c = jnp.einsum("bqhk,bqhkv->bqhv", r_c.astype(jnp.float32), att)
+        return h2, y_c
+
+    y, final = chunked_scan((r, k, v, w), wkv0, chunk_fn, chunk)
+
+    # per-head group norm
+    mu_ = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mu_) * jax.lax.rsqrt(var + 64e-5)
+    y = y.reshape(B, S, d).astype(x.dtype) * params["ln_scale"].astype(x.dtype)
+    y = y * g
+    out = y @ params["wo"].astype(x.dtype)
+    new_state = (x[:, -1:, :], final)
+    return out, new_state
+
+
+def init_rwkv_channel(key, cfg) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": (jax.random.uniform(ks[0], (d,)) * 0.5 + 0.25).astype(cfg.pdtype),
+        "mu_r": (jax.random.uniform(ks[0], (d,)) * 0.5 + 0.25).astype(cfg.pdtype),
+        "wk": dense_init(ks[1], d, cfg.d_ff, cfg.pdtype),
+        "wv": dense_init(ks[2], cfg.d_ff, d, cfg.pdtype),
+        "wr": dense_init(jax.random.fold_in(ks[2], 1), d, d, cfg.pdtype),
+    }
+
+
+def rwkv_channel_mix(
+    params: dict,
+    x: jnp.ndarray,
+    cfg,
+    state: Optional[jnp.ndarray] = None,
+):
+    """Squared-relu channel mix with token shift.  state: x_prev (B,1,d)."""
+    B, S, d = x.shape
+    if state is not None:
+        xs = jnp.concatenate([state.astype(x.dtype), x[:, :-1]], axis=1)
+    else:
+        xs = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    delta = xs - x
+    xk = x + delta * params["mu_k"][None, None].astype(x.dtype)
+    xr = x + delta * params["mu_r"][None, None].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ params["wk"].astype(x.dtype)))
+    r = jax.nn.sigmoid(xr @ params["wr"].astype(x.dtype))
+    return r * (k @ params["wv"].astype(x.dtype)), x[:, -1:, :]
+
+
+def rwkv_state_shapes(cfg, batch: int):
+    rc, H, K = _dims(cfg)
+    return (
+        (batch, 1, cfg.d_model),  # time-mix x_prev
+        (batch, H, K, K),  # wkv state
+        (batch, 1, cfg.d_model),  # channel-mix x_prev
+    )

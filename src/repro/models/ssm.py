@@ -1,0 +1,160 @@
+"""Selective state-space (Mamba-1 / S6) block, used by jamba's hybrid stack.
+
+The recurrence  h_t = a_t ⊙ h_{t-1} + b_t  (diagonal, data-dependent) is
+shared with RWKV6, so this module provides the common engine:
+
+* :func:`scan_chunk` — exact parallel scan *within* a chunk
+  (``associative_scan``; no decay-ratio divisions → numerically stable).
+* :func:`chunked_scan` — sequential ``lax.scan`` *over* chunks, with a
+  caller-supplied ``chunk_fn`` that expands per-chunk decays/inputs and reads
+  out per-chunk outputs, so the O(B·S·state) full-state tensor is never
+  materialized — peak extra memory is O(B·chunk·state).
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def scan_chunk(decay: jnp.ndarray, inp: jnp.ndarray, h0: jnp.ndarray):
+    """h_t = decay_t * h_{t-1} + inp_t within a chunk (axis 1).
+
+    decay/inp: (B, Q, ...); h0: (B, ...).  Returns (states (B,Q,...), h_Q).
+    """
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    pa, pb = jax.lax.associative_scan(combine, (decay, inp), axis=1)
+    states = pa * h0[:, None] + pb
+    return states, states[:, -1]
+
+
+def chunked_scan(
+    aux,  # pytree of (B, S, ...) arrays, chunked along axis 1
+    h0: jnp.ndarray,
+    chunk_fn: Callable,  # (h, aux_chunk) -> (h_next, y_chunk (B, Q, ...))
+    chunk: int,
+):
+    """Run ``chunk_fn`` over S//chunk chunks sequentially, threading state."""
+    S = jax.tree_util.tree_leaves(aux)[0].shape[1]
+    if S % chunk:
+        chunk = S if S < chunk else math.gcd(S, chunk)
+    n_chunks = S // chunk
+
+    def reshape(x):
+        return jnp.moveaxis(
+            x.reshape((x.shape[0], n_chunks, chunk) + x.shape[2:]), 1, 0
+        )
+
+    aux_c = jax.tree_util.tree_map(reshape, aux)
+
+    def step(h, ac):
+        h2, y = chunk_fn(h, ac)
+        return h2, y
+
+    final, ys = jax.lax.scan(step, h0, aux_c)
+    ys = jnp.moveaxis(ys, 0, 1)
+    ys = ys.reshape((ys.shape[0], S) + ys.shape[3:])
+    return ys, final
+
+
+# ---------------------------------------------------------------------------
+# Mamba block
+# ---------------------------------------------------------------------------
+
+def _mamba_dims(cfg):
+    mc = cfg.mamba
+    d_in = mc.expand * cfg.d_model
+    dt_rank = mc.dt_rank or -(-cfg.d_model // 16)
+    return mc, d_in, dt_rank
+
+
+def init_mamba(key, cfg) -> dict:
+    mc, d_in, dt_rank = _mamba_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    A = jnp.tile(jnp.arange(1, mc.d_state + 1, dtype=jnp.float32), (d_in, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in, cfg.pdtype),
+        "conv_w": (
+            jax.random.normal(ks[1], (mc.d_conv, d_in)) / math.sqrt(mc.d_conv)
+        ).astype(cfg.pdtype),
+        "conv_b": jnp.zeros((d_in,), cfg.pdtype),
+        "x_proj": dense_init(ks[2], d_in, dt_rank + 2 * mc.d_state, cfg.pdtype),
+        "dt_proj": dense_init(ks[3], dt_rank, d_in, cfg.pdtype),
+        "dt_bias": jnp.zeros((d_in,), cfg.pdtype),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[5], d_in, d, cfg.pdtype),
+    }
+
+
+def mamba_block(
+    params: dict,
+    x: jnp.ndarray,
+    cfg,
+    state: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    chunk: int = 64,
+):
+    """x (B,S,d) -> (y, new_state).  state = (conv_buf (B,d_conv-1,d_in),
+    ssm_state (B,d_in,N)); pass for decode (S may be 1), None for training."""
+    mc, d_in, dt_rank = _mamba_dims(cfg)
+    B, S, d = x.shape
+    xz = x @ params["in_proj"].astype(x.dtype)
+    xpart, z = jnp.split(xz, 2, axis=-1)  # (B,S,d_in) each
+
+    # causal depthwise conv along S
+    if state is not None:
+        conv_buf, ssm_state = state
+        xcat = jnp.concatenate([conv_buf.astype(x.dtype), xpart], axis=1)
+    else:
+        ssm_state = jnp.zeros((B, d_in, mc.d_state), jnp.float32)
+        xcat = jnp.pad(xpart, ((0, 0), (mc.d_conv - 1, 0), (0, 0)))
+    w = params["conv_w"].astype(x.dtype)  # (d_conv, d_in)
+    xc = sum(
+        xcat[:, i : i + S, :] * w[i][None, None, :] for i in range(mc.d_conv)
+    ) + params["conv_b"].astype(x.dtype)
+    new_conv_buf = xcat[:, -(mc.d_conv - 1) :, :] if mc.d_conv > 1 else xcat[:, :0, :]
+    xc = jax.nn.silu(xc)
+
+    dbc = xc @ params["x_proj"].astype(x.dtype)
+    dt = dbc[..., :dt_rank] @ params["dt_proj"].astype(x.dtype)
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # (B,S,d_in)
+    Bm = dbc[..., dt_rank : dt_rank + mc.d_state].astype(jnp.float32)
+    Cm = dbc[..., dt_rank + mc.d_state :].astype(jnp.float32)
+
+    A = -jnp.exp(params["A_log"])  # (d_in, N)
+    dtx = dt * xc.astype(jnp.float32)  # (B,S,d_in)
+
+    def chunk_fn(h, ac):
+        dt_c, dtx_c, b_c, c_c = ac  # (B,Q,d_in),(B,Q,d_in),(B,Q,N),(B,Q,N)
+        decay = jnp.exp(dt_c[..., None] * A[None, None])  # (B,Q,d_in,N)
+        binp = dtx_c[..., None] * b_c[:, :, None, :]
+        states, h2 = scan_chunk(decay, binp, h)
+        y_c = jnp.einsum("bqdn,bqn->bqd", states, c_c)
+        return h2, y_c
+
+    y, final = chunked_scan((dt, dtx, Bm, Cm), ssm_state, chunk_fn, chunk)
+    y = y + params["D"][None, None] * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(x.dtype)
+    return out, (new_conv_buf, final)
+
+
+def mamba_state_shape(cfg, batch: int):
+    mc, d_in, _ = _mamba_dims(cfg)
+    return (
+        (batch, mc.d_conv - 1, d_in),
+        (batch, d_in, mc.d_state),
+    )

@@ -1,0 +1,71 @@
+"""InternVL2-style VLM (ViT frontend STUBBED per the assignment).
+
+Inputs are precomputed patch embeddings (B, N_patch, vision_dim) — what
+InternViT would emit after pixel-shuffle.  The mlp1 projector and the
+InternLM2/Qwen2-family LM backbone are implemented fully; patch embeddings
+are projected and prepended to the token embeddings.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import cross_entropy, cross_entropy_fused, dense_init, embed
+from .transformer import apply_lm, init_lm
+
+
+def init_vlm(key, cfg) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    vd = cfg.vision_dim
+    return {
+        "proj": {
+            "w1": dense_init(k1, vd, cfg.d_model, cfg.pdtype),
+            "w2": dense_init(k2, cfg.d_model, cfg.d_model, cfg.pdtype),
+        },
+        "lm": init_lm(k3, cfg),
+    }
+
+
+def _project(params: dict, patches: jnp.ndarray, cfg) -> jnp.ndarray:
+    h = patches.astype(cfg.cdtype) @ params["w1"].astype(cfg.cdtype)
+    h = jax.nn.gelu(h, approximate=True)
+    return h @ params["w2"].astype(cfg.cdtype)
+
+
+def apply_vlm(
+    params: dict,
+    tokens: jnp.ndarray,
+    patches: jnp.ndarray,
+    cfg,
+    cache: Optional[dict] = None,
+    mode: str = "train",
+    return_hidden: bool = False,
+    last_only: bool = False,
+):
+    """tokens (B, S_text); patches (B, N_patch, vision_dim).
+
+    Sequence = [vision tokens][text tokens].  For decode mode the vision
+    prefix is assumed already prefilled; tokens are decoded one at a time.
+    """
+    if mode == "decode":
+        return apply_lm(params["lm"], tokens, cfg, cache=cache, mode=mode)
+    vis = _project(params["proj"], patches, cfg)  # (B, Nv, d)
+    tok = embed(params["lm"]["embed"], tokens, cfg)
+    x = jnp.concatenate([vis, tok], axis=1)
+    return apply_lm(
+        params["lm"], None, cfg, cache=cache, mode=mode, inputs_embeds=x,
+        return_hidden=return_hidden, last_only=last_only,
+    )
+
+
+def vlm_loss(params, batch, cfg):
+    """batch: {"tokens", "targets", "patches"}; vision positions unsupervised."""
+    h, aux, _ = apply_vlm(
+        params, batch["tokens"], batch["patches"], cfg, return_hidden=True
+    )
+    nv = batch["patches"].shape[1]
+    return cross_entropy_fused(
+        h[:, nv:, :], params["lm"]["embed"], batch["targets"], cfg, batch.get("mask")
+    )

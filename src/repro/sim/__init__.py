@@ -1,0 +1,18 @@
+"""RapidAISim-analog: flow-level multi-tenant cluster simulation (paper §6)."""
+from .flowsim import JobFlows, job_slowdown, realized_fractions, ring_edges
+from .scheduler import JobRecord, SimConfig, Simulator, ilp_time_model, summarize
+from .trace import arrival_rate_for, generate_trace
+
+__all__ = [
+    "JobFlows",
+    "JobRecord",
+    "SimConfig",
+    "Simulator",
+    "arrival_rate_for",
+    "generate_trace",
+    "ilp_time_model",
+    "job_slowdown",
+    "realized_fractions",
+    "ring_edges",
+    "summarize",
+]

@@ -1,0 +1,145 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU): shape/dtype
+sweeps with assert_allclose per the kernel contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention, ref, rmsnorm, wkv6
+from repro.kernels import ops
+
+
+def _randn(rng, shape, dtype):
+    x = rng.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x).astype(dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,Sq,Sk,D",
+    [
+        (1, 1, 1, 128, 128, 64),
+        (2, 4, 2, 256, 256, 64),
+        (1, 8, 1, 128, 256, 128),  # MQA, cross lengths
+        (1, 2, 2, 100, 100, 32),  # non-divisible seq (padding path)
+    ],
+)
+def test_flash_shapes(rng, dtype, B, Hq, Hkv, Sq, Sk, D):
+    q = _randn(rng, (B, Hq, Sq, D), dtype)
+    k = _randn(rng, (B, Hkv, Sk, D), dtype)
+    v = _randn(rng, (B, Hkv, Sk, D), dtype)
+    out = flash_attention(q, k, v, causal=True, interpret=True, block_q=64, block_k=64)
+    expect = ref.mha_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(expect, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+@pytest.mark.parametrize(
+    "kw",
+    [
+        dict(causal=False),
+        dict(causal=True, window=64),
+        dict(causal=True, softcap=30.0),
+        dict(causal=True, window=32, softcap=50.0),
+    ],
+)
+def test_flash_variants(rng, kw):
+    q = _randn(rng, (1, 4, 256, 64), jnp.float32)
+    k = _randn(rng, (1, 2, 256, 64), jnp.float32)
+    v = _randn(rng, (1, 2, 256, 64), jnp.float32)
+    out = flash_attention(q, k, v, interpret=True, block_q=64, block_k=64, **kw)
+    expect = ref.mha_reference(q, k, v, **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_block_shape_independence(rng):
+    """Output must not depend on the chosen VMEM tiling."""
+    q = _randn(rng, (1, 2, 384, 64), jnp.float32)
+    k = _randn(rng, (1, 2, 384, 64), jnp.float32)
+    v = _randn(rng, (1, 2, 384, 64), jnp.float32)
+    outs = [
+        flash_attention(q, k, v, interpret=True, block_q=bq, block_k=bk)
+        for bq, bk in [(64, 64), (128, 128), (128, 64), (384, 128)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o), atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(8, 256), (3, 5, 512), (64, 128)])
+def test_rmsnorm(rng, dtype, shape):
+    x = _randn(rng, shape, dtype)
+    s = _randn(rng, shape[-1:], dtype)
+    out = rmsnorm(x, s, interpret=True, block_rows=16)
+    expect = ref.rmsnorm_reference(x, s)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+@pytest.mark.parametrize("T,chunk", [(64, 16), (96, 32), (50, 32), (16, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_wkv6(rng, T, chunk, dtype):
+    B, H, K, V = 2, 3, 16, 16
+    r = _randn(rng, (B, H, T, K), dtype)
+    k = _randn(rng, (B, H, T, K), dtype)
+    v = _randn(rng, (B, H, T, V), dtype)
+    lw = jnp.asarray(-np.exp(rng.normal(size=(B, H, T, K))).astype(np.float32))
+    u = _randn(rng, (H, K), jnp.float32)
+    s0 = _randn(rng, (B, H, K, V), jnp.float32)
+    y, sf = wkv6(r, k, v, lw, u, s0, chunk=chunk, interpret=True)
+    ye, se = ref.wkv6_reference(r, k, v, lw, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(se), atol=2e-4, rtol=2e-4)
+
+
+def test_wkv6_extreme_decay(rng):
+    """Strong decay (log_w very negative) must not overflow/NaN — the
+    exponent-of-nonpositive construction."""
+    B, H, T, K = 1, 1, 32, 8
+    r = _randn(rng, (B, H, T, K), jnp.float32)
+    k = _randn(rng, (B, H, T, K), jnp.float32)
+    v = _randn(rng, (B, H, T, K), jnp.float32)
+    lw = jnp.full((B, H, T, K), -50.0)  # decay ~ e^-50
+    u = _randn(rng, (H, K), jnp.float32)
+    s0 = jnp.zeros((B, H, K, K), jnp.float32)
+    y, sf = wkv6(r, k, v, lw, u, s0, chunk=16, interpret=True)
+    ye, se = ref.wkv6_reference(r, k, v, lw, u, s0)
+    assert np.isfinite(np.asarray(y)).all()
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), atol=1e-4)
+
+
+def test_ops_layout_roundtrip(rng):
+    """ops.* accept model layout (B, S, H, D) and agree with the oracle."""
+    q = _randn(rng, (2, 64, 4, 32), jnp.float32)
+    kv = _randn(rng, (2, 64, 2, 32), jnp.float32)
+    a = ops.attention(q, kv, kv, force_pallas=True)
+    b = ops.attention(q, kv, kv, force_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+    x = _randn(rng, (4, 16, 128), jnp.float32)
+    s = _randn(rng, (128,), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.rmsnorm(x, s, force_pallas=True)),
+        np.asarray(ops.rmsnorm(x, s, force_pallas=False)),
+        atol=1e-5,
+    )
+
+    B, S, H, K = 1, 48, 2, 8
+    r = _randn(rng, (B, S, H, K), jnp.float32)
+    k = _randn(rng, (B, S, H, K), jnp.float32)
+    v = _randn(rng, (B, S, H, K), jnp.float32)
+    lw = jnp.asarray(-np.exp(rng.normal(size=(B, S, H, K))).astype(np.float32))
+    u = _randn(rng, (H, K), jnp.float32)
+    s0 = jnp.zeros((B, H, K, K), jnp.float32)
+    y1, f1 = ops.wkv6(r, k, v, lw, u, s0, force_pallas=True)
+    y2, f2 = ops.wkv6(r, k, v, lw, u, s0, force_pallas=False)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), atol=2e-4)

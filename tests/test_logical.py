@@ -1,0 +1,58 @@
+"""Logical-topology demand generation: feasibility invariants (eq. 11/12)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.logical import (
+    Job,
+    Placement,
+    jobs_to_demand,
+    random_feasible_demand,
+    ring_demand,
+)
+from repro.core.topology import ClusterSpec, demand_feasible
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(2, 10),
+    st.sampled_from([2, 4, 8, 16]),
+    st.floats(0.0, 1.0),
+    st.integers(0, 2**31 - 1),
+)
+def test_random_demand_feasible(p, k, fill, seed):
+    spec = ClusterSpec(num_pods=p, k_spine=k, k_leaf=4)
+    C = random_feasible_demand(spec, np.random.default_rng(seed), fill=fill)
+    assert demand_feasible(C, spec)
+
+
+def test_ring_demand_structure():
+    spec = ClusterSpec(num_pods=6, k_spine=8, k_leaf=4)
+    C = ring_demand(spec, [0, 2, 4], links=2)
+    assert demand_feasible(C, spec)
+    # each hop appears bidirectionally
+    assert C[0, 0, 2] == 2 and C[0, 2, 0] == 2
+    assert C[0, 2, 4] == 2 and C[0, 4, 0] == 2
+    # per-pod degree = 2 hops × 2 links
+    assert C[0].sum(axis=1)[0] == 4
+
+
+def test_ring_demand_two_pods():
+    spec = ClusterSpec(num_pods=4, k_spine=8, k_leaf=4)
+    C = ring_demand(spec, [1, 3], links=3)
+    assert C[0, 1, 3] == 6  # both ring directions collapse onto the pair
+    assert demand_feasible(C, spec)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_jobs_to_demand_respects_budget(seed):
+    rng = np.random.default_rng(seed)
+    spec = ClusterSpec(num_pods=8, k_spine=8, k_leaf=4)
+    placements = []
+    for jid in range(rng.integers(1, 8)):
+        pods = rng.choice(8, size=rng.integers(2, 5), replace=False)
+        placements.append(
+            Placement(jid, {int(p): int(rng.integers(8, 33)) for p in pods})
+        )
+    C = jobs_to_demand(spec, placements)
+    assert demand_feasible(C, spec)

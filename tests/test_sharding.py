@@ -1,0 +1,100 @@
+"""Sharding rules: divisibility guards, spec/shape consistency, ZeRO-1 dim
+agreement between specs and the shard_map step."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import (
+    batch_specs,
+    cache_specs,
+    param_pspec,
+    param_specs,
+    zero1_dim,
+    zero1_specs,
+)
+from repro.launch.mesh import make_host_mesh
+from repro.models import ARCHS, get_api, smoke_config
+
+
+def _flat_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_specs_shape_consistent(arch):
+    """Every spec must be applicable: ndim match and divisibility by the
+    (hypothetical) model-axis size 16 wherever 'model' appears."""
+    cfg = ARCHS[arch]  # FULL config — eval_shape only, no allocation
+    api = get_api(cfg)
+    shapes = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    model = 16
+    for key, leaf in _flat_with_paths(shapes):
+        spec = param_pspec(key, tuple(leaf.shape), model, cfg.moe is not None)
+        assert len(spec) <= len(leaf.shape), (key, spec, leaf.shape)
+        for dim, axis in enumerate(spec):
+            if axis == "model":
+                assert leaf.shape[dim] % model == 0, (key, spec, leaf.shape)
+
+
+def test_mqa_kv_replicated():
+    """gemma-2b has 1 kv head: wk/wv output dim 256 divides 16, but kv
+    heads don't — heads stay intact because sharding is on the flat dim."""
+    cfg = ARCHS["gemma-2b"]
+    api = get_api(cfg)
+    shapes = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    for key, leaf in _flat_with_paths(shapes):
+        if key.endswith("mix/wk"):
+            spec = param_pspec(key, tuple(leaf.shape), 16, False)
+            # kv proj output is num_kv_heads*head_dim = 256; 256 % 16 == 0 →
+            # sharded on the flat dim (head_dim splits, not head count)
+            assert spec[-1] == "model"
+
+
+def test_indivisible_dims_degrade_to_replicated():
+    """A projection whose output dim does not divide the model axis must
+    fall back to replicated (never a compile error)."""
+    spec = param_pspec("units/l0/mix/wq", (24, 896, 897), 16, False)
+    assert all(a is None for a in spec)
+    # whereas a divisible dim is sharded
+    spec = param_pspec("units/l0/mix/wq", (24, 896, 896), 16, False)
+    assert spec[-1] == "model"
+
+
+def test_batch_and_cache_specs():
+    mesh = make_host_mesh()
+    cfg = smoke_config("olmo-1b")
+    api = get_api(cfg)
+    cache = jax.eval_shape(lambda: api.init_cache(4, 16))
+    cspecs = cache_specs(cache, mesh, cfg)
+    for s, leaf in zip(
+        jax.tree_util.tree_leaves(cspecs, is_leaf=lambda x: isinstance(x, P)),
+        jax.tree_util.tree_leaves(cache),
+    ):
+        assert len(s) <= len(leaf.shape)
+    bs = batch_specs(
+        {"tokens": jax.ShapeDtypeStruct((8, 16), np.int32)}, mesh
+    )
+    assert isinstance(bs["tokens"], P)
+
+
+def test_zero1_specs_match_zero1_dim():
+    """The spec builder and the shard_map step must agree on the scatter
+    dim for every leaf (they are separately computed)."""
+    cfg = ARCHS["qwen2.5-14b"]
+    api = get_api(cfg)
+    shapes = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    model, data = 16, 16
+    for key, leaf in _flat_with_paths(shapes):
+        d = zero1_dim(key, tuple(leaf.shape), model, data, False)
+        base = list(param_pspec(key, tuple(leaf.shape), model, False))
+        while len(base) < len(leaf.shape):
+            base.append(None)
+        if d is not None:
+            assert base[d] is None  # never double-shard a dim
+            assert leaf.shape[d] % data == 0

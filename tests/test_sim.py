@@ -1,0 +1,100 @@
+"""Multi-tenant simulator: determinism, conservation, architecture ordering
+(Best ≤ Cross Wiring ≤ Uniform on JCT) and trace calibration (eq. 17)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.sim import (
+    SimConfig,
+    Simulator,
+    arrival_rate_for,
+    generate_trace,
+    ilp_time_model,
+    summarize,
+)
+from repro.sim.trace import expected_gpu_seconds
+
+
+def _trace(n=120, gpus=8192, wl=0.85, seed=0):
+    return generate_trace(n, num_gpus=gpus, workload_level=wl, seed=seed)
+
+
+def test_trace_calibration():
+    """Eq. 17: λ · E[k·T] / GPUs == workload level."""
+    lam = arrival_rate_for(0.801, 8192)
+    assert lam * expected_gpu_seconds() / 8192 == pytest.approx(0.801)
+
+
+def test_trace_determinism():
+    a = _trace(seed=5)
+    b = _trace(seed=5)
+    assert [(j.arrival, j.num_gpus, j.service_time) for j in a] == [
+        (j.arrival, j.num_gpus, j.service_time) for j in b
+    ]
+
+
+def _run(arch, strat, jobs, pods=64, k=8):
+    sim = Simulator(
+        SimConfig(architecture=arch, strategy=strat, num_pods=pods, k_spine=k, k_leaf=k),
+        jobs,
+    )
+    return sim, sim.run()
+
+
+def test_all_jobs_complete():
+    jobs = _trace(80)
+    for arch, strat in [("best", "none"), ("cross_wiring", "mdmcf"), ("uniform", "greedy")]:
+        _, recs = _run(arch, strat, jobs)
+        assert all(math.isfinite(r.finish) for r in recs), (arch, strat)
+        for r in recs:
+            assert r.start >= r.job.arrival
+            assert r.finish >= r.start + r.job.service_time * 0.999
+
+
+def test_sim_determinism():
+    jobs = _trace(60)
+    _, r1 = _run("cross_wiring", "mdmcf", jobs)
+    _, r2 = _run("cross_wiring", "mdmcf", jobs)
+    assert [(r.start, r.finish) for r in r1] == [(r.start, r.finish) for r in r2]
+
+
+def test_best_is_lower_bound():
+    """No architecture beats the infinite crossbar on any job's JRT."""
+    jobs = _trace(80)
+    _, best = _run("best", "none", jobs)
+    for arch, strat in [("cross_wiring", "mdmcf"), ("uniform", "greedy"), ("clos", "none")]:
+        _, recs = _run(arch, strat, jobs)
+        for rb, r in zip(best, recs):
+            assert r.jrt >= rb.jrt - 1e-6, (arch, r.job.job_id)
+
+
+def test_cross_wiring_beats_uniform_on_average():
+    """The paper's headline ordering at heavy load."""
+    jobs = _trace(150, wl=0.9)
+    _, cw = _run("cross_wiring", "mdmcf", jobs)
+    _, un = _run("uniform", "greedy", jobs)
+    assert summarize(cw)["avg_jct"] <= summarize(un)["avg_jct"] + 1e-6
+
+
+def test_ltrr_cross_wiring_always_one():
+    """Thm 4.1 inside the simulator: every reconfiguration realizes the
+    (clipped) aggregate demand exactly."""
+    jobs = _trace(60, wl=0.9)
+    sim, _ = _run("cross_wiring", "mdmcf", jobs)
+    assert sim.ltrr_samples, "no reconfigurations happened"
+    assert np.min(sim.ltrr_samples) == pytest.approx(1.0)
+
+
+def test_ilp_time_model_calibration():
+    """Matches the paper's Fig 2c anchor: ~435 s at 32k nodes, small <4k."""
+    assert ilp_time_model(32768) == pytest.approx(435.0, rel=0.2)
+    assert ilp_time_model(4096) < 2.0
+
+
+def test_reconfig_overhead_in_jwt():
+    """ILP-strategy JWT must dominate MDMCF JWT (computation delay)."""
+    jobs = _trace(80, wl=0.9)
+    _, md = _run("cross_wiring", "mdmcf", jobs)
+    _, ilp = _run("cross_wiring", "itv_ilp", jobs)
+    assert summarize(ilp)["avg_jwt"] >= summarize(md)["avg_jwt"]

@@ -1,0 +1,94 @@
+"""ClusterSpec arithmetic (§3.1), OCSConfig feasibility, and the two
+physical topologies' L2-compatibility predicates (§4.1, §2.3)."""
+import numpy as np
+import pytest
+
+from repro.core.topology import (
+    ClusterSpec,
+    CrossWiring,
+    OCSConfig,
+    Uniform,
+    demand_feasible,
+)
+
+
+def test_spec_derived_sizes():
+    spec = ClusterSpec(num_pods=4, k_spine=8, k_leaf=8, tau=2)
+    assert spec.leaves_per_pod == 4
+    assert spec.spines_per_pod == 4
+    assert spec.gpus_per_pod == 32
+    assert spec.num_gpus == 128  # the paper's testbed (§5)
+    assert spec.num_ocs_groups == 4
+    assert spec.ocs_per_group == 8
+
+
+def test_spec_131k_gpu_claim():
+    """Paper §3.1 Remark: >131k GPUs with 512-port OCSes."""
+    spec = ClusterSpec(num_pods=512, k_spine=16, k_leaf=16, tau=1, k_ocs=512)
+    assert spec.num_gpus == 512 * 256 >= 131_072
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        ClusterSpec(num_pods=2, k_spine=7)  # odd K_spine
+    with pytest.raises(ValueError):
+        ClusterSpec(num_pods=600, k_ocs=512)  # more pods than OCS ports
+    with pytest.raises(ValueError):
+        ClusterSpec(num_pods=2, k_leaf=8, tau=3)  # tau must divide K_leaf
+
+
+def test_ocs_config_validate():
+    spec = ClusterSpec(num_pods=3, k_spine=4, k_leaf=4)
+    cfg = OCSConfig(spec)
+    cfg.x[0, 0, 0, 1] = 1
+    cfg.x[0, 0, 1, 2] = 1
+    cfg.validate()
+    cfg.x[0, 0, 0, 2] = 1  # pod 0 egress used twice on OCS 0
+    with pytest.raises(AssertionError):
+        cfg.validate()
+
+
+def test_cross_wiring_l2():
+    spec = ClusterSpec(num_pods=3, k_spine=4, k_leaf=4)
+    cw = CrossWiring(spec)
+    cfg = OCSConfig(spec)
+    # even OCS carries i->j, paired odd OCS must carry the transpose
+    cfg.x[0, 0, 0, 1] = 1
+    assert not cw.l2_feasible(cfg)
+    cfg.x[0, 1, 1, 0] = 1
+    assert cw.l2_feasible(cfg)
+
+
+def test_uniform_l2():
+    spec = ClusterSpec(num_pods=3, k_spine=4, k_leaf=4)
+    un = Uniform(spec)
+    cfg = OCSConfig(spec)
+    cfg.x[0, 0, 0, 1] = 1
+    assert not un.l2_feasible(cfg)  # not symmetric
+    cfg.x[0, 0, 1, 0] = 1
+    assert un.l2_feasible(cfg)
+    cfg.x[0, 1, 2, 2] = 1  # self-loop
+    assert not un.l2_feasible(cfg)
+
+
+def test_demand_feasible():
+    spec = ClusterSpec(num_pods=3, k_spine=4, k_leaf=4)
+    H = spec.num_ocs_groups
+    C = np.zeros((H, 3, 3), dtype=np.int64)
+    C[:, 0, 1] = C[:, 1, 0] = 2
+    assert demand_feasible(C, spec)
+    C[:, 0, 2] = 3  # asymmetric
+    assert not demand_feasible(C, spec)
+    C[:, 2, 0] = 3
+    assert not demand_feasible(C, spec)  # row sum 5 > K_spine=4
+
+
+def test_realized_bidirectional():
+    spec = ClusterSpec(num_pods=3, k_spine=4, k_leaf=4)
+    cfg = OCSConfig(spec)
+    cfg.x[0, 0, 0, 1] = 1  # i->j only: no bidirectional link
+    r = cfg.realized_bidirectional()
+    assert r[0, 0, 1] == 0
+    cfg.x[0, 1, 1, 0] = 1  # now j->i exists too
+    r = cfg.realized_bidirectional()
+    assert r[0, 0, 1] == 1 and r[0, 1, 0] == 1
