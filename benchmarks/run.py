@@ -13,6 +13,7 @@ import argparse
 import time
 
 from . import (
+    bench_collectives,
     bench_jct,
     bench_ltrr,
     bench_mrar,
@@ -23,6 +24,10 @@ from . import (
 )
 
 BENCHES = {
+    "collectives": (
+        bench_collectives,
+        "ours: planner-driven collective completion",
+    ),
     "ltrr": (bench_ltrr, "Fig 2b/5: logical topology realization rate"),
     "reconfig_time": (bench_reconfig_time, "Fig 2c/6: reconfiguration runtime"),
     "mrar": (bench_mrar, "Fig 7: min-rewiring achievement rate"),
@@ -105,6 +110,15 @@ def _summarize(name: str, payload: dict) -> None:
                 f"step,{r['arch']},train_ms={r['train_ms']:.1f},"
                 f"decode_ms={r['decode_ms']:.1f}"
             )
+    elif name == "collectives":
+        for r in payload["rows"]:
+            print(
+                f"collectives,{r['arch']},{r['scenario']},"
+                f"phi={r['phi']:.3f},"
+                f"t_cross={r['cross_collective_s']*1e3:.1f}ms,"
+                f"slowdown={r['step_slowdown']:.3f}"
+            )
+        print(f"collectives,checks,{payload['checks']}")
 
 
 if __name__ == "__main__":

@@ -28,7 +28,42 @@ __all__ = [
     "Placement",
     "jobs_to_demand",
     "ring_demand",
+    "ring_pairs",
+    "shave_to_budget",
 ]
+
+
+def ring_pairs(order: Sequence[int]) -> List[Tuple[int, int]]:
+    """Adjacent (i, j) hops of a bidirectional ring over ``order``.
+
+    A 2-pod ring collapses onto a single pair (both directions share it).
+    The single source of the wrap-around rule — demand lowering, the flow
+    model, and ring scoring all build on this."""
+    n = len(order)
+    if n < 2:
+        return []
+    if n == 2:
+        return [(order[0], order[1])]
+    return [(order[t], order[(t + 1) % n]) for t in range(n)]
+
+
+def shave_to_budget(M: np.ndarray, budget: np.ndarray) -> np.ndarray:
+    """In-place: symmetrically remove links (fattest pair of the most
+    oversubscribed pod first) until every pod's degree fits its budget
+    (eq. 12).  Deterministic; shared by demand clipping everywhere."""
+    deg = M.sum(axis=1)
+    over = deg - budget
+    while (over > 0).any():
+        p = int(np.argmax(over))
+        nz = np.nonzero(M[p])[0]
+        if nz.size == 0:
+            break
+        q = int(nz[np.argmax(M[p, nz])])
+        M[p, q] -= 1
+        M[q, p] -= 1
+        deg = M.sum(axis=1)
+        over = deg - budget
+    return M
 
 
 def random_feasible_demand(
@@ -81,19 +116,12 @@ def ring_demand(
     P = spec.num_pods
     H = num_groups if num_groups is not None else spec.num_ocs_groups
     C = np.zeros((H, P, P), dtype=np.int64)
-    n = len(pods)
-    if n < 2:
-        return C
     for h in range(H):
-        for t in range(n):
-            i, j = pods[t], pods[(t + 1) % n]
+        for i, j in ring_pairs(list(pods)):
             if i == j:
                 continue
             C[h, i, j] += links
             C[h, j, i] += links
-        if n == 2:
-            # the two ring directions collapse onto the same pair
-            pass
     return C
 
 
@@ -108,6 +136,7 @@ class Job:
     model: str = "llama-7b"
     tp: int = 8
     ep: int = 1
+    pp: int = 1  # pipeline stages (cross-pod chain traffic when > 1)
 
     @property
     def dp_pp_ways(self) -> int:
@@ -116,12 +145,25 @@ class Job:
 
 @dataclasses.dataclass
 class Placement:
-    """GPUs allocated to a job: pod -> gpu count."""
+    """GPUs allocated to a job: pod -> gpu count.
+
+    ``ring_order`` is the cyclic pod order chosen by the topology-aware
+    ring-ordering pass (``dist.demand.ring_order``): the DP ring visits
+    pods in this order so its edges land on the best-provisioned pairs of
+    the current OCS configuration.  ``None`` → sorted order (cold start).
+    """
 
     job_id: int
     pods: Dict[int, int]
+    ring_order: Optional[Tuple[int, ...]] = None
 
     def pod_list(self) -> List[int]:
+        return sorted(self.pods)
+
+    def ring(self) -> List[int]:
+        """Pods in DP-ring order (falls back to sorted pod ids)."""
+        if self.ring_order is not None:
+            return list(self.ring_order)
         return sorted(self.pods)
 
 
@@ -140,7 +182,7 @@ def jobs_to_demand(
     # remaining egress budget per (h, pod)
     budget = np.full((H, P), K, dtype=np.int64)
     for pl in placements:
-        pods = pl.pod_list()
+        pods = pl.ring()
         if len(pods) < 2:
             continue
         # links per adjacent pair: share of pod capacity this job owns
@@ -151,18 +193,7 @@ def jobs_to_demand(
         ring = ring_demand(spec, pods, want)
         # clip to remaining budget
         for h in range(H):
-            deg = ring[h].sum(axis=1)
-            over = deg > budget[h]
-            while over.any():
-                p = int(np.nonzero(over)[0][0])
-                nz = np.nonzero(ring[h, p])[0]
-                if nz.size == 0:
-                    break
-                q = int(nz[np.argmax(ring[h, p, nz])])
-                ring[h, p, q] -= 1
-                ring[h, q, p] -= 1
-                deg = ring[h].sum(axis=1)
-                over = deg > budget[h]
+            shave_to_budget(ring[h], budget[h])
             budget[h] -= ring[h].sum(axis=1)
         C += ring
     assert (C.sum(axis=2) <= K).all()

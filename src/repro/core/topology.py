@@ -134,6 +134,12 @@ class OCSConfig:
         r = self.realized().astype(np.int64)
         return np.minimum(r, np.transpose(r, (0, 2, 1)))
 
+    def pair_capacity(self) -> np.ndarray:
+        """Per-group-average bidirectional link capacity between pod pairs
+        — the ``(P, P)`` matrix the flow model and ring scoring share."""
+        r = self.realized_bidirectional().astype(np.float64)
+        return r.sum(axis=0) / max(1, self.num_groups)
+
     def validate(self) -> None:
         """Assert per-OCS sub-permutation feasibility (constraints (4)(5))."""
         if self.x.min() < 0 or self.x.max() > 1:

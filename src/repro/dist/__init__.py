@@ -1,0 +1,77 @@
+"""`repro.dist` — the distributed-communication subsystem.
+
+Two halves bridging the data plane to the OCS control plane:
+
+* :mod:`~repro.dist.sharding` — PartitionSpec rules for parameters, batches,
+  caches and ZeRO-1 optimizer state (consumed by ``train.trainstep``).
+* :mod:`~repro.dist.collectives` / :mod:`~repro.dist.demand` — the
+  collective-communication planner: parallelism plan → explicit collective
+  schedule (alpha-beta cost model) → pod×pod demand matrices → ring-ordering
+  against the current OCS configuration.
+"""
+from .collectives import (
+    AlphaBeta,
+    Collective,
+    MODEL_PROFILES,
+    ModelProfile,
+    collective_time,
+    plan_collectives,
+    schedule_time,
+)
+from .demand import (
+    collectives_to_edges,
+    comm_fraction_for,
+    edges_to_matrix,
+    job_edges,
+    ring_order,
+    uncoverable_fraction,
+)
+# sharding.py imports jax; the planner half (collectives/demand) and the
+# simulator that consumes it are numpy-only.  Load sharding names lazily
+# (PEP 562) so `repro.sim` / the benchmarks never pay the jax import.
+_SHARDING_NAMES = frozenset(
+    {
+        "batch_specs",
+        "cache_specs",
+        "mesh_axis_sizes",
+        "param_pspec",
+        "param_specs",
+        "shard_map_dp",
+        "to_shardings",
+        "zero1_dim",
+        "zero1_specs",
+    }
+)
+
+
+def __getattr__(name):
+    if name in _SHARDING_NAMES:
+        from . import sharding
+
+        return getattr(sharding, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+__all__ = [
+    "AlphaBeta",
+    "Collective",
+    "MODEL_PROFILES",
+    "ModelProfile",
+    "batch_specs",
+    "cache_specs",
+    "collective_time",
+    "collectives_to_edges",
+    "comm_fraction_for",
+    "edges_to_matrix",
+    "job_edges",
+    "mesh_axis_sizes",
+    "param_pspec",
+    "param_specs",
+    "plan_collectives",
+    "ring_order",
+    "schedule_time",
+    "shard_map_dp",
+    "to_shardings",
+    "uncoverable_fraction",
+    "zero1_dim",
+    "zero1_specs",
+]

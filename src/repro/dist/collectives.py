@@ -1,0 +1,241 @@
+"""Collective-communication schedules with an alpha–beta cost model.
+
+Given a job's parallelism plan (TP/EP in-pod, DP/PP cross-pod — the paper's
+§3.1 containment policy), emit the explicit per-step collective schedule:
+
+* ring all-reduce of gradients over the DP pods (or reduce-scatter +
+  all-gather when ZeRO-1 shards the optimizer state),
+* cross-pod all-to-all for MoE expert parallelism that spills out of a pod
+  (expert footprint exceeding one pod's HBM),
+* point-to-point activation transfers between adjacent PP stages,
+* in-pod TP all-reduces (electrical fabric; never reach the OCS core).
+
+Each collective's completion time follows the standard alpha–beta model
+(e.g. ring all-reduce of ``b`` bytes over ``w`` ways: ``2(w-1)α +
+2b(w-1)/w·β``).  ``demand.py`` lowers the cross-pod part of a schedule to
+pod×pod demand matrices for the OCS control plane.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+__all__ = [
+    "AlphaBeta",
+    "Collective",
+    "MODEL_PROFILES",
+    "ModelProfile",
+    "collective_time",
+    "plan_collectives",
+    "schedule_time",
+]
+
+IN_POD = "in_pod"
+CROSS_POD = "cross_pod"
+
+
+@dataclasses.dataclass(frozen=True)
+class AlphaBeta:
+    """Per-fabric latency (s/hop) and inverse bandwidth (s/byte).
+
+    Defaults: 400 Gb/s electrical in-pod links vs a single 100 Gb/s optical
+    spine link cross-pod (a job stripes over several — ``links`` below).
+    """
+
+    alpha_in_pod: float = 2e-6
+    beta_in_pod: float = 1.0 / 50e9  # 400 Gb/s
+    alpha_cross_pod: float = 10e-6
+    beta_cross_pod: float = 1.0 / 12.5e9  # 100 Gb/s per spine-level link
+
+
+@dataclasses.dataclass(frozen=True)
+class Collective:
+    """One collective operation of a training step.
+
+    ``bytes`` is the per-participant payload; ``ways`` the group size;
+    ``rounds`` how many times per step it runs (PP microbatches, MoE
+    layers); ``scope`` whether it rides the electrical or optical fabric.
+    """
+
+    kind: str  # all_reduce | reduce_scatter | all_gather | all_to_all | p2p
+    scope: str  # in_pod | cross_pod
+    bytes: float
+    ways: int
+    rounds: int = 1
+
+    def __post_init__(self) -> None:
+        if self.kind not in (
+            "all_reduce", "reduce_scatter", "all_gather", "all_to_all", "p2p"
+        ):
+            raise ValueError(f"unknown collective kind {self.kind!r}")
+        if self.ways < 1 or self.bytes < 0 or self.rounds < 1:
+            raise ValueError("degenerate collective")
+
+
+def collective_time(
+    c: Collective, ab: AlphaBeta, links: int = 1, phi: float = 1.0
+) -> float:
+    """Completion time of one collective under the alpha–beta model.
+
+    ``links`` stripes the payload over parallel spine-level links;
+    ``phi`` ∈ (0, 1] is the realized bandwidth fraction of the worst edge
+    (from the flow model) — bandwidth terms stretch by 1/φ, latency terms
+    do not (the circuit exists, it is just thinner than requested).
+    """
+    if c.ways == 1 or c.bytes == 0:
+        return 0.0
+    if c.scope == IN_POD:
+        # electrical fabric: no spine-link striping, always full rate
+        alpha, beta = ab.alpha_in_pod, ab.beta_in_pod
+    else:
+        alpha, beta = ab.alpha_cross_pod, ab.beta_cross_pod
+        beta = beta / max(1, links) / max(phi, 1e-9)
+    w, b = c.ways, c.bytes
+    if c.kind == "all_reduce":
+        t = 2 * (w - 1) * alpha + 2 * b * (w - 1) / w * beta
+    elif c.kind in ("reduce_scatter", "all_gather"):
+        t = (w - 1) * alpha + b * (w - 1) / w * beta
+    elif c.kind == "all_to_all":
+        # each rank holds b bytes, sends (w-1)/w of it, one hop per peer
+        t = (w - 1) * alpha + b * (w - 1) / w * beta
+    else:  # p2p: one stage boundary transfer
+        t = alpha + b * beta
+    return t * c.rounds
+
+
+def schedule_time(
+    colls: List[Collective],
+    ab: AlphaBeta,
+    links: int = 1,
+    phi_cross: float = 1.0,
+) -> float:
+    """Serial completion time of a schedule (collectives on the critical
+    path; in-pod ones always run at full rate)."""
+    t = 0.0
+    for c in colls:
+        phi = phi_cross if c.scope == CROSS_POD else 1.0
+        t += collective_time(c, ab, links=links, phi=phi)
+    return t
+
+
+# ---------------------------------------------------------------------------
+# model profiles for the multi-tenant trace (§6.3 workload)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelProfile:
+    """Coarse per-model byte/compute profile driving the planner.
+
+    ``grad_bytes``: full gradient size (bf16).  ``moe_tokens_bytes``: per
+    all-to-all dispatch payload of one MoE layer (tokens × d_model × bf16 ×
+    capacity).  ``pp_act_bytes``: activation tensor crossing one PP stage
+    boundary per microbatch.  ``compute_s``: per-step compute time on the
+    reference accelerator (calibrates the communication *fraction*).
+    """
+
+    grad_bytes: float
+    compute_s: float
+    layers: int
+    moe: bool = False
+    moe_layers: int = 0
+    moe_tokens_bytes: float = 0.0
+    # experts exceed one pod's HBM: the EP all-to-all must span the job's
+    # pods (small-EP models keep it on the electrical fabric per §3.1)
+    ep_spill: bool = False
+    pp_act_bytes: float = 0.0
+
+
+# Trace models: dense LLaMA-family, MoE (pangu/gpt2 with EP=2 in the paper
+# testbed; mixtral-class with wide EP), and a PP archetype for 70B-class
+# jobs that pipeline across pods.
+MODEL_PROFILES: Dict[str, ModelProfile] = {
+    "llama-7b": ModelProfile(14e9, 0.55, 32, pp_act_bytes=67e6),
+    "llama2-7b": ModelProfile(14e9, 0.55, 32, pp_act_bytes=67e6),
+    "llama2-13b": ModelProfile(26e9, 0.95, 40, pp_act_bytes=84e6),
+    "pangu-alpha-6b": ModelProfile(
+        12e9, 0.50, 31, moe=True, moe_layers=8, moe_tokens_bytes=34e6
+    ),
+    "gpt2-13b": ModelProfile(
+        26e9, 0.90, 40, moe=True, moe_layers=10, moe_tokens_bytes=42e6
+    ),
+    "mixtral-8x7b": ModelProfile(
+        26e9, 0.70, 32, moe=True, moe_layers=32, moe_tokens_bytes=67e6,
+        ep_spill=True,
+    ),
+    "llama2-70b": ModelProfile(140e9, 2.8, 80, pp_act_bytes=134e6),
+}
+
+
+def plan_collectives(
+    model: str,
+    n_pods: int,
+    tp: int = 8,
+    ep: int = 1,
+    pp: int = 1,
+    zero1: bool = False,
+    dp_cross: bool = True,
+    profile: Optional[ModelProfile] = None,
+) -> List[Collective]:
+    """Explicit collective schedule of one training step.
+
+    ``n_pods`` is the number of pods the job's cross-pod groups span.  EP
+    spillover: an ``ep > 1`` job whose experts do not fit one pod runs its
+    dispatch/combine all-to-all across *all* its pods (dense pairwise
+    traffic — the pattern Cross Wiring realizes and Uniform cannot).  PP
+    splits the DP ring per stage: gradient bytes divide by ``pp`` and each
+    microbatch crosses ``pp - 1`` stage boundaries.  ``dp_cross=False``
+    keeps the gradient ring on the electrical fabric (DP replicas fit
+    in-pod; only EP/PP traffic reaches the OCS core).
+    """
+    prof = profile if profile is not None else MODEL_PROFILES.get(model)
+    if prof is None:
+        prof = ModelProfile(14e9, 0.55, 32)
+    out: List[Collective] = []
+
+    # TP: two all-reduces (attention + MLP) per layer, in-pod electrical.
+    if tp > 1:
+        out.append(
+            Collective(
+                "all_reduce", IN_POD,
+                bytes=prof.pp_act_bytes or 67e6,
+                ways=tp, rounds=2 * prof.layers,
+            )
+        )
+
+    # DP gradient reduction across pods (per PP stage).
+    if n_pods > 1 and dp_cross:
+        g = prof.grad_bytes / max(1, pp)
+        if zero1:
+            out.append(Collective("reduce_scatter", CROSS_POD, g, n_pods))
+            out.append(Collective("all_gather", CROSS_POD, g, n_pods))
+        else:
+            out.append(Collective("all_reduce", CROSS_POD, g, n_pods))
+    elif not dp_cross:
+        out.append(
+            Collective("all_reduce", IN_POD, prof.grad_bytes, max(2, tp))
+        )
+
+    # MoE EP: dispatch + combine all-to-all per MoE layer.  Stays on the
+    # electrical fabric while the experts fit a pod (§3.1 containment);
+    # only footprint spillover (profile flag) sends it across the OCS.
+    if prof.moe and ep > 1:
+        spill = prof.ep_spill and n_pods > 1
+        scope = CROSS_POD if spill else IN_POD
+        ways = n_pods if spill else ep
+        out.append(
+            Collective(
+                "all_to_all", scope, prof.moe_tokens_bytes,
+                ways=max(2, ways), rounds=2 * max(1, prof.moe_layers),
+            )
+        )
+
+    # PP: activations (fwd) + activation grads (bwd) per microbatch chain.
+    if pp > 1 and n_pods > 1:
+        micro = 2 * pp  # standard 1F1B fill: ~2·pp microbatches in flight
+        out.append(
+            Collective(
+                "p2p", CROSS_POD, prof.pp_act_bytes or 67e6,
+                ways=min(pp, n_pods), rounds=2 * micro * (pp - 1),
+            )
+        )
+    return out

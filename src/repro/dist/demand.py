@@ -1,0 +1,251 @@
+"""Lower collective schedules to pod×pod OCS demand; ring-order pods.
+
+The bridge between the data plane and the control plane: a job's cross-pod
+collectives (from :mod:`~repro.dist.collectives`) become spine-level link
+demand between the pods it occupies —
+
+* ring collectives (all-reduce / reduce-scatter / all-gather) → ring edges,
+* MoE EP all-to-all → dense pairwise edges (the pattern Theorem 4.1 lets
+  Cross Wiring realize and Uniform cannot),
+* PP point-to-point → an open chain over the stage pods.
+
+The per-job link budget is split over the job's cross-pod collectives in
+proportion to their byte volume, and :func:`ring_order` permutes the pods
+so the ring lands on the best-provisioned pairs of the *current* OCS
+configuration (minimizing uncoverable demand before any reconfiguration).
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.logical import ring_pairs
+from .collectives import (
+    AlphaBeta,
+    CROSS_POD,
+    Collective,
+    MODEL_PROFILES,
+    collective_time,
+    plan_collectives,
+)
+
+__all__ = [
+    "clip_feasible",
+    "collectives_to_edges",
+    "comm_fraction_for",
+    "edges_to_matrix",
+    "job_edges",
+    "ring_order",
+    "uncoverable_fraction",
+]
+
+Edges = Dict[Tuple[int, int], int]
+
+_RING_KINDS = ("all_reduce", "reduce_scatter", "all_gather")
+
+
+def _add(edges: Edges, i: int, j: int, links: int) -> None:
+    if i == j or links <= 0:
+        return
+    e = (min(i, j), max(i, j))
+    edges[e] = edges.get(e, 0) + links
+
+
+def _volume(c: Collective) -> float:
+    """Bandwidth-seconds of a collective at β=1 — the link-split weight."""
+    return collective_time(
+        c, AlphaBeta(alpha_in_pod=0.0, beta_in_pod=1.0,
+                     alpha_cross_pod=0.0, beta_cross_pod=1.0)
+    )
+
+
+def collectives_to_edges(
+    colls: Sequence[Collective], pods: Sequence[int], links: int
+) -> Edges:
+    """Cross-pod collectives → symmetric edge demand over ``pods``.
+
+    ``pods`` is the (ring-ordered) pod sequence; ``links`` the per-hop
+    budget the job may claim (its share of each pod's spine ports), split
+    across collectives in proportion to byte volume.
+    """
+    edges: Edges = {}
+    n = len(pods)
+    if n < 2 or links <= 0:
+        return edges
+    cross = [c for c in colls if c.scope == CROSS_POD and c.ways > 1]
+    if not cross:
+        return edges
+    vols = np.array([_volume(c) for c in cross], dtype=np.float64)
+    total = vols.sum()
+    shares = vols / total if total > 0 else np.full(len(cross), 1.0 / len(cross))
+    # largest-remainder apportionment: per-hop budgets sum to exactly
+    # ``links`` so a multi-collective job never claims more than its share
+    quotas = shares * links
+    budgets = np.floor(quotas).astype(np.int64)
+    order = np.argsort(-(quotas - budgets), kind="stable")
+    for idx in order[: links - int(budgets.sum())]:
+        budgets[idx] += 1
+    for c, budget in zip(cross, budgets):
+        budget = int(budget)
+        if budget <= 0:
+            continue  # below one link of the job's share: not provisioned
+        if c.kind in _RING_KINDS:
+            for i, j in ring_pairs(list(pods)):
+                _add(edges, i, j, budget)
+        elif c.kind == "all_to_all":
+            # spread the ring degree budget (2·links) over all n-1 peers
+            per_pair = max(1, int(round(2 * budget / (n - 1))))
+            for a, b in itertools.combinations(pods, 2):
+                _add(edges, a, b, per_pair)
+        else:  # p2p chain: stage boundaries, no wrap-around
+            stages = min(c.ways, n)
+            for t in range(stages - 1):
+                _add(edges, pods[t], pods[t + 1], budget)
+    return edges
+
+
+def job_edges(
+    model: str,
+    pods: Sequence[int],
+    links: int,
+    ep: int = 1,
+    pp: int = 1,
+    tp: int = 8,
+    zero1: bool = False,
+) -> Edges:
+    """Planner demand of one job: schedule → edges over its ordered pods."""
+    colls = plan_collectives(
+        model, len(pods), tp=tp, ep=ep, pp=pp, zero1=zero1
+    )
+    return collectives_to_edges(colls, pods, links)
+
+
+def edges_to_matrix(edges: Edges, num_pods: int, num_groups: int = 1) -> np.ndarray:
+    """Edge dict → symmetric ``(H, P, P)`` logical-topology demand."""
+    C = np.zeros((num_groups, num_pods, num_pods), dtype=np.int64)
+    for (i, j), links in edges.items():
+        C[:, i, j] += links
+        C[:, j, i] += links
+    return C
+
+
+def clip_feasible(C: np.ndarray, k_spine: int) -> np.ndarray:
+    """Copy of ``C`` shaved until it satisfies the degree constraint
+    (paper eq. 12), via the shared :func:`core.logical.shave_to_budget`."""
+    from ..core.logical import shave_to_budget
+
+    C = C.copy()
+    budget = np.full(C.shape[1], k_spine, dtype=np.int64)
+    for h in range(C.shape[0]):
+        shave_to_budget(C[h], budget)
+    return C
+
+
+# ---------------------------------------------------------------------------
+# topology-aware ring ordering
+# ---------------------------------------------------------------------------
+
+def _ring_uncovered(order: Sequence[int], cap: np.ndarray, links: int) -> float:
+    """Links of the ring's demand the capacity matrix cannot carry."""
+    want: Edges = {}
+    for i, j in ring_pairs(list(order)):
+        _add(want, i, j, links)
+    return float(
+        sum(max(0.0, w - cap[i, j]) for (i, j), w in want.items())
+    )
+
+
+def uncoverable_fraction(edges: Edges, config) -> float:
+    """Share of demanded links the realized configuration cannot carry."""
+    total = sum(edges.values())
+    if not total:
+        return 0.0
+    cap = config.pair_capacity()
+    short = sum(max(0.0, w - cap[i, j]) for (i, j), w in edges.items())
+    return float(short) / float(total)
+
+
+def ring_order(
+    pods: Sequence[int],
+    config=None,
+    links: int = 1,
+    exhaustive_limit: int = 8,
+) -> Tuple[int, ...]:
+    """Order a job's pods so its DP ring minimizes uncoverable demand.
+
+    Deterministic, and never worse than the sorted baseline: the sorted
+    order is always in the candidate set and ties break toward it.  With no
+    configuration yet (cold start) the sorted order is returned unchanged.
+    Small rings are solved exactly (cyclic permutations modulo rotation and
+    reflection); larger ones greedily chain best-provisioned pairs.
+    """
+    base = tuple(sorted(pods))
+    n = len(base)
+    if config is None or n <= 3:
+        return base  # n ≤ 3: all cyclic orders are the same ring
+    cap = config.pair_capacity()
+
+    candidates: List[Tuple[int, ...]] = [base]
+    if n <= exhaustive_limit:
+        first = base[0]
+        for perm in itertools.permutations(base[1:]):
+            if perm[0] > perm[-1]:
+                continue  # skip mirror-image rings
+            candidates.append((first,) + perm)
+    else:
+        # greedy: start at the lowest pod id, repeatedly hop to the
+        # remaining pod with the fattest realized pipe
+        left = list(base[1:])
+        order = [base[0]]
+        while left:
+            cur = order[-1]
+            nxt = max(left, key=lambda q: (cap[cur, q], -q))
+            left.remove(nxt)
+            order.append(nxt)
+        candidates.append(tuple(order))
+
+    best = min(
+        candidates,
+        key=lambda o: (_ring_uncovered(o, cap, links), o != base, o),
+    )
+    return best
+
+
+# ---------------------------------------------------------------------------
+# planner-derived communication fractions (replaces trace.COMM_FRACTION)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=4096)
+def comm_fraction_for(
+    model: str,
+    n_pods: int,
+    ep: int = 1,
+    pp: int = 1,
+    links: int = 4,
+    tp: int = 8,
+) -> float:
+    """Cross-pod communication fraction of a step on the ideal fabric.
+
+    α = t_cross / (t_compute + t_in_pod + t_cross) from the alpha–beta
+    costs of the job's planned schedule — the quantity the flow model
+    stretches by 1/φ.  Unknown models fall back to a dense-7B profile.
+    """
+    prof = MODEL_PROFILES.get(model)
+    ab = AlphaBeta()
+    colls = plan_collectives(model, n_pods, tp=tp, ep=ep, pp=pp)
+    t_cross = sum(
+        collective_time(c, ab, links=max(1, links))
+        for c in colls
+        if c.scope == CROSS_POD
+    )
+    t_in = sum(
+        collective_time(c, ab) for c in colls if c.scope != CROSS_POD
+    )
+    compute = prof.compute_s if prof is not None else 0.55
+    denom = compute + t_in + t_cross
+    if denom <= 0:
+        return 0.0
+    return float(min(0.95, t_cross / denom))

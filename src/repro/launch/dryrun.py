@@ -161,6 +161,8 @@ def run_cell(
         rec["compile_s"] = round(t2 - t1, 2)
 
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # jax 0.4.x returns [dict]
+            cost = cost[0] if cost else {}
         # NOTE: cost_analysis counts while (scan) bodies ONCE and reports
         # post-partition (per-device) numbers — kept for reference only;
         # the roofline uses the loop-corrected hloparse.analyze() numbers.

@@ -1,5 +1,11 @@
 """RapidAISim-analog: flow-level multi-tenant cluster simulation (paper §6)."""
-from .flowsim import JobFlows, job_slowdown, realized_fractions, ring_edges
+from .flowsim import (
+    JobFlows,
+    job_slowdown,
+    realized_fractions,
+    ring_edges,
+    waterfill_fractions,
+)
 from .scheduler import JobRecord, SimConfig, Simulator, ilp_time_model, summarize
 from .trace import arrival_rate_for, generate_trace
 
@@ -15,4 +21,5 @@ __all__ = [
     "realized_fractions",
     "ring_edges",
     "summarize",
+    "waterfill_fractions",
 ]

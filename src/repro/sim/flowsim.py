@@ -27,7 +27,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.logical import Placement
+from ..core.logical import Placement, ring_pairs
 from ..core.topology import ClusterSpec, OCSConfig
 
 SLOWDOWN_CAP = 4.0  # a starved flow still gets residual electrical paths
@@ -45,17 +45,13 @@ class JobFlows:
 
 def ring_edges(pods: Sequence[int], links: int) -> Dict[Tuple[int, int], int]:
     edges: Dict[Tuple[int, int], int] = {}
-    n = len(pods)
-    if n < 2 or links <= 0:
+    if links <= 0:
         return edges
-    for t in range(n):
-        i, j = pods[t], pods[(t + 1) % n]
+    for i, j in ring_pairs(list(pods)):
         if i == j:
             continue
         e = (min(i, j), max(i, j))
         edges[e] = edges.get(e, 0) + links
-        if n == 2:
-            break  # both ring directions collapse onto one pair
     return edges
 
 
@@ -88,8 +84,7 @@ def realized_fractions(
         return phi
 
     assert config is not None, "OCS architectures need a realized config"
-    realized = config.realized_bidirectional().astype(np.float64)  # (H, P, P)
-    realized_pair = realized.sum(axis=0) / max(1, config.num_groups)
+    realized_pair = config.pair_capacity()
 
     for f in flows:
         worst = 1.0
@@ -104,3 +99,74 @@ def realized_fractions(
 def job_slowdown(comm_fraction: float, phi: float) -> float:
     """JRT multiplier: comm stretches by 1/φ, compute unaffected."""
     return 1.0 + comm_fraction * (1.0 / max(phi, 1.0 / SLOWDOWN_CAP) - 1.0)
+
+
+def waterfill_fractions(
+    spec: ClusterSpec,
+    flows: Sequence[JobFlows],
+    config: Optional[OCSConfig],
+    architecture: str,
+) -> Dict[int, float]:
+    """φ per job from vectorized max-min water-filling over edges.
+
+    Progressive filling: every unfrozen flow's satisfied fraction x rises
+    uniformly until some edge saturates (Σ demand·x = capacity); flows on
+    saturated edges freeze at that level and release no further demand,
+    and the remaining flows keep filling with the leftover capacity.  A
+    collective runs at its slowest edge, so x is per-flow, not per-edge —
+    each job's φ is the level at which it froze.
+
+    Compared to the proportional heuristic (:func:`realized_fractions`),
+    capacity a frozen flow cannot use is redistributed, so φ is a true
+    max-min allocation.  ``best``/``clos`` delegate (no OCS edges there).
+    """
+    if architecture in ("best", "clos"):
+        return realized_fractions(spec, flows, config, architecture)
+    assert config is not None, "OCS architectures need a realized config"
+    flows = list(flows)
+    if not flows:
+        return {}
+
+    cap_pair = config.pair_capacity()
+
+    edge_ix: Dict[Tuple[int, int], int] = {}
+    for f in flows:
+        for e in f.edges:
+            edge_ix.setdefault(e, len(edge_ix))
+    if not edge_ix:
+        return {f.job_id: 1.0 for f in flows}
+
+    F, E = len(flows), len(edge_ix)
+    D = np.zeros((F, E), dtype=np.float64)  # requested links per (flow, edge)
+    for fi, f in enumerate(flows):
+        for e, r in f.edges.items():
+            D[fi, edge_ix[e]] = float(r)
+    cap = np.array(
+        [cap_pair[i, j] for (i, j) in edge_ix], dtype=np.float64
+    )
+
+    x = np.ones(F, dtype=np.float64)
+    active = D.any(axis=1)
+    frozen_use = np.zeros(E, dtype=np.float64)
+    for _ in range(E):
+        if not active.any():
+            break
+        load = active @ D  # unfrozen demand per edge
+        live = load > 1e-12
+        if not live.any():
+            break
+        level = np.full(E, np.inf)
+        level[live] = np.maximum(0.0, cap[live] - frozen_use[live]) / load[live]
+        lvl = level.min()
+        if lvl >= 1.0:
+            break  # everyone fits at full rate
+        sat = level <= lvl + 1e-12
+        hit = active & (D[:, sat].sum(axis=1) > 0)
+        x[hit] = lvl
+        frozen_use += lvl * (hit @ D)
+        active &= ~hit
+
+    return {
+        f.job_id: float(np.clip(x[fi], 1.0 / SLOWDOWN_CAP, 1.0))
+        for fi, f in enumerate(flows)
+    }

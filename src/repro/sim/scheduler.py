@@ -9,8 +9,12 @@ Simulates a P-pod OCS cluster running a job trace under a chosen
   the aggregate demand of all running jobs; the *computation time* of the
   strategy delays the job start (JWT includes it, as in the paper),
 * running jobs progress under processor-sharing with per-job slowdown from
-  the flow model (``flowsim.realized_fractions``); slowdowns are
-  re-evaluated whenever the running set or the OCS configuration changes.
+  the flow model (``flowsim.waterfill_fractions`` — max-min water-filling
+  over OCS edges); slowdowns are re-evaluated whenever the running set or
+  the OCS configuration changes.  Per-job communication fractions and edge
+  demand come from the collective planner (``repro.dist``): dense jobs
+  contribute a DP ring, MoE-EP jobs an all-to-all mesh, PP jobs a stage
+  chain, each ring-ordered against the current configuration.
 
 Strategy runtimes: polynomial algorithms (MDMCF, greedy, Helios) are
 *measured* (this container's wall clock, scaled to all OCS groups); exact
@@ -28,7 +32,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.logical import Job
+from ..core.logical import Job, Placement, shave_to_budget
 from ..core.reconfig import (
     helios_matching,
     ltrr,
@@ -38,6 +42,8 @@ from ..core.reconfig import (
     uniform_greedy,
 )
 from ..core.topology import ClusterSpec, OCSConfig
+from ..dist import collectives as dist_collectives
+from ..dist import demand as dist_demand
 from . import flowsim
 from .trace import COMM_FRACTION
 
@@ -107,17 +113,30 @@ class JobRecord:
 
 class _Running:
     __slots__ = (
-        "job", "pods", "edges", "progress", "slowdown", "last_t", "record",
+        "job", "placement", "edges", "comm_frac", "progress", "slowdown",
+        "last_t", "record",
     )
 
-    def __init__(self, job: Job, pods: Dict[int, int], edges, record: JobRecord):
+    def __init__(
+        self,
+        job: Job,
+        placement: Placement,
+        edges,
+        comm_frac: float,
+        record: JobRecord,
+    ):
         self.job = job
-        self.pods = pods
+        self.placement = placement
         self.edges = edges
+        self.comm_frac = comm_frac
         self.progress = 0.0
         self.slowdown = 1.0
         self.last_t = record.start
         self.record = record
+
+    @property
+    def pods(self) -> Dict[int, int]:
+        return self.placement.pods
 
     def advance(self, now: float) -> None:
         if now > self.last_t:
@@ -192,18 +211,7 @@ class Simulator:
             for (i, j), links in r.edges.items():
                 ring[i, j] += links
                 ring[j, i] += links
-            deg = ring.sum(axis=1)
-            over = deg - budget
-            while (over > 0).any():
-                p = int(np.argmax(over))
-                nz = np.nonzero(ring[p])[0]
-                if nz.size == 0:
-                    break
-                q = int(nz[np.argmax(ring[p, nz])])
-                ring[p, q] -= 1
-                ring[q, p] -= 1
-                deg = ring.sum(axis=1)
-                over = deg - budget
+            shave_to_budget(ring, budget)
             budget -= ring.sum(axis=1)
             C[:] += ring[None]
         return C
@@ -243,22 +251,28 @@ class Simulator:
 
     # ---- flow model ----------------------------------------------------------
 
+    def _comm_fraction(self, job: Job, n_pods: int, links: int) -> float:
+        """Planner-derived α; legacy COMM_FRACTION only for unprofiled
+        models (so external traces with custom names keep working)."""
+        if job.model in dist_collectives.MODEL_PROFILES:
+            return dist_demand.comm_fraction_for(
+                job.model, n_pods, ep=job.ep, pp=job.pp, links=links,
+                tp=job.tp,
+            )
+        return COMM_FRACTION.get(job.model, 0.2)
+
     def _refresh_slowdowns(self, now: float, config: Optional[OCSConfig]) -> None:
         flows = [
-            flowsim.JobFlows(
-                jid, r.edges, COMM_FRACTION.get(r.job.model, 0.2)
-            )
+            flowsim.JobFlows(jid, r.edges, r.comm_frac)
             for jid, r in self.running.items()
         ]
-        phi = flowsim.realized_fractions(
+        phi = flowsim.waterfill_fractions(
             self.spec, flows, config, self.cfg.architecture
         )
         for jid, r in self.running.items():
             r.advance(now)
             p = phi.get(jid, 1.0)
-            r.slowdown = flowsim.job_slowdown(
-                COMM_FRACTION.get(r.job.model, 0.2), p
-            )
+            r.slowdown = flowsim.job_slowdown(r.comm_frac, p)
             r.record.min_phi = min(r.record.min_phi, p)
 
     # ---- main loop -------------------------------------------------------------
@@ -294,9 +308,18 @@ class Simulator:
             for p, n in pods.items():
                 self.free[p] -= n
             links = self._ring_links(job, pods)
-            edges = flowsim.ring_edges(sorted(pods), links)
+            # topology-aware ring ordering against the *current* OCS config
+            # (minimizes uncoverable demand even before reconfiguration)
+            order = dist_demand.ring_order(
+                sorted(pods), self.old_config, links=links
+            )
+            placement = Placement(job.job_id, pods, ring_order=order)
+            edges = dist_demand.job_edges(
+                job.model, order, links, ep=job.ep, pp=job.pp, tp=job.tp
+            )
             rec = self.records[job.job_id]
-            run = _Running(job, pods, edges, rec)
+            alpha = self._comm_fraction(job, len(pods), links)
+            run = _Running(job, placement, edges, alpha, rec)
             self.running[job.job_id] = run
             config, comp_s = self._reconfigure()
             rec.reconfig_s = comp_s

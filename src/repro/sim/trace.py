@@ -32,14 +32,30 @@ JOB_MIX: Tuple[Tuple[int, float, float], ...] = (
 )
 
 MODELS = ("llama-7b", "llama2-7b", "llama2-13b", "pangu-alpha-6b", "gpt2-13b")
-# fraction of a step that is cross-pod (DP) communication on the Best fabric;
-# MoE-style models (pangu/gpt2 with EP=2 in the paper) communicate more.
+# larger-scale archetypes drawn only for big jobs: a mixtral-class MoE whose
+# EP all-to-all spills across pods, and a 70B-class job that pipelines
+# stages across pods (PP chain traffic)
+BIG_MODELS = ("mixtral-8x7b", "llama2-70b")
+BIG_MODEL_MIN_GPUS = 256
+
+# LEGACY calibration fallback: fraction of a step that is cross-pod
+# communication on the Best fabric.  The scheduler now derives per-job
+# fractions from the collective planner (``dist.demand.comm_fraction_for``);
+# this table only covers models without a planner profile.
 COMM_FRACTION = {
     "llama-7b": 0.18,
     "llama2-7b": 0.18,
     "llama2-13b": 0.22,
     "pangu-alpha-6b": 0.30,
     "gpt2-13b": 0.28,
+}
+
+# parallelism plan per archetype: (ep_ways, pp_stages)
+_MODEL_PLAN = {
+    "pangu-alpha-6b": (2, 1),
+    "gpt2-13b": (2, 1),
+    "mixtral-8x7b": (8, 1),
+    "llama2-70b": (1, 4),
 }
 
 
@@ -77,17 +93,22 @@ def generate_trace(
         b = rng.choice(len(sizes), p=probs)
         # log-normal around the bucket mean, sigma=0.5
         service = float(means[b] * rng.lognormal(mean=-0.125, sigma=0.5))
-        model = MODELS[int(rng.integers(len(MODELS)))]
-        ep = 2 if model in ("pangu-alpha-6b", "gpt2-13b") else 1
+        gpus = int(sizes[b])
+        if gpus >= BIG_MODEL_MIN_GPUS and rng.random() < 0.5:
+            model = BIG_MODELS[int(rng.integers(len(BIG_MODELS)))]
+        else:
+            model = MODELS[int(rng.integers(len(MODELS)))]
+        ep, pp = _MODEL_PLAN.get(model, (1, 1))
         jobs.append(
             Job(
                 job_id=jid,
-                num_gpus=int(sizes[b]),
+                num_gpus=gpus,
                 arrival=t,
                 service_time=service,
                 model=model,
                 tp=8,
                 ep=ep,
+                pp=pp,
             )
         )
     return jobs

@@ -30,6 +30,7 @@ from ..dist.sharding import (
     batch_specs,
     mesh_axis_sizes,
     param_specs,
+    shard_map_dp,
     to_shardings,
     zero1_dim,
     zero1_specs,
@@ -265,13 +266,12 @@ def make_hierarchical_step(api, cfg, opt: OptConfig, mesh, hp: TrainHparams, bat
         return new_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
 
     state_in_specs = {"params": params_dp, "opt": opt_dp}
-    sm = jax.shard_map(
+    sm = shard_map_dp(
         body,
-        mesh=mesh,
+        mesh,
         in_specs=(state_in_specs, batch_dp),
         out_specs=(state_in_specs, P()),
-        axis_names=set(dp),
-        check_vma=False,
+        manual_axes=dp,
     )
     jitted = jax.jit(
         sm,

@@ -3,6 +3,7 @@
 theorem bounds on arbitrary inputs, and must agree with each other."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core.decomposition import (

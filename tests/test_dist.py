@@ -1,0 +1,179 @@
+"""Collective planner invariants: demand matrices are symmetric and
+degree-feasible, ring ordering never increases uncoverable demand, and the
+alpha-beta cost model behaves monotonically.
+
+Randomized property tests use seeded numpy generators (always run); the
+hypothesis-based suites elsewhere cover the control-plane theorems."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.logical import Job, Placement
+from repro.core.reconfig import mdmcf_reconfigure, uniform_greedy
+from repro.core.topology import ClusterSpec, OCSConfig, demand_feasible
+from repro.dist import (
+    AlphaBeta,
+    Collective,
+    MODEL_PROFILES,
+    collective_time,
+    collectives_to_edges,
+    comm_fraction_for,
+    edges_to_matrix,
+    job_edges,
+    plan_collectives,
+    ring_order,
+    uncoverable_fraction,
+)
+from repro.dist.demand import _ring_uncovered, clip_feasible
+from repro.sim import flowsim
+
+SPEC = ClusterSpec(num_pods=8, k_spine=16, k_leaf=16)
+
+
+def _random_edges(rng, n_jobs=3):
+    """Aggregate planner edges of a few random jobs."""
+    models = sorted(MODEL_PROFILES)
+    edges_list = []
+    for _ in range(n_jobs):
+        model = models[int(rng.integers(len(models)))]
+        n = int(rng.integers(2, 6))
+        pods = sorted(
+            rng.choice(SPEC.num_pods, size=n, replace=False).tolist()
+        )
+        ep = int(rng.choice([1, 2, 8]))
+        pp = int(rng.choice([1, 2, 4]))
+        links = int(rng.integers(1, 9))
+        edges_list.append(job_edges(model, pods, links, ep=ep, pp=pp))
+    return edges_list
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_planner_demand_symmetric_and_feasible(seed):
+    """Lowered demand is a valid logical topology after clipping
+    (paper eq. 11 symmetry + eq. 12 degree bound)."""
+    rng = np.random.default_rng(seed)
+    C = sum(
+        edges_to_matrix(e, SPEC.num_pods, SPEC.num_ocs_groups)
+        for e in _random_edges(rng)
+    )
+    assert (C == np.transpose(C, (0, 2, 1))).all()
+    assert (np.diagonal(C, axis1=1, axis2=2) == 0).all()
+    clipped = clip_feasible(C, SPEC.k_spine)
+    assert demand_feasible(clipped, SPEC)
+    assert (clipped <= C).all()  # clipping only removes links
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_ring_order_never_increases_uncoverable(seed):
+    """The topology-aware ordering is at least as good as sorted order
+    under any realized configuration."""
+    rng = np.random.default_rng(seed)
+    from repro.core.logical import random_feasible_demand
+
+    C = random_feasible_demand(SPEC, rng, fill=0.6)
+    config = mdmcf_reconfigure(SPEC, C).config
+    cap = config.realized_bidirectional().astype(np.float64).sum(axis=0)
+    cap /= max(1, config.num_groups)
+    for n in (2, 3, 4, 5, 6):
+        pods = sorted(rng.choice(SPEC.num_pods, size=n, replace=False).tolist())
+        links = int(rng.integers(1, 6))
+        order = ring_order(pods, config, links=links)
+        assert sorted(order) == pods  # a permutation, nothing dropped
+        assert _ring_uncovered(order, cap, links) <= _ring_uncovered(
+            tuple(pods), cap, links
+        ) + 1e-9
+
+
+def test_ring_order_finds_covered_ring():
+    """With capacity laid out as a known ring, the pass recovers it."""
+    config = OCSConfig(SPEC, num_groups=1)
+    ring = [0, 2, 4, 6, 1, 3]
+    for t in range(len(ring)):
+        i, j = ring[t], ring[(t + 1) % len(ring)]
+        config.x[0, 2 * t % SPEC.ocs_per_group, i, j] = 1
+        config.x[0, (2 * t + 1) % SPEC.ocs_per_group, j, i] = 1
+    order = ring_order(sorted(ring), config, links=1)
+    cap = config.realized_bidirectional().astype(np.float64).sum(axis=0)
+    assert _ring_uncovered(order, cap, 1) <= _ring_uncovered(
+        tuple(sorted(ring)), cap, 1
+    )
+
+
+def test_moe_all_to_all_is_dense():
+    """EP spillover produces edges between *every* pod pair."""
+    pods = [1, 3, 5, 6]
+    edges = job_edges("mixtral-8x7b", pods, links=8, ep=8)
+    for pair in itertools.combinations(pods, 2):
+        assert edges.get(pair, 0) >= 1, pair
+
+
+def test_pp_chain_is_open():
+    """PP stage traffic is a chain: the wrap-around pair stays empty when
+    the DP ring is absent (pp archetype with in-pod DP)."""
+    pods = [0, 1, 2, 3]
+    colls = plan_collectives("llama2-70b", 4, pp=4, dp_cross=False)
+    edges = collectives_to_edges(colls, pods, links=4)
+    assert (0, 3) not in edges
+    assert edges.get((0, 1), 0) >= 1 and edges.get((2, 3), 0) >= 1
+
+
+def test_cost_model_monotonicity():
+    ab = AlphaBeta()
+    small = Collective("all_reduce", "cross_pod", 1e9, 4)
+    big = Collective("all_reduce", "cross_pod", 2e9, 4)
+    assert collective_time(big, ab) > collective_time(small, ab)
+    # more links → faster; lower phi → slower
+    assert collective_time(small, ab, links=8) < collective_time(small, ab)
+    assert collective_time(small, ab, phi=0.5) > collective_time(small, ab)
+    # zero1 reduce-scatter + all-gather == one ring all-reduce (bandwidth)
+    rs = Collective("reduce_scatter", "cross_pod", 1e9, 4)
+    ag = Collective("all_gather", "cross_pod", 1e9, 4)
+    both = collective_time(rs, ab) + collective_time(ag, ab)
+    assert both == pytest.approx(collective_time(small, ab), rel=1e-6)
+
+
+def test_comm_fraction_bounds_and_growth():
+    for model in MODEL_PROFILES:
+        a2 = comm_fraction_for(model, 2, ep=2, pp=1)
+        a8 = comm_fraction_for(model, 8, ep=2, pp=1)
+        assert 0.0 <= a2 <= 0.95 and 0.0 <= a8 <= 0.95
+        assert a8 >= a2 - 1e-9  # more pods, relatively more cross traffic
+    assert comm_fraction_for("unknown-model", 2) > 0.0  # fallback profile
+
+
+def test_waterfill_matches_capacity():
+    """Max-min φ: a fully realized demand gives φ=1; a half-capacity
+    fabric gives φ=0.5; frozen flows' leftovers go to others."""
+    spec = ClusterSpec(num_pods=4, k_spine=16, k_leaf=16)
+    want = {(0, 1): 8, (1, 2): 8}
+    C = edges_to_matrix(want, 4, spec.num_ocs_groups)
+    config = mdmcf_reconfigure(spec, C).config
+    flows = [flowsim.JobFlows(0, want, 0.3)]
+    phi = flowsim.waterfill_fractions(spec, flows, config, "cross_wiring")
+    assert phi[0] == pytest.approx(1.0)
+
+    # second job congests edge (0,1) only; job 1 freezes at 8/16 while
+    # job 0's (1,2) edge is untouched -> job 0 also pinned by (0,1)
+    flows = [
+        flowsim.JobFlows(0, {(0, 1): 8, (1, 2): 8}, 0.3),
+        flowsim.JobFlows(1, {(0, 1): 8}, 0.3),
+    ]
+    phi = flowsim.waterfill_fractions(spec, flows, config, "cross_wiring")
+    assert phi[0] == pytest.approx(0.5)
+    assert phi[1] == pytest.approx(0.5)
+
+
+def test_placement_ring_roundtrip():
+    pl = Placement(0, {4: 8, 1: 8, 7: 8}, ring_order=(1, 7, 4))
+    assert pl.ring() == [1, 7, 4]
+    assert pl.pod_list() == [1, 4, 7]
+    assert Placement(0, {4: 8, 1: 8}).ring() == [1, 4]
+
+
+def test_uncoverable_fraction_zero_when_realized():
+    want = {(0, 1): 4, (2, 3): 4}
+    C = edges_to_matrix(want, SPEC.num_pods, SPEC.num_ocs_groups)
+    config = mdmcf_reconfigure(SPEC, C).config
+    assert uncoverable_fraction(want, config) == pytest.approx(0.0)
+    assert uncoverable_fraction({(0, 1): 4, (4, 5): 4}, config) > 0.0

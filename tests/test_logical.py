@@ -1,5 +1,8 @@
 """Logical-topology demand generation: feasibility invariants (eq. 11/12)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core.logical import (

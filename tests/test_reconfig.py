@@ -3,6 +3,7 @@ optimality theorem (Thm 4.1): MDMCF must realize *every* feasible demand
 exactly under Cross Wiring; Uniform provably cannot (Fig. 1)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core.logical import random_feasible_demand
