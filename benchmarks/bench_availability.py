@@ -1,0 +1,293 @@
+"""ours — goodput/availability under failures, repair & live expansion.
+
+Three scenario families exercising `repro.fault` end to end:
+
+* **sweep** (steady state, no queueing noise) — a fixed full-port-budget
+  placement mix in the paper's §6.2 heavy-workload regime (3-pod DP rings
+  at full degree, a K5 MoE all-to-all, 2-pod dense pairs) runs while
+  transceiver failure/repair renewal processes (MTBF derived from a target
+  *concurrent failed-port fraction* at fixed MTTR) mask slots.  At every
+  event the control plane re-solves — Cross Wiring via the degraded MDMCF
+  (exact core + violation-minimizing slot assignment + salvage), Uniform
+  via masked greedy matching — and per-job slowdowns come from the flow
+  model.  Goodput = delivered compute integrated between events over
+  capacity.  Uniform starts below 1 (odd rings / K5 are unrealizable) and
+  shrinks further with failures; Cross Wiring reroutes around them.
+* **policies** — a scripted pod failure + repair mid-trace in the full
+  event-driven scheduler under each recovery policy: rewire-around loses
+  the whole run (no checkpoints), checkpoint-restart rolls back to the
+  last checkpoint and pays the restore cost, shrink-collective drops the
+  pod and keeps going.
+* **expansion** — a live P−ΔP → P grow-out (ExpandEvent) under
+  rewire-around on an overloaded small cluster: no running job restarts,
+  queued jobs drain onto the new pods, JCT drops vs staying small.
+
+Checks (in the payload and printed): Cross Wiring sustains strictly
+higher goodput than Uniform at ≥1 nonzero failure rate; the expansion
+causes zero restarts.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.reconfig import ltrr, uniform_greedy
+from repro.core.topology import ClusterSpec
+from repro.dist import demand as dist_demand
+from repro.fault import (
+    ExpandEvent,
+    FailureEvent,
+    FaultModel,
+    PortMask,
+    RepairEvent,
+    apply_event,
+    masked_aggregate_demand,
+    mdmcf_degraded,
+)
+from repro.sim import SimConfig, Simulator, generate_trace, summarize
+from repro.sim import flowsim
+
+from .common import save
+
+LINK_MTTR_S = 4 * 3600.0
+SIM_GROUPS = 2
+
+
+def _mtbf_for_fraction(frac: float, mttr: float = LINK_MTTR_S) -> float:
+    """MTBF so the steady-state concurrently-failed fraction is ``frac``."""
+    return mttr * (1.0 - frac) / frac
+
+
+# ---------------------------------------------------------------------------
+# Part A — steady-state goodput sweep
+# ---------------------------------------------------------------------------
+
+def _steady_layout(P: int):
+    """Full-budget placement mix tiling ``P`` pods in blocks of 8: a 3-pod
+    DP ring (odd cycle at full degree — Uniform's Fig. 1 blind spot) and a
+    K5 MoE all-to-all spill; leftover pods pair up as 2-pod dense jobs."""
+    jobs = []
+    p = 0
+    while P - p >= 8:
+        jobs.append((list(range(p, p + 3)), "llama2-13b", 1, 1))
+        jobs.append((list(range(p + 3, p + 8)), "mixtral-8x7b", 8, 1))
+        p += 8
+    while P - p >= 2:
+        jobs.append(([p, p + 1], "llama2-7b", 1, 1))
+        p += 2
+    return jobs
+
+
+def _steady_goodput(P, k, fractions, horizon, seed=0):
+    spec = ClusterSpec(num_pods=P, k_spine=k, k_leaf=k)
+    H = SIM_GROUPS
+    jobs = []
+    for jid, (pods, model, ep, pp) in enumerate(_steady_layout(P)):
+        links = k if len(pods) == 2 else k // 2
+        edges = dist_demand.job_edges(model, pods, links, ep=ep, pp=pp)
+        alpha = dist_demand.comm_fraction_for(
+            model, len(pods), ep=ep, pp=pp, links=links
+        )
+        jobs.append((jid, edges, alpha, len(pods) * spec.gpus_per_pod))
+    total_gpus = sum(j[3] for j in jobs)
+
+    def resolve(arch, mask, old):
+        C = masked_aggregate_demand(P, H, [j[1] for j in jobs], mask)
+        m = None if mask.is_trivial() else mask
+        if arch == "cross_wiring":
+            res = mdmcf_degraded(spec, C, old=old, mask=m)
+        else:
+            res = uniform_greedy(spec, C, mask=m)
+        flows = [
+            flowsim.JobFlows(jid, edges, alpha) for jid, edges, alpha, _ in jobs
+        ]
+        phi = flowsim.waterfill_fractions(spec, flows, res.config, arch)
+        rate = sum(
+            gpus / flowsim.job_slowdown(alpha, phi.get(jid, 1.0))
+            for jid, _, alpha, gpus in jobs
+        )
+        return res.config, rate, ltrr(res.config, C)
+
+    rows = []
+    for frac in fractions:
+        events = []
+        if frac > 0:
+            fm = FaultModel(
+                P, k, H,
+                link_mtbf_s=_mtbf_for_fraction(frac),
+                link_mttr_s=LINK_MTTR_S,
+                seed=seed + 17,
+            )
+            events = [e for e in fm.sample(horizon) if e.time < horizon]
+        for arch in ("cross_wiring", "uniform"):
+            mask = PortMask.healthy(spec, H)
+            cfg, rate, lt = resolve(arch, mask, None)
+            lts, t_prev, work = [lt], 0.0, 0.0
+            for ev in events:
+                work += rate * (ev.time - t_prev)
+                t_prev = ev.time
+                apply_event(mask, ev)
+                cfg, rate, lt = resolve(arch, mask, cfg)
+                lts.append(lt)
+            work += rate * (horizon - t_prev)
+            rows.append(
+                {
+                    "failed_frac": frac,
+                    "arch": arch,
+                    "events": len(events),
+                    "goodput": work / (horizon * total_gpus),
+                    "ltrr_avg": float(np.mean(lts)),
+                    "ltrr_min": float(np.min(lts)),
+                }
+            )
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Part B — recovery policies (full scheduler, scripted pod failure)
+# ---------------------------------------------------------------------------
+
+def _policies(P, k, n_jobs, seed=0):
+    jobs = generate_trace(
+        n_jobs, num_gpus=P * k * k, workload_level=0.9, seed=seed,
+        max_job_gpus=P * k * k // 4,
+    )
+    t_fail = jobs[len(jobs) // 3].arrival
+    events = [
+        FailureEvent(t_fail, "pod", pod=1),
+        RepairEvent(t_fail + 2 * 3600.0, "pod", pod=1),
+    ]
+    rows = []
+    for policy in ("rewire_around", "ckpt_restart", "shrink_collective"):
+        sim = Simulator(
+            SimConfig(
+                architecture="cross_wiring", strategy="mdmcf",
+                num_pods=P, k_spine=k, k_leaf=k, recovery_policy=policy,
+            ),
+            jobs,
+            fault_events=events,
+        )
+        recs = sim.run()
+        fs = sim.fault_summary()
+        s = summarize(recs)
+        rows.append(
+            {
+                "policy": policy,
+                "restarts": int(fs["restarts"]),
+                "shrinks": int(fs["shrinks"]),
+                "lost_gpu_s": fs["lost_gpu_s"],
+                "availability": fs["availability"],
+                "avg_jct": s["avg_jct"],
+            }
+        )
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Part C — live expansion
+# ---------------------------------------------------------------------------
+
+def _expansion(P, k, n_jobs, delta_pods, seed=0):
+    """Live grow-out: start with P-ΔP active pods under heavy overload,
+    expand to P mid-trace.  ``workload_level`` compensates for the
+    truncated job mix (``max_job_gpus`` drops the large jobs that carry
+    most of eq. 17's GPU-seconds), so the small cluster actually queues."""
+    small_gpus = (P - delta_pods) * k * k
+    jobs = generate_trace(
+        n_jobs, num_gpus=small_gpus, workload_level=4.0,
+        seed=seed, max_job_gpus=small_gpus // 4,
+    )
+    t_exp = jobs[len(jobs) // 3].arrival
+    grow = [ExpandEvent(t_exp, tuple(range(P - delta_pods, P)))]
+    out = {}
+    for name, events in [("static_small", []), ("expanded", grow)]:
+        sim = Simulator(
+            SimConfig(
+                architecture="cross_wiring", strategy="mdmcf",
+                num_pods=P, k_spine=k, k_leaf=k,
+                recovery_policy="rewire_around", active_pods=P - delta_pods,
+            ),
+            jobs,
+            fault_events=events,
+        )
+        recs = sim.run()
+        fs = sim.fault_summary()
+        s = summarize(recs)
+        out[name] = {
+            "restarts": int(fs["restarts"]),
+            "expands": int(fs["expands"]),
+            "completed": s["completed"],
+            "avg_jct": s["avg_jct"],
+            "avg_jwt": s["avg_jwt"],
+            "max_jwt": s["max_jwt"],
+        }
+    out["t_expand_s"] = t_exp
+    return out
+
+
+def run(quick: bool = True) -> dict:
+    P, k = (18, 8) if quick else (36, 8)
+    fractions = [0.0, 0.01, 0.03] if quick else [0.0, 0.005, 0.01, 0.02, 0.04]
+    horizon = 24 * 3600.0 if quick else 72 * 3600.0
+    sweep = _steady_goodput(P, k, fractions, horizon)
+    policies = _policies(16 if quick else 32, k, 40 if quick else 150)
+    expansion = _expansion(16 if quick else 32, k, 70 if quick else 250, delta_pods=4)
+
+    by_frac = {}
+    for r in sweep:
+        by_frac.setdefault(r["failed_frac"], {})[r["arch"]] = r["goodput"]
+    cw_wins = [
+        f for f, g in by_frac.items()
+        if f > 0 and g["cross_wiring"] > g["uniform"]
+    ]
+    checks = {
+        "cw_beats_uniform_at_nonzero_failure_rate": bool(cw_wins),
+        "cw_win_fractions": cw_wins,
+        "expansion_no_restarts": expansion["expanded"]["restarts"] == 0,
+        "expansion_helps_jct": (
+            expansion["expanded"]["avg_jct"]
+            < expansion["static_small"]["avg_jct"]
+        ),
+    }
+    payload = {
+        "params": {
+            "sweep_pods": P, "k": k, "fractions": fractions,
+            "horizon_s": horizon, "link_mttr_s": LINK_MTTR_S,
+        },
+        "rows": sweep,
+        "policies": policies,
+        "expansion": expansion,
+        "checks": checks,
+    }
+    save("availability", payload)
+    return payload
+
+
+def main():
+    p = run(quick=True)
+    for r in p["rows"]:
+        print(
+            f"availability,sweep,{r['arch']},frac={r['failed_frac']},"
+            f"goodput={r['goodput']:.4f},ltrr_avg={r['ltrr_avg']:.4f},"
+            f"events={r['events']}"
+        )
+    for r in p["policies"]:
+        print(
+            f"availability,policy,{r['policy']},restarts={r['restarts']},"
+            f"shrinks={r['shrinks']},lost_gpu_s={r['lost_gpu_s']:.0f},"
+            f"avg_jct={r['avg_jct']:.0f}"
+        )
+    e = p["expansion"]
+    print(
+        f"availability,expansion,restarts={e['expanded']['restarts']},"
+        f"jct_small={e['static_small']['avg_jct']:.0f},"
+        f"jct_expanded={e['expanded']['avg_jct']:.0f},"
+        f"jwt_small={e['static_small']['avg_jwt']:.0f},"
+        f"jwt_expanded={e['expanded']['avg_jwt']:.0f}"
+    )
+    print(f"availability,checks,{p['checks']}")
+    assert p["checks"]["cw_beats_uniform_at_nonzero_failure_rate"]
+    assert p["checks"]["expansion_no_restarts"]
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,7 @@ import argparse
 import time
 
 from . import (
+    bench_availability,
     bench_collectives,
     bench_jct,
     bench_ltrr,
@@ -35,6 +36,10 @@ BENCHES = {
     "throughput": (bench_throughput, "Fig 2a/4a: testbed throughput"),
     "reconfig_interval": (bench_reconfig_interval, "Table 1: reconfig frequency"),
     "step": (bench_step, "ours: per-arch step sanity perf"),
+    "availability": (
+        bench_availability,
+        "ours: goodput under failures + live expansion",
+    ),
 }
 
 
@@ -52,6 +57,33 @@ def main() -> None:
         payload = mod.run(quick=not args.full)
         _summarize(name, payload)
         print(f"-- {name} done in {time.perf_counter() - t0:.1f}s\n", flush=True)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4f}"
+    return str(v)
+
+
+def _summarize_generic(name: str, payload: dict) -> None:
+    """Fallback key=value printer for benches without a bespoke formatter
+    (otherwise new benches silently print nothing)."""
+    rows = payload.get("rows")
+    if isinstance(rows, list) and rows:
+        for r in rows:
+            if isinstance(r, dict):
+                print(f"{name}," + ",".join(f"{k}={_fmt(v)}" for k, v in r.items()))
+    else:
+        scalars = {
+            k: v for k, v in payload.items()
+            if isinstance(v, (int, float, str, bool))
+        }
+        if scalars:
+            print(f"{name}," + ",".join(f"{k}={_fmt(v)}" for k, v in scalars.items()))
+    if isinstance(payload.get("checks"), dict):
+        print(f"{name},checks," + ",".join(
+            f"{k}={v}" for k, v in payload["checks"].items()
+        ))
 
 
 def _summarize(name: str, payload: dict) -> None:
@@ -119,6 +151,8 @@ def _summarize(name: str, payload: dict) -> None:
                 f"slowdown={r['step_slowdown']:.3f}"
             )
         print(f"collectives,checks,{payload['checks']}")
+    else:
+        _summarize_generic(name, payload)
 
 
 if __name__ == "__main__":

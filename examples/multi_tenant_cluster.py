@@ -3,11 +3,14 @@
 Simulates a 4096-GPU cluster serving a 150-job trace under three designs —
 Cross Wiring + MDMCF, Uniform + greedy, and the ideal crossbar — and prints
 the paper's headline metrics (JRT/JWT/JCT, slowdowns, affected jobs).
+A second act replays the same trace through a scripted failure / repair /
+expansion scenario (`repro.fault`) under each recovery policy.
 
 Run:  PYTHONPATH=src python examples/multi_tenant_cluster.py
 """
 import numpy as np
 
+from repro.fault import ExpandEvent, FailureEvent, RepairEvent
 from repro.sim import SimConfig, Simulator, generate_trace, summarize
 
 jobs = generate_trace(150, num_gpus=4096, workload_level=0.9, seed=0)
@@ -41,3 +44,37 @@ cw = results[("cross_wiring", "mdmcf")][0]["avg_jct"]
 un = results[("uniform", "greedy")][0]["avg_jct"]
 print(f"\nCross Wiring vs Uniform: {100 * (un / cw - 1):.1f}% lower avg JCT")
 print(f"Cross Wiring vs ideal:   {100 * (cw / best - 1):.2f}% above the crossbar bound")
+
+# --- act two: the cluster has a bad day (repro.fault) -----------------------
+# a transceiver dies, then a whole OCS, then pod 3 goes down for two hours,
+# and finally four cold spare pods (60..63 were kept inactive) come online.
+t0 = jobs[len(jobs) // 4].arrival
+scenario = [
+    FailureEvent(t0, "link", h=0, k=2, pod=5),
+    FailureEvent(t0 + 1800.0, "ocs", h=1, k=4),
+    FailureEvent(t0 + 3600.0, "pod", pod=3),
+    RepairEvent(t0 + 3600.0 + 7200.0, "pod", pod=3),
+    RepairEvent(t0 + 4 * 3600.0, "ocs", h=1, k=4),
+    RepairEvent(t0 + 6 * 3600.0, "link", h=0, k=2, pod=5),
+    ExpandEvent(t0 + 8 * 3600.0, pods=(60, 61, 62, 63)),
+]
+print("\nscripted failure/repair/expansion scenario (Cross Wiring + MDMCF):")
+for policy in ("rewire_around", "ckpt_restart", "shrink_collective"):
+    sim = Simulator(
+        SimConfig(
+            architecture="cross_wiring", strategy="mdmcf",
+            num_pods=64, k_spine=8, k_leaf=8,
+            recovery_policy=policy, active_pods=60,
+        ),
+        jobs,
+        fault_events=scenario,
+    )
+    recs = sim.run()
+    s = summarize(recs)
+    fs = sim.fault_summary()
+    print(
+        f"{policy:17s}  avg JCT {s['avg_jct']:7.1f}s  "
+        f"restarts {fs['restarts']:2.0f}  shrinks {fs['shrinks']:2.0f}  "
+        f"work lost {fs['lost_gpu_s']:9.0f} GPU·s  "
+        f"availability {100 * fs['availability']:.2f}%"
+    )

@@ -97,6 +97,7 @@ def mdmcf_reconfigure(
     old: Optional[OCSConfig] = None,
     method: str = "euler",
     slot_match: bool = True,
+    mask=None,
 ) -> ReconfigResult:
     """The paper's polynomial-time reconfiguration under Cross Wiring.
 
@@ -105,23 +106,33 @@ def mdmcf_reconfigure(
     path or "mcf" oracle).  With ``old`` given, the edge coloring is
     warm-started from the previous even-OCS sub-permutations and color
     classes are then Hungarian-matched to OCS slots to minimize rewiring.
+
+    ``mask`` (a :class:`~repro.fault.masks.PortMask`) switches on the
+    degraded-mode solve: color classes land only on the mask's *clean* OCS
+    pairs, so no failed slot is ever assigned, and any demand within the
+    degraded budget (``demand_feasible(C, spec, mask)``) is still realized
+    exactly in polynomial time — the healthy algorithm on a smaller slot
+    set (argument spelled out in ``repro.fault.recover``).  Use
+    ``repro.fault.recover.degrade_demand`` to clip demand first.
     """
     t0 = time.perf_counter()
     C = np.asarray(C)
-    if not demand_feasible(C, spec):
+    if not demand_feasible(C, spec, mask=mask):
         raise ValueError("demand violates (11)(12); not a feasible logical topology")
     H, P, _ = C.shape
     K2 = spec.k_spine // 2
     cfg = OCSConfig(spec, num_groups=H)
     for h in range(H):
+        pairs = mask.clean_pairs(h) if mask is not None else np.arange(K2)
+        k2_eff = len(pairs)
         A = symmetric_split(C[h], method=method)
-        warm = old.x[h, 0::2] if old is not None else None
-        colors = edge_color_bipartite(A, K2, warm=warm)
-        order = np.arange(K2)
-        if old is not None and slot_match:
+        warm = old.x[h, 2 * pairs] if old is not None else None
+        colors = edge_color_bipartite(A, k2_eff, warm=warm)
+        order = np.arange(k2_eff)
+        if old is not None and slot_match and k2_eff:
             # overlap[t, s] = links kept if color class t lands on slot s
-            old_even = old.x[h, 0::2].astype(np.int32)
-            old_odd = old.x[h, 1::2].astype(np.int32)
+            old_even = old.x[h, 2 * pairs].astype(np.int32)
+            old_odd = old.x[h, 2 * pairs + 1].astype(np.int32)
             cint = colors.astype(np.int32)
             overlap = np.einsum("tij,sij->ts", cint, old_even) + np.einsum(
                 "tji,sij->ts", cint, old_odd
@@ -129,21 +140,40 @@ def mdmcf_reconfigure(
             from scipy.optimize import linear_sum_assignment
 
             rows, cols_idx = linear_sum_assignment(-overlap)
-            order = np.empty(K2, dtype=np.int64)
+            order = np.empty(k2_eff, dtype=np.int64)
             order[cols_idx] = rows  # slot s gets color class order[s]
-        for s in range(K2):
+        for s in range(k2_eff):
             m = colors[order[s]]
-            cfg.x[h, 2 * s] = m
-            cfg.x[h, 2 * s + 1] = m.T
-    cfg.validate()
+            t = int(pairs[s])
+            cfg.x[h, 2 * t] = m
+            cfg.x[h, 2 * t + 1] = m.T
+    cfg.validate(mask)
     return ReconfigResult(cfg, C, time.perf_counter() - t0)
 
 
 def mdmcf_cold(
-    spec: ClusterSpec, C: np.ndarray, old: Optional[OCSConfig] = None, method: str = "euler"
+    spec: ClusterSpec,
+    C: np.ndarray,
+    old: Optional[OCSConfig] = None,
+    method: str = "euler",
+    mask=None,
 ) -> ReconfigResult:
     """MDMCF without rewiring awareness (the MinRewiring-MCF baseline)."""
-    return mdmcf_reconfigure(spec, C, old=None, method=method, slot_match=False)
+    return mdmcf_reconfigure(
+        spec, C, old=None, method=method, slot_match=False, mask=mask
+    )
+
+
+def _uniform_pod_ok(mask, H: int, K: int, P: int) -> Optional[np.ndarray]:
+    """(H, K, P) bool — pod p can join OCS (h, k)'s symmetric matching.
+
+    Under Uniform wiring a bidirectional link {i, j} on OCS k consumes the
+    full (egress, ingress) port pair of *both* pods on that OCS, so a pod
+    with either direction masked is out of that OCS entirely."""
+    if mask is None:
+        return None
+    ok = ~(mask.egress_blocked() | mask.ingress_blocked())[:H]
+    return ok & mask.pod_up()[None, None, :]
 
 
 # --------------------------------------------------------------------------
@@ -151,20 +181,28 @@ def mdmcf_cold(
 # --------------------------------------------------------------------------
 
 def uniform_greedy(
-    spec: ClusterSpec, C: np.ndarray, old: Optional[OCSConfig] = None
+    spec: ClusterSpec,
+    C: np.ndarray,
+    old: Optional[OCSConfig] = None,
+    mask=None,
 ) -> ReconfigResult:
     """Greedy per-OCS maximal matching under Uniform wiring [21-style].
 
     Each OCS hosts a symmetric matching; greedily saturate the heaviest
-    remaining demands first.  May leave demand unrealized (LTRR < 1)."""
+    remaining demands first.  May leave demand unrealized (LTRR < 1).
+    ``mask`` excludes pods whose ports on an OCS are failed — Uniform has
+    no clean-pair fallback, so every failure directly shrinks matchings."""
     t0 = time.perf_counter()
     C = np.asarray(C)
     H, P, _ = C.shape
+    ok = _uniform_pod_ok(mask, H, spec.k_spine, P)
     cfg = OCSConfig(spec, num_groups=H)
     for h in range(H):
         rem = C[h].astype(np.int64).copy()
         for k in range(spec.k_spine):
             matched = np.zeros(P, dtype=bool)
+            if ok is not None:
+                matched |= ~ok[h, k]
             iu, ju = np.nonzero(np.triu(rem, k=1))
             weights = rem[iu, ju]
             for idx in np.argsort(-weights):
@@ -176,7 +214,7 @@ def uniform_greedy(
                 rem[j, i] -= 1
                 cfg.x[h, k, i, j] = 1
                 cfg.x[h, k, j, i] = 1
-    cfg.validate()
+    cfg.validate(mask)
     return ReconfigResult(cfg, C, time.perf_counter() - t0)
 
 
@@ -186,6 +224,7 @@ def uniform_best_effort(
     old: Optional[OCSConfig] = None,
     restarts: int = 4,
     seed: int = 0,
+    mask=None,
 ) -> ReconfigResult:
     """Greedy multigraph edge coloring with K_spine colors (+ restarts).
 
@@ -198,6 +237,7 @@ def uniform_best_effort(
     t0 = time.perf_counter()
     C = np.asarray(C)
     H, P, _ = C.shape
+    ok = _uniform_pod_ok(mask, H, spec.k_spine, P)
     rng = np.random.default_rng(seed)
     best: Optional[OCSConfig] = None
     best_score = -1.0
@@ -209,8 +249,12 @@ def uniform_best_effort(
             for i, j in zip(iu.tolist(), ju.tolist()):
                 edges.extend([(i, j)] * int(C[h, i, j]))
             order = rng.permutation(len(edges)) if r else np.arange(len(edges))
-            # free[v] = boolean over colors
-            free = np.ones((P, spec.k_spine), dtype=bool)
+            # free[v] = boolean over colors (a masked slot is never free)
+            free = (
+                np.ones((P, spec.k_spine), dtype=bool)
+                if ok is None
+                else ok[h].T.copy()
+            )
             for e in order:
                 i, j = edges[int(e)]
                 both = np.nonzero(free[i] & free[j])[0]
@@ -224,7 +268,7 @@ def uniform_best_effort(
         if score > best_score:
             best, best_score = cfg, score
     assert best is not None
-    best.validate()
+    best.validate(mask)
     return ReconfigResult(best, C, time.perf_counter() - t0)
 
 
@@ -291,14 +335,18 @@ def uniform_exact_small(spec: ClusterSpec, C: np.ndarray) -> ReconfigResult:
 
 
 def helios_matching(
-    spec: ClusterSpec, C: np.ndarray, old: Optional[OCSConfig] = None
+    spec: ClusterSpec,
+    C: np.ndarray,
+    old: Optional[OCSConfig] = None,
+    mask=None,
 ) -> ReconfigResult:
     """Helios-style repeated max-weight matching, on Cross Wiring.
 
     For each even/odd OCS pair, extract a max-weight matching of the
     remaining (symmetric) demand via scipy's linear_sum_assignment on the
     demand matrix.  No optimality guarantee — included as the paper's
-    'Helios' comparison point.
+    'Helios' comparison point.  ``mask`` drops assigned circuits whose
+    slots are failed (best-effort degradation, no clean-pair relocation).
     """
     from scipy.optimize import linear_sum_assignment
 
@@ -310,19 +358,24 @@ def helios_matching(
     for h in range(H):
         rem = C[h].astype(np.int64).copy()
         for t in range(K2):
+            if mask is not None:
+                a_even = mask.allowed(h, 2 * t)
+                a_odd = mask.allowed(h, 2 * t + 1)
             w = rem.astype(np.float64)
             # maximize total weight of a directed sub-permutation
             rows, cols = linear_sum_assignment(-w)
             m = np.zeros((P, P), dtype=np.int8)
             for i, j in zip(rows, cols):
-                if rem[i, j] > 0:
+                if rem[i, j] > 0 and (
+                    mask is None or (a_even[i, j] and a_odd[j, i])
+                ):
                     m[i, j] = 1
             # keep symmetric consumption: even OCS carries m, odd carries mᵀ;
             # each unit consumes one bidirectional demand link.
             cfg.x[h, 2 * t] = m
             cfg.x[h, 2 * t + 1] = m.T
             rem -= np.minimum(rem, (m + m.T).astype(np.int64))
-    cfg.validate()
+    cfg.validate(mask)
     return ReconfigResult(cfg, C, time.perf_counter() - t0)
 
 
@@ -336,6 +389,7 @@ def check_ilp_constraints(
     cfg: OCSConfig,
     topology: str = "cross_wiring",
     require_exact: bool = True,
+    mask=None,
 ) -> None:
     """Assert the ILP model's constraints hold for ``cfg``.
 
@@ -343,6 +397,9 @@ def check_ilp_constraints(
     (2)(3) per-spine port budgets    (≤ K_spine egress/ingress)
     (4)(5) per-OCS sub-permutation
     (6) L2-compatibility             (Cross Wiring pairing / Uniform symmetry)
+
+    ``mask`` additionally asserts degraded-mode feasibility: no circuit on
+    a failed slot or through a drained/inactive pod.
     """
     x = cfg.x.astype(np.int64)
     realized = x.sum(axis=1)  # (H, P, P) directed circuits
@@ -350,7 +407,7 @@ def check_ilp_constraints(
         assert (realized == C).all(), "constraint (1): demand not met exactly"
     assert (x.sum(axis=(1, 3)) <= spec.k_spine).all(), "constraint (2)"
     assert (x.sum(axis=(1, 2)) <= spec.k_spine).all(), "constraint (3)"
-    cfg.validate()  # (4)(5)
+    cfg.validate(mask)  # (4)(5) + masked slots
     if topology == "cross_wiring":
         assert CrossWiring(spec).l2_feasible(cfg), "constraint (6): pairing"
     else:

@@ -140,14 +140,20 @@ class OCSConfig:
         r = self.realized_bidirectional().astype(np.float64)
         return r.sum(axis=0) / max(1, self.num_groups)
 
-    def validate(self) -> None:
-        """Assert per-OCS sub-permutation feasibility (constraints (4)(5))."""
+    def validate(self, mask=None) -> None:
+        """Assert per-OCS sub-permutation feasibility (constraints (4)(5)).
+
+        With a :class:`~repro.fault.masks.PortMask` given, additionally
+        assert that no circuit uses a failed slot or a drained/inactive
+        pod (degraded-mode feasibility)."""
         if self.x.min() < 0 or self.x.max() > 1:
             raise AssertionError("x must be binary")
         if (self.x.sum(axis=3) > 1).any():
             raise AssertionError("some OCS row sum > 1 (egress port reused)")
         if (self.x.sum(axis=2) > 1).any():
             raise AssertionError("some OCS col sum > 1 (ingress port reused)")
+        if mask is not None:
+            mask.check_config(self.x)
 
     def rewiring_distance(self, other: "OCSConfig") -> int:
         """Min-Rewiring objective (eq. 7): Σ |x - u|."""
@@ -214,14 +220,23 @@ class Uniform(PhysicalTopology):
         return bool(sym and nodiag)
 
 
-def demand_feasible(C: np.ndarray, spec: ClusterSpec) -> bool:
+def demand_feasible(C: np.ndarray, spec: ClusterSpec, mask=None) -> bool:
     """Check logical-topology feasibility conditions (11)(12) of the paper.
 
     ``C`` has shape ``(H, P, P)`` with ``C[h, i, j]`` = # of bidirectional
     links between the h-th spines of pods i and j.
+
+    With a :class:`~repro.fault.masks.PortMask`, the per-pod degree bound
+    tightens from ``K_spine`` to the mask's degraded budget (clean OCS
+    pairs only; zero for drained/inactive pods) — the feasibility regime
+    the degraded-mode MDMCF realizes exactly (see ``repro.fault.recover``).
     """
     if C.ndim != 3:
         raise ValueError("C must have shape (H, P, P)")
     sym = (C == np.transpose(C, (0, 2, 1))).all()
     deg = C.sum(axis=2)  # (H, P) row sums
-    return bool(sym and (deg <= spec.k_spine).all() and (C >= 0).all())
+    if mask is not None:
+        budget = mask.degree_budget()[: C.shape[0]]
+    else:
+        budget = spec.k_spine
+    return bool(sym and (deg <= budget).all() and (C >= 0).all())

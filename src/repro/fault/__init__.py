@@ -1,0 +1,53 @@
+"""Failure, repair & elastic-expansion resilience for the OCS cluster.
+
+``masks``   — :class:`PortMask`: which slots/OCSes/pods are usable now.
+``model``   — MTBF/MTTR renewal processes → timestamped event streams.
+``recover`` — degraded-mode demand clipping + recovery-policy cost models.
+
+The degraded-mode solvers themselves live with their healthy-path twins in
+``repro.core.reconfig`` (``mask=`` parameter); the event-driven scheduler
+(``repro.sim.scheduler``) consumes the event streams.
+"""
+from .masks import PortMask
+from .model import (
+    ExpandEvent,
+    FailureEvent,
+    FaultEvent,
+    FaultModel,
+    RepairEvent,
+    apply_event,
+    merge_events,
+)
+from .recover import (
+    CKPT_RESTART,
+    POLICIES,
+    REWIRE_AROUND,
+    SHRINK_COLLECTIVE,
+    checkpoint_bytes,
+    degrade_demand,
+    masked_aggregate_demand,
+    mdmcf_degraded,
+    restart_cost_s,
+    rollback_loss,
+)
+
+__all__ = [
+    "CKPT_RESTART",
+    "ExpandEvent",
+    "FailureEvent",
+    "FaultEvent",
+    "FaultModel",
+    "POLICIES",
+    "PortMask",
+    "REWIRE_AROUND",
+    "RepairEvent",
+    "SHRINK_COLLECTIVE",
+    "apply_event",
+    "checkpoint_bytes",
+    "degrade_demand",
+    "masked_aggregate_demand",
+    "mdmcf_degraded",
+    "merge_events",
+    "restart_cost_s",
+    "rollback_loss",
+]

@@ -1,0 +1,206 @@
+"""Port-level health masks over the OCS layer.
+
+A :class:`PortMask` records which physical resources of the cluster are
+currently unusable — individual transceiver/link slots (a pod's egress or
+ingress port on one OCS), whole OCSes, drained (failed) pods — plus which
+pods are *active* at all (elastic expansion: the physical wiring for up to
+``ClusterSpec.num_pods`` pods exists from day one, but only a prefix may be
+populated).  The mask is the single source of truth the degraded-mode
+control plane solves against:
+
+* it degrades the feasible-degree budget of a :class:`~repro.core.topology.
+  ClusterSpec` (``degree_budget``),
+* it validates :class:`~repro.core.topology.OCSConfig` objects
+  (``OCSConfig.validate(mask=...)`` delegates to the arrays here),
+* reconfiguration strategies exclude masked slots
+  (``mdmcf_reconfigure(..., mask=...)``).
+
+Cross Wiring pairs OCSes ``(2t, 2t+1)``; the degraded MDMCF solve uses only
+*clean* pairs — pairs with no failure on either OCS among up pods — which
+keeps Theorem 4.1's construction intact on the surviving hardware (see
+``repro.fault.recover`` for the argument).  ``clean_pairs``/``degree_budget``
+encode exactly that.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional
+
+import numpy as np
+
+__all__ = ["PortMask"]
+
+_DIRECTIONS = ("egress", "ingress", "both")
+
+
+class PortMask:
+    """Mutable health state of the OCS layer for ``num_groups`` spine groups.
+
+    Layered state (each layer fails/repairs independently):
+
+    * ``ocs_down[h, k]``      — whole OCS ``k`` of group ``h`` out of service.
+    * ``port_down_eg[h, k, p]`` / ``port_down_in[h, k, p]`` — pod ``p``'s
+      egress / ingress transceiver on OCS ``(h, k)`` dead.
+    * ``drained[p]``          — pod ``p`` failed / taken out of service.
+    * ``active[p]``           — pod ``p`` physically populated (expansion).
+    """
+
+    def __init__(self, num_pods: int, k_spine: int, num_groups: int):
+        if k_spine % 2:
+            raise ValueError("k_spine must be even (OCS pairing)")
+        self.num_pods = num_pods
+        self.k_spine = k_spine
+        self.num_groups = num_groups
+        H, K, P = num_groups, k_spine, num_pods
+        self.ocs_down = np.zeros((H, K), dtype=bool)
+        self.port_down_eg = np.zeros((H, K, P), dtype=bool)
+        self.port_down_in = np.zeros((H, K, P), dtype=bool)
+        self.drained = np.zeros(P, dtype=bool)
+        self.active = np.ones(P, dtype=bool)
+
+    @classmethod
+    def healthy(cls, spec, num_groups: Optional[int] = None) -> "PortMask":
+        """All-healthy mask sized for ``spec`` (a ClusterSpec)."""
+        H = num_groups if num_groups is not None else spec.num_ocs_groups
+        return cls(spec.num_pods, spec.k_spine, H)
+
+    def copy(self) -> "PortMask":
+        out = PortMask(self.num_pods, self.k_spine, self.num_groups)
+        out.ocs_down = self.ocs_down.copy()
+        out.port_down_eg = self.port_down_eg.copy()
+        out.port_down_in = self.port_down_in.copy()
+        out.drained = self.drained.copy()
+        out.active = self.active.copy()
+        return out
+
+    # ---- mutators --------------------------------------------------------
+
+    def fail_link(self, h: int, k: int, pod: int, direction: str = "both") -> None:
+        """Kill pod ``pod``'s transceiver on OCS ``(h, k)``.
+
+        ``direction='both'`` models a dead transceiver module (Tx and Rx);
+        'egress'/'ingress' a single dead fiber/laser."""
+        if direction not in _DIRECTIONS:
+            raise ValueError(f"direction must be one of {_DIRECTIONS}")
+        if direction in ("egress", "both"):
+            self.port_down_eg[h, k, pod] = True
+        if direction in ("ingress", "both"):
+            self.port_down_in[h, k, pod] = True
+
+    def repair_link(self, h: int, k: int, pod: int, direction: str = "both") -> None:
+        if direction in ("egress", "both"):
+            self.port_down_eg[h, k, pod] = False
+        if direction in ("ingress", "both"):
+            self.port_down_in[h, k, pod] = False
+
+    def fail_ocs(self, h: int, k: int) -> None:
+        self.ocs_down[h, k] = True
+
+    def repair_ocs(self, h: int, k: int) -> None:
+        # individually-failed transceivers on this OCS stay failed
+        self.ocs_down[h, k] = False
+
+    def fail_pod(self, pod: int) -> None:
+        self.drained[pod] = True
+
+    def repair_pod(self, pod: int) -> None:
+        self.drained[pod] = False
+
+    def expand(self, pods: Iterable[int]) -> None:
+        """Activate newly-populated pods (elastic expansion)."""
+        for p in pods:
+            self.active[p] = True
+
+    def set_active_count(self, n: int) -> None:
+        """Activate exactly the first ``n`` pods (initial partial deployment)."""
+        self.active[:] = False
+        self.active[:n] = True
+
+    # ---- derived views ---------------------------------------------------
+
+    def pod_up(self) -> np.ndarray:
+        """(P,) bool — pods that are populated and not drained."""
+        return self.active & ~self.drained
+
+    def egress_blocked(self) -> np.ndarray:
+        """(H, K, P) bool — pod p's egress slot on OCS (h, k) unusable."""
+        return self.ocs_down[:, :, None] | self.port_down_eg
+
+    def ingress_blocked(self) -> np.ndarray:
+        return self.ocs_down[:, :, None] | self.port_down_in
+
+    def clean_pairs(self, h: int) -> np.ndarray:
+        """Pair indices ``t`` whose OCS pair ``(2t, 2t+1)`` in group ``h``
+        carries no failure at all among up pods — the slots the degraded
+        MDMCF construction uses."""
+        up = self.pod_up()
+        eg = self.egress_blocked()[h][:, up]
+        ing = self.ingress_blocked()[h][:, up]
+        bad_ocs = eg.any(axis=1) | ing.any(axis=1)  # (K,)
+        bad_pair = bad_ocs[0::2] | bad_ocs[1::2]  # (K/2,)
+        return np.nonzero(~bad_pair)[0]
+
+    def degree_budget(self, style: str = "cross_wiring") -> np.ndarray:
+        """(H, P) int — per-pod bidirectional-degree budget per spine group
+        under the mask; down pods get 0.
+
+        ``style='cross_wiring'``: each clean OCS pair contributes up to 2
+        links per pod (one as circuit source on the even OCS, one as sink —
+        mirrored on the odd OCS); the budget is uniform over up pods, which
+        is what the degraded MDMCF realizes *exactly*.
+
+        ``style='uniform'``: per-pod count of OCSes where both of the pod's
+        ports work — finer-grained (a dead transceiver only costs its own
+        pod), but only an upper bound: Uniform's symmetric-matching
+        constraint already under-realizes heavy demands even fully healthy.
+        """
+        H, P = self.num_groups, self.num_pods
+        budget = np.zeros((H, P), dtype=np.int64)
+        up = self.pod_up()
+        if style == "uniform":
+            ok = ~(self.egress_blocked() | self.ingress_blocked())  # (H,K,P)
+            budget[:, up] = ok.sum(axis=1)[:, up]
+            return budget
+        for h in range(H):
+            budget[h, up] = min(self.k_spine, 2 * len(self.clean_pairs(h)))
+        return budget
+
+    def allowed(self, h: int, k: int) -> np.ndarray:
+        """(P, P) bool — directed circuit i→j permitted on OCS ``(h, k)``."""
+        up = self.pod_up()
+        eg_ok = ~self.egress_blocked()[h, k] & up
+        in_ok = ~self.ingress_blocked()[h, k] & up
+        return eg_ok[:, None] & in_ok[None, :]
+
+    def is_trivial(self) -> bool:
+        """True iff the mask constrains nothing (all healthy, all active)."""
+        return bool(
+            self.active.all()
+            and not self.drained.any()
+            and not self.ocs_down.any()
+            and not self.port_down_eg.any()
+            and not self.port_down_in.any()
+        )
+
+    def counts(self) -> Dict[str, int]:
+        return {
+            "failed_ports": int(self.port_down_eg.sum() + self.port_down_in.sum()),
+            "failed_ocs": int(self.ocs_down.sum()),
+            "drained_pods": int(self.drained.sum()),
+            "active_pods": int(self.active.sum()),
+        }
+
+    # ---- config validation ----------------------------------------------
+
+    def check_config(self, x: np.ndarray) -> None:
+        """Assert no circuit in ``x`` (shape (H', K, P, P), H' ≤ H) touches
+        a masked slot or a down pod."""
+        H = x.shape[0]
+        eg = self.egress_blocked()[:H]
+        ing = self.ingress_blocked()[:H]
+        if (x.astype(bool) & eg[:, :, :, None]).any():
+            raise AssertionError("config assigns a masked egress slot")
+        if (x.astype(bool) & ing[:, :, None, :]).any():
+            raise AssertionError("config assigns a masked ingress slot")
+        down = ~self.pod_up()
+        if x[:, :, down, :].any() or x[:, :, :, down].any():
+            raise AssertionError("config routes a drained/inactive pod")

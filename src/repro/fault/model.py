@@ -1,0 +1,183 @@
+"""Stochastic failure/repair processes and scripted fault scenarios.
+
+Each hardware class — transceiver/link slots, whole OCSes, pods — is an
+alternating renewal process: exponential up-times with the class's MTBF,
+exponential down-times with its MTTR.  :meth:`FaultModel.sample` draws every
+component's timeline over a horizon and merges them into one sorted stream
+of :class:`FailureEvent` / :class:`RepairEvent`.  :class:`ExpandEvent`
+models elastic expansion (new pods going live on a running cluster); it is
+always scripted — capacity growth is an operator action, not a Poisson one.
+
+Deterministic given the seed, so the event-driven simulator stays
+reproducible (``tests/test_sim.py::test_sim_determinism`` discipline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .masks import PortMask
+
+__all__ = [
+    "ExpandEvent",
+    "FailureEvent",
+    "FaultEvent",
+    "FaultModel",
+    "RepairEvent",
+    "apply_event",
+    "merge_events",
+]
+
+LINK, OCS, POD = "link", "ocs", "pod"
+_SCOPES = (LINK, OCS, POD)
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureEvent:
+    """A component going down at ``time``.
+
+    ``scope`` ∈ {'link', 'ocs', 'pod'}; ``h``/``k`` locate the OCS for
+    link/ocs scopes, ``pod`` the pod for link/pod scopes."""
+
+    time: float
+    scope: str
+    h: int = 0
+    k: int = 0
+    pod: int = 0
+
+    def __post_init__(self) -> None:
+        if self.scope not in _SCOPES:
+            raise ValueError(f"scope must be one of {_SCOPES}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RepairEvent:
+    """The matching component coming back at ``time``."""
+
+    time: float
+    scope: str
+    h: int = 0
+    k: int = 0
+    pod: int = 0
+
+    def __post_init__(self) -> None:
+        if self.scope not in _SCOPES:
+            raise ValueError(f"scope must be one of {_SCOPES}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpandEvent:
+    """Pods ``pods`` go live at ``time`` (elastic expansion)."""
+
+    time: float
+    pods: Tuple[int, ...]
+
+
+FaultEvent = Union[FailureEvent, RepairEvent, ExpandEvent]
+
+
+def apply_event(mask: PortMask, ev: FaultEvent) -> None:
+    """Mutate ``mask`` to reflect ``ev``."""
+    if isinstance(ev, ExpandEvent):
+        mask.expand(ev.pods)
+    elif isinstance(ev, FailureEvent):
+        if ev.scope == LINK:
+            mask.fail_link(ev.h, ev.k, ev.pod)
+        elif ev.scope == OCS:
+            mask.fail_ocs(ev.h, ev.k)
+        else:
+            mask.fail_pod(ev.pod)
+    elif isinstance(ev, RepairEvent):
+        if ev.scope == LINK:
+            mask.repair_link(ev.h, ev.k, ev.pod)
+        elif ev.scope == OCS:
+            mask.repair_ocs(ev.h, ev.k)
+        else:
+            mask.repair_pod(ev.pod)
+    else:
+        raise TypeError(f"unknown fault event {ev!r}")
+
+
+def merge_events(*streams: Sequence[FaultEvent]) -> List[FaultEvent]:
+    """Merge event streams into one time-sorted list (stable)."""
+    out: List[FaultEvent] = []
+    for s in streams:
+        out.extend(s)
+    out.sort(key=lambda e: e.time)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Per-class MTBF/MTTR failure model for one cluster.
+
+    ``None`` MTBF disables a class.  Times are seconds.  Defaults sit in the
+    published ballpark for optical plants scaled to simulation horizons:
+    transceivers dominate failure counts, whole-OCS and pod failures are
+    order(s) of magnitude rarer.
+    """
+
+    num_pods: int
+    k_spine: int
+    num_groups: int
+    link_mtbf_s: Optional[float] = None
+    link_mttr_s: float = 1800.0
+    ocs_mtbf_s: Optional[float] = None
+    ocs_mttr_s: float = 3600.0
+    pod_mtbf_s: Optional[float] = None
+    pod_mttr_s: float = 7200.0
+    seed: int = 0
+
+    def sample(self, horizon_s: float) -> List[FaultEvent]:
+        """Draw every component's alternating up/down timeline to
+        ``horizon_s`` and merge.  Repairs falling past the horizon are kept
+        so a consumer can always pair failures with repairs."""
+        rng = np.random.default_rng(self.seed)
+        events: List[FaultEvent] = []
+
+        def renewal(mtbf: float, mttr: float, make) -> None:
+            t = float(rng.exponential(mtbf))
+            while t < horizon_s:
+                down = float(rng.exponential(mttr))
+                fail, rep = make(t, t + down)
+                events.append(fail)
+                events.append(rep)
+                t += down + float(rng.exponential(mtbf))
+
+        H, K, P = self.num_groups, self.k_spine, self.num_pods
+        if self.link_mtbf_s is not None:
+            for h in range(H):
+                for k in range(K):
+                    for p in range(P):
+                        renewal(
+                            self.link_mtbf_s,
+                            self.link_mttr_s,
+                            lambda a, b, h=h, k=k, p=p: (
+                                FailureEvent(a, LINK, h=h, k=k, pod=p),
+                                RepairEvent(b, LINK, h=h, k=k, pod=p),
+                            ),
+                        )
+        if self.ocs_mtbf_s is not None:
+            for h in range(H):
+                for k in range(K):
+                    renewal(
+                        self.ocs_mtbf_s,
+                        self.ocs_mttr_s,
+                        lambda a, b, h=h, k=k: (
+                            FailureEvent(a, OCS, h=h, k=k),
+                            RepairEvent(b, OCS, h=h, k=k),
+                        ),
+                    )
+        if self.pod_mtbf_s is not None:
+            for p in range(P):
+                renewal(
+                    self.pod_mtbf_s,
+                    self.pod_mttr_s,
+                    lambda a, b, p=p: (
+                        FailureEvent(a, POD, pod=p),
+                        RepairEvent(b, POD, pod=p),
+                    ),
+                )
+        return merge_events(events)

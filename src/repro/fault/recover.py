@@ -1,0 +1,239 @@
+"""Degraded-mode topology engineering and recovery policies.
+
+Degraded-mode solve — why Cross Wiring stays polynomial and exact
+-----------------------------------------------------------------
+Under a :class:`~repro.fault.masks.PortMask`, the degraded MDMCF
+(`mdmcf_reconfigure(..., mask=...)`) restricts each spine group ``h`` to
+its *clean* OCS pairs — pairs ``(2t, 2t+1)`` with zero failures among up
+pods.  The construction of Theorem 4.1 is untouched on those pairs:
+
+1. Feasibility under the mask means the demand ``C[h]`` is symmetric with
+   per-pod degree ≤ ``2·|clean(h)|`` (``PortMask.degree_budget``).
+2. Theorem 3.1 (`symmetric_split`, Eulerian orientation, O(E)) yields
+   ``A`` with ``A + Aᵀ = C[h]`` and row/col sums ≤ ``|clean(h)|``.
+3. König edge coloring (`edge_color_bipartite`,
+   O(E·(P + |clean|))) decomposes ``A`` into ``|clean(h)|``
+   sub-permutations — guaranteed to exist because row/col sums bound the
+   bipartite multigraph's maximum degree.
+4. Each color class lands on a clean pair (even OCS carries ``M``, odd
+   carries ``Mᵀ``), Hungarian-matched to old slots for Min-Rewiring.
+
+Every step is the healthy-case algorithm on a smaller slot set, so the
+whole solve is polynomial and realizes any mask-feasible demand *exactly*
+(LTRR = 1) while touching no masked slot — the property
+``tests/test_fault.py`` checks.  The clean-pair restriction is
+conservative: a single dead transceiver retires its whole OCS pair (2 of
+``K_spine`` degrees) for that group rather than just one circuit.  That
+trade buys the exactness guarantee; Uniform has no analogous move — its
+per-OCS symmetric-matching constraint already under-realizes heavy
+demands, and port failures only shrink the matchings further (it degrades
+non-gracefully, which ``benchmarks/bench_availability.py`` measures).
+
+Recovery policies (consumed by ``sim/scheduler.py``)
+----------------------------------------------------
+* ``rewire-around``  — OCS-only repair: jobs keep running; the control
+  plane re-solves around the masked slots and jobs absorb the (usually
+  small) bandwidth loss via the flow model.  Cannot resurrect a dead pod.
+* ``shrink-collective`` — a job that loses a pod drops it from its DP ring
+  / EP mesh, replans its collectives via ``repro.dist`` over the surviving
+  pods, and continues with proportionally less compute.
+* ``checkpoint-restart`` — the job rolls back to its last checkpoint and
+  restarts; the restart cost is charged from the checkpoint state size
+  (the full Adam ``TrainState`` that ``ckpt/manager`` serializes).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..core.logical import shave_to_budget
+from ..dist.collectives import MODEL_PROFILES
+from .masks import PortMask
+
+__all__ = [
+    "CKPT_STATE_FACTOR",
+    "PER_GPU_RESTORE_BW",
+    "POLICIES",
+    "RESTART_FIXED_S",
+    "REWIRE_AROUND",
+    "SHRINK_COLLECTIVE",
+    "CKPT_RESTART",
+    "checkpoint_bytes",
+    "degrade_demand",
+    "masked_aggregate_demand",
+    "mdmcf_degraded",
+    "restart_cost_s",
+    "rollback_loss",
+]
+
+REWIRE_AROUND = "rewire_around"
+SHRINK_COLLECTIVE = "shrink_collective"
+CKPT_RESTART = "ckpt_restart"
+POLICIES = (REWIRE_AROUND, SHRINK_COLLECTIVE, CKPT_RESTART)
+
+# Checkpoint state vs bf16 gradient bytes: bf16 params (1×) + fp32 master
+# params (2×) + two fp32 Adam moments (4×) = 7× — the pytree
+# ``ckpt/manager.save_checkpoint`` flattens for an Adam TrainState.
+CKPT_STATE_FACTOR = 7.0
+PER_GPU_RESTORE_BW = 0.5e9  # bytes/s of restore I/O each GPU contributes
+RESTART_FIXED_S = 120.0  # reschedule + process launch + NCCL/mesh re-init
+
+
+def degrade_demand(C: np.ndarray, mask: PortMask) -> np.ndarray:
+    """Clip a logical-topology demand to what the mask leaves feasible.
+
+    Returns a copy of ``C`` (shape (H, P, P)) with down pods zeroed and
+    every pod's per-group degree shaved (``shave_to_budget``, fattest-pair
+    first) to ``mask.degree_budget()``.  The result satisfies
+    ``demand_feasible(C, spec, mask=mask)`` by construction.
+    """
+    C = np.array(C, dtype=np.int64, copy=True)
+    down = ~mask.pod_up()
+    C[:, down, :] = 0
+    C[:, :, down] = 0
+    budget = mask.degree_budget()
+    for h in range(C.shape[0]):
+        shave_to_budget(C[h], budget[h].copy())
+    return C
+
+
+def masked_aggregate_demand(
+    num_pods: int, num_groups: int, edge_dicts, mask: PortMask
+) -> np.ndarray:
+    """Aggregate per-job edge dicts ((i, j) → links) into an ``(H, P, P)``
+    demand clipped job-by-job to the mask's port-granular budget — shared
+    by the scheduler and the availability benchmark so their clipping
+    policies cannot diverge."""
+    C = np.zeros((num_groups, num_pods, num_pods), dtype=np.int64)
+    budgets = mask.degree_budget("uniform")
+    for edges in edge_dicts:
+        base = np.zeros((num_pods, num_pods), dtype=np.int64)
+        for (i, j), w in edges.items():
+            base[i, j] += w
+            base[j, i] += w
+        for h in range(num_groups):
+            ring = base.copy()
+            shave_to_budget(ring, budgets[h])
+            budgets[h] -= ring.sum(axis=1)
+            C[h] += ring
+    return C
+
+
+def mdmcf_degraded(spec, C: np.ndarray, old=None, mask: Optional[PortMask] = None):
+    """Production degraded-mode Cross Wiring solve: exact structure, local
+    repair around failures.
+
+    1. Solve the *healthy* Theorem 4.1 construction on all ``K_spine/2``
+       OCS pairs (symmetric split + König edge coloring, warm-started from
+       ``old`` — unchanged polynomial machinery).
+    2. Hungarian-assign color classes to OCS pairs minimizing the number
+       of circuits that would land on masked slots (violations dominate;
+       rewiring overlap with ``old`` breaks ties, preserving the
+       Min-Rewiring objective).  With few scattered failures an assignment
+       with zero violations usually exists — the class layout simply
+       routes *around* the dead slots.
+    3. Drop the violating circuits only, then greedily re-place those
+       units first-fit on any pair with a free healthy slot (the odd OCS
+       always carries the even transpose, so L2 pairing is preserved).
+
+    Every step is polynomial; no masked slot is ever assigned; with an
+    all-healthy mask this *is* ``mdmcf_reconfigure``.  Unlike
+    ``mdmcf_reconfigure(mask=...)`` — the provably-exact solver for
+    demands within the conservative clean-pair budget — this path accepts
+    any demand within the port-granular budget and degrades gracefully
+    (LTRR < 1 only for units no healthy slot can carry).
+    """
+    import time as _time
+
+    from scipy.optimize import linear_sum_assignment
+
+    from ..core.decomposition import edge_color_bipartite, symmetric_split
+    from ..core.reconfig import ReconfigResult, mdmcf_reconfigure
+    from ..core.topology import OCSConfig
+
+    if mask is None or mask.is_trivial():
+        return mdmcf_reconfigure(spec, C, old=old)
+    t0 = _time.perf_counter()
+    C = np.asarray(C)
+    H, P, _ = C.shape
+    K2 = spec.k_spine // 2
+    cfg = OCSConfig(spec, num_groups=H)
+    for h in range(H):
+        A = symmetric_split(C[h])
+        warm = old.x[h, 0::2] if old is not None else None
+        colors = edge_color_bipartite(A, K2, warm=warm)
+        cint = colors.astype(np.int64)
+        # ok[t, i, j]: circuit i→j healthy on even OCS 2t AND its mirror
+        # j→i healthy on odd OCS 2t+1 (the L2 pairing needs both)
+        a_even = np.stack([mask.allowed(h, 2 * t) for t in range(K2)])
+        a_odd = np.stack([mask.allowed(h, 2 * t + 1) for t in range(K2)])
+        ok = a_even & np.transpose(a_odd, (0, 2, 1))
+        viol = np.einsum("cij,tij->ct", cint, (~ok).astype(np.int64))
+        cost = viol * (4 * P + 1)
+        if old is not None:
+            old_even = old.x[h, 0::2].astype(np.int64)
+            old_odd = old.x[h, 1::2].astype(np.int64)
+            cost = cost - (
+                np.einsum("cij,tij->ct", cint, old_even)
+                + np.einsum("cji,tij->ct", cint, old_odd)
+            )
+        classes, pairs = linear_sum_assignment(cost)
+        rem = np.zeros((P, P), dtype=np.int64)  # dropped bidirectional units
+        row_used = np.zeros((K2, P), dtype=bool)  # even-OCS egress taken
+        col_used = np.zeros((K2, P), dtype=bool)  # even-OCS ingress taken
+        for c, s in zip(classes, pairs):
+            m = colors[c].astype(bool)
+            keep = m & ok[s]
+            cfg.x[h, 2 * s][keep] = 1
+            cfg.x[h, 2 * s + 1][keep.T] = 1
+            row_used[s] = keep.any(axis=1)
+            col_used[s] = keep.any(axis=0)
+            di, dj = np.nonzero(m & ~ok[s])
+            for i, j in zip(di.tolist(), dj.tolist()):
+                rem[i, j] += 1
+                rem[j, i] += 1
+        # salvage: first-fit each dropped unit onto any free healthy slot;
+        # orientation on the even OCS is free (odd carries the transpose)
+        iu, ju = np.nonzero(np.triu(rem, k=1))
+        for idx in np.argsort(-rem[iu, ju], kind="stable"):
+            i, j = int(iu[idx]), int(ju[idx])
+            for _unit in range(int(rem[i, j])):
+                placed = False
+                for t in range(K2):
+                    for a, b in ((i, j), (j, i)):
+                        if row_used[t, a] or col_used[t, b] or not ok[t, a, b]:
+                            continue
+                        cfg.x[h, 2 * t, a, b] = 1
+                        cfg.x[h, 2 * t + 1, b, a] = 1
+                        row_used[t, a] = col_used[t, b] = True
+                        placed = True
+                        break
+                    if placed:
+                        break
+                if not placed:
+                    break  # no healthy slot anywhere for this link
+    cfg.validate(mask)
+    return ReconfigResult(cfg, C, _time.perf_counter() - t0)
+
+
+def checkpoint_bytes(model: str) -> float:
+    """Full training-state checkpoint size of ``model`` (see module doc)."""
+    prof = MODEL_PROFILES.get(model)
+    grad = prof.grad_bytes if prof is not None else 14e9
+    return CKPT_STATE_FACTOR * grad
+
+
+def restart_cost_s(model: str, num_gpus: int) -> float:
+    """Wall seconds to restart a job from its last checkpoint: fixed
+    reschedule/re-init overhead plus sharded restore of the checkpoint
+    state at ``PER_GPU_RESTORE_BW`` per participating GPU."""
+    io = checkpoint_bytes(model) / (max(1, num_gpus) * PER_GPU_RESTORE_BW)
+    return RESTART_FIXED_S + io
+
+
+def rollback_loss(progress_s: float, ckpt_interval_s: float) -> float:
+    """Service-seconds of work lost rolling back to the last checkpoint."""
+    if ckpt_interval_s <= 0:
+        return progress_s
+    return progress_s - ckpt_interval_s * (progress_s // ckpt_interval_s)

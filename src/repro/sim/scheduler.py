@@ -44,6 +44,22 @@ from ..core.reconfig import (
 from ..core.topology import ClusterSpec, OCSConfig
 from ..dist import collectives as dist_collectives
 from ..dist import demand as dist_demand
+from ..fault import (
+    ExpandEvent,
+    FailureEvent,
+    FaultEvent,
+    POLICIES,
+    PortMask,
+    REWIRE_AROUND,
+    RepairEvent,
+    SHRINK_COLLECTIVE,
+    apply_event,
+    masked_aggregate_demand,
+    mdmcf_degraded,
+    restart_cost_s,
+    rollback_loss,
+)
+from ..fault.recover import RESTART_FIXED_S
 from . import flowsim
 from .trace import COMM_FRACTION
 
@@ -75,6 +91,15 @@ class SimConfig:
     sim_groups: int = 2  # OCS groups actually solved (demand is identical
     # across groups; measured runtime is scaled to all groups)
     timing: str = "modeled"  # modeled (deterministic) | measured (wall clock)
+    # ---- resilience (repro.fault) ---------------------------------------
+    recovery_policy: str = REWIRE_AROUND  # | shrink_collective | ckpt_restart
+    ckpt_interval_s: float = 1800.0  # checkpoint cadence for ckpt_restart
+    active_pods: Optional[int] = None  # initially populated pods (expansion
+    # scenarios; None → all num_pods live from t=0)
+
+    def __post_init__(self) -> None:
+        if self.recovery_policy not in POLICIES:
+            raise ValueError(f"recovery_policy must be one of {POLICIES}")
 
     @property
     def spec(self) -> ClusterSpec:
@@ -97,6 +122,9 @@ class JobRecord:
     finish: float = math.nan
     reconfig_s: float = 0.0
     min_phi: float = 1.0
+    restarts: int = 0  # times the job was killed and requeued (pod failure)
+    shrinks: int = 0  # times the job dropped a failed pod and continued
+    lost_s: float = 0.0  # service-seconds of progress lost to rollbacks
 
     @property
     def jrt(self) -> float:
@@ -114,7 +142,7 @@ class JobRecord:
 class _Running:
     __slots__ = (
         "job", "placement", "edges", "comm_frac", "progress", "slowdown",
-        "last_t", "record",
+        "last_t", "record", "compute_scale", "cur_gpus",
     )
 
     def __init__(
@@ -124,6 +152,7 @@ class _Running:
         edges,
         comm_frac: float,
         record: JobRecord,
+        start_t: Optional[float] = None,
     ):
         self.job = job
         self.placement = placement
@@ -131,8 +160,12 @@ class _Running:
         self.comm_frac = comm_frac
         self.progress = 0.0
         self.slowdown = 1.0
-        self.last_t = record.start
+        self.last_t = record.start if start_t is None else start_t
         self.record = record
+        # shrink-collective state: GPUs still alive and the resulting
+        # compute stretch (service_time is calibrated to num_gpus)
+        self.cur_gpus = job.num_gpus
+        self.compute_scale = 1.0
 
     @property
     def pods(self) -> Dict[int, int]:
@@ -172,7 +205,13 @@ def _place(
 
 
 class Simulator:
-    def __init__(self, cfg: SimConfig, jobs: Sequence[Job], seed: int = 0):
+    def __init__(
+        self,
+        cfg: SimConfig,
+        jobs: Sequence[Job],
+        seed: int = 0,
+        fault_events: Optional[Sequence[FaultEvent]] = None,
+    ):
         self.cfg = cfg
         self.spec = cfg.spec
         self.jobs = list(jobs)
@@ -185,6 +224,30 @@ class Simulator:
         self.reconfig_calls = 0
         self.reconfig_wall = 0.0
         self.ltrr_samples: List[float] = []
+        # ---- resilience state (repro.fault) ------------------------------
+        self.mask = PortMask(cfg.num_pods, cfg.k_spine, cfg.sim_groups)
+        if cfg.active_pods is not None:
+            self.mask.set_active_count(cfg.active_pods)
+            self.free[cfg.active_pods:] = 0
+        self.fault_events: List[FaultEvent] = sorted(
+            fault_events or [], key=lambda e: e.time
+        )
+        self.carry_progress: Dict[int, float] = {}  # jid → progress kept
+        self.fault_counts = {"failures": 0, "repairs": 0, "expands": 0}
+        self.restarts = 0
+        self.shrinks = 0
+        self.lost_gpu_s = 0.0  # GPU-seconds of work destroyed by rollbacks
+        self._pod_down_since: Dict[int, float] = {}
+        self._gpu_down_s = 0.0  # GPU-seconds pods spent failed
+        self._cap_t = 0.0  # capacity integral (expansion-aware)
+        self._cap_gpus = int(self.mask.active.sum()) * self.spec.gpus_per_pod
+        self._cap_gpu_s = 0.0
+        self._end_time = 0.0
+
+    def _mask_arg(self) -> Optional[PortMask]:
+        """The mask handed to strategies: None while fully healthy, so the
+        healthy path stays byte-for-byte identical to the fault-free sim."""
+        return None if self.mask.is_trivial() else self.mask
 
     # ---- control plane -----------------------------------------------------
 
@@ -202,19 +265,29 @@ class Simulator:
         return max(1, int(round(links)))
 
     def _aggregate_demand(self) -> np.ndarray:
-        """Clipped symmetric demand over sim_groups (identical per group)."""
+        """Clipped symmetric demand over sim_groups (identical per group
+        while healthy; per-group once the mask degrades budgets)."""
         P, K, H = self.cfg.num_pods, self.cfg.k_spine, self.cfg.sim_groups
         C = np.zeros((H, P, P), dtype=np.int64)
-        budget = np.full(P, K, dtype=np.int64)
-        for r in self.running.values():
-            ring = np.zeros((P, P), dtype=np.int64)
-            for (i, j), links in r.edges.items():
-                ring[i, j] += links
-                ring[j, i] += links
-            shave_to_budget(ring, budget)
-            budget -= ring.sum(axis=1)
-            C[:] += ring[None]
-        return C
+        mask = self._mask_arg()
+        if mask is None:
+            budget = np.full(P, K, dtype=np.int64)
+            for r in self.running.values():
+                ring = np.zeros((P, P), dtype=np.int64)
+                for (i, j), links in r.edges.items():
+                    ring[i, j] += links
+                    ring[j, i] += links
+                shave_to_budget(ring, budget)
+                budget -= ring.sum(axis=1)
+                C[:] += ring[None]
+            return C
+        # port-granular upper bound for every architecture: strategies do
+        # their own structural degradation (clean-pair core + salvage for
+        # Cross Wiring, shrunken matchings for Uniform); what they cannot
+        # realize surfaces as phi < 1 in the flow model
+        return masked_aggregate_demand(
+            P, H, [r.edges for r in self.running.values()], mask
+        )
 
     def _reconfigure(self) -> Tuple[Optional[OCSConfig], float]:
         """Run the strategy; returns (config, computation seconds)."""
@@ -224,17 +297,24 @@ class Simulator:
         C = self._aggregate_demand()
         spec, H_full = self.spec, self.spec.num_ocs_groups
         scale = H_full / self.cfg.sim_groups
+        mask = self._mask_arg()
         t0 = time.perf_counter()
         if st in ("mdmcf", "itv_ilp"):
-            res = mdmcf_reconfigure(spec, C, old=self.old_config)
+            if mask is None:
+                res = mdmcf_reconfigure(spec, C, old=self.old_config)
+            else:
+                res = mdmcf_degraded(spec, C, old=self.old_config, mask=mask)
         elif st == "mcf":
-            res = mdmcf_cold(spec, C)
+            if mask is None:
+                res = mdmcf_cold(spec, C)
+            else:
+                res = mdmcf_degraded(spec, C, old=None, mask=mask)
         elif st == "greedy":
-            res = uniform_greedy(spec, C)
+            res = uniform_greedy(spec, C, mask=mask)
         elif st == "uniform_ilp":
-            res = uniform_best_effort(spec, C)
+            res = uniform_best_effort(spec, C, mask=mask)
         elif st == "helios":
-            res = helios_matching(spec, C)
+            res = helios_matching(spec, C, mask=mask)
         else:
             raise ValueError(f"unknown strategy {st!r}")
         measured = (time.perf_counter() - t0) * scale
@@ -272,18 +352,117 @@ class Simulator:
         for jid, r in self.running.items():
             r.advance(now)
             p = phi.get(jid, 1.0)
-            r.slowdown = flowsim.job_slowdown(r.comm_frac, p)
+            # compute_scale > 1 after shrink-collective: fewer GPUs do the
+            # same work, on top of any communication stretch
+            r.slowdown = r.compute_scale * flowsim.job_slowdown(r.comm_frac, p)
             r.record.min_phi = min(r.record.min_phi, p)
+
+    # ---- fault handling --------------------------------------------------
+
+    def _restart_job(self, now: float, r: _Running, from_scratch: bool) -> float:
+        """Kill ``r`` (pod failure), release its GPUs, requeue it.
+
+        ``from_scratch`` (rewire-around: no checkpoint infrastructure)
+        loses all progress; otherwise roll back to the last checkpoint and
+        charge the checkpoint-restore cost.  Returns when the job is ready
+        to be queued again."""
+        jid = r.job.job_id
+        del self.running[jid]
+        for p, n in r.pods.items():
+            self.free[p] += n
+        if from_scratch:
+            # nothing to restore: fixed reschedule/re-init overhead only
+            lost, cost = r.progress, RESTART_FIXED_S
+        else:
+            lost = rollback_loss(r.progress, self.cfg.ckpt_interval_s)
+            cost = restart_cost_s(r.job.model, r.job.num_gpus)
+        self.carry_progress[jid] = r.progress - lost
+        r.record.restarts += 1
+        r.record.lost_s += lost
+        self.restarts += 1
+        self.lost_gpu_s += lost * r.job.num_gpus
+        return now + cost
+
+    def _shrink_job(self, now: float, r: _Running, pod: int) -> None:
+        """Drop ``pod`` from a running job's collectives and continue on
+        the surviving GPUs (shrink-collective policy)."""
+        lost_gpus = r.placement.pods.pop(pod)
+        self.free[pod] += lost_gpus
+        r.cur_gpus -= lost_gpus
+        r.compute_scale = r.job.num_gpus / r.cur_gpus
+        pods_left = sorted(r.placement.pods)
+        if len(pods_left) >= 2:
+            links = self._ring_links(r.job, r.placement.pods)
+            order = dist_demand.ring_order(pods_left, self.old_config, links=links)
+            r.edges = dist_demand.job_edges(
+                r.job.model, order, links, ep=r.job.ep, pp=r.job.pp, tp=r.job.tp
+            )
+            r.comm_frac = self._comm_fraction(r.job, len(pods_left), links)
+        else:
+            order, r.edges, r.comm_frac = tuple(pods_left), {}, 0.0
+        r.placement = Placement(r.job.job_id, r.placement.pods, ring_order=order)
+        r.record.shrinks += 1
+        self.shrinks += 1
+
+    def _apply_fault(self, now: float, ev: FaultEvent) -> List[Tuple[float, int]]:
+        """Update mask/capacity/victims for one event.  Returns requeue
+        (ready_time, job_id) pairs for jobs killed by the event."""
+        requeue: List[Tuple[float, int]] = []
+        pod_was_up = self.mask.pod_up()
+        was_active = self.mask.active.copy()
+        apply_event(self.mask, ev)
+        if isinstance(ev, ExpandEvent):
+            self.fault_counts["expands"] += 1
+            self._cap_gpu_s += self._cap_gpus * (now - self._cap_t)
+            self._cap_t = now
+            self._cap_gpus = int(self.mask.active.sum()) * self.spec.gpus_per_pod
+            for p in ev.pods:
+                if not was_active[p]:  # re-announcing a live pod is a no-op
+                    self.free[p] = self.spec.gpus_per_pod
+            return requeue
+        if isinstance(ev, FailureEvent):
+            self.fault_counts["failures"] += 1
+            if ev.scope == "pod" and pod_was_up[ev.pod]:
+                self._pod_down_since[ev.pod] = now
+                policy = self.cfg.recovery_policy
+                victims = [
+                    r for r in list(self.running.values()) if ev.pod in r.pods
+                ]
+                for r in victims:
+                    if policy == SHRINK_COLLECTIVE and len(r.pods) > 1:
+                        self._shrink_job(now, r, ev.pod)
+                    else:
+                        # rewire-around has no checkpoints to fall back on —
+                        # a dead pod means losing the whole run so far
+                        scratch = policy == REWIRE_AROUND
+                        ready = self._restart_job(now, r, from_scratch=scratch)
+                        requeue.append((ready, r.job.job_id))
+        elif isinstance(ev, RepairEvent):
+            self.fault_counts["repairs"] += 1
+            if ev.scope == "pod":
+                t0 = self._pod_down_since.pop(ev.pod, None)
+                if t0 is not None:
+                    self._gpu_down_s += (now - t0) * self.spec.gpus_per_pod
+        return requeue
 
     # ---- main loop -------------------------------------------------------------
 
-    def run(self) -> List[JobRecord]:
-        ARRIVE, FINISH = 0, 1
-        ev: List[Tuple[float, int, int, int]] = []  # (t, kind, seq, job_id)
+    def run(self, until: Optional[float] = None) -> List[JobRecord]:
+        """Drain the event heap (arrivals, finishes, faults, requeues).
+
+        ``until`` caps simulated time (goodput/availability accounting over
+        a fixed horizon); running jobs are advanced to the cap and left
+        unfinished (``finish`` stays NaN)."""
+        ARRIVE, FINISH, FAULT, REQUEUE = 0, 1, 2, 3
+        ev: List[Tuple[float, int, int, int]] = []  # (t, kind, seq, payload)
         seq = 0
         for j in self.jobs:
             heapq.heappush(ev, (j.arrival, ARRIVE, seq, j.job_id))
             seq += 1
+        for idx, fe in enumerate(self.fault_events):
+            if until is None or fe.time <= until:
+                heapq.heappush(ev, (fe.time, FAULT, seq, idx))
+                seq += 1
         finish_version: Dict[int, int] = {}
 
         def schedule_finish(now: float, r: _Running):
@@ -296,12 +475,30 @@ class Simulator:
             for r in self.running.values():
                 schedule_finish(now, r)
 
+        def reconfigure_now(now: float, skip_pause_for: Optional[int] = None):
+            """Re-solve the control plane; OCS switching pause hits running
+            jobs whose circuits move (min-rewiring keeps this set small;
+            Table 1 shows the effect is tiny)."""
+            config, comp_s = self._reconfigure()
+            if self.old_config is not None and config is not None:
+                changed = config.rewiring_distance(self.old_config)
+                if changed:
+                    for other in self.running.values():
+                        if other.job.job_id != skip_pause_for:
+                            other.progress = max(
+                                0.0, other.progress - OCS_SWITCH_S
+                            )
+            self.old_config = config
+            return comp_s
+
         def try_start(now: float) -> bool:
             """FCFS head-of-queue; returns True if a job started."""
             if not self.queue:
                 return False
             job = self.queue[0]
-            pods = _place(self.free, self.spec.gpus_per_pod, job.num_gpus)
+            up = self.mask.pod_up()
+            free_now = np.where(up, self.free, 0)
+            pods = _place(free_now, self.spec.gpus_per_pod, job.num_gpus)
             if pods is None:
                 return False
             self.queue.pop(0)
@@ -319,29 +516,27 @@ class Simulator:
             )
             rec = self.records[job.job_id]
             alpha = self._comm_fraction(job, len(pods), links)
-            run = _Running(job, placement, edges, alpha, rec)
+            start_t = now  # refined below once reconfig time is known
+            run = _Running(job, placement, edges, alpha, rec, start_t=start_t)
+            run.progress = self.carry_progress.pop(job.job_id, 0.0)
             self.running[job.job_id] = run
-            config, comp_s = self._reconfigure()
-            rec.reconfig_s = comp_s
-            rec.start = now + comp_s
-            run.last_t = rec.start
-            # OCS switching pause hits impacted running jobs (min-rewiring
-            # keeps this set small; Table 1 shows the effect is tiny)
-            if self.old_config is not None and config is not None:
-                changed = config.rewiring_distance(self.old_config)
-                if changed:
-                    for other in self.running.values():
-                        if other.job.job_id != job.job_id:
-                            other.progress = max(
-                                0.0, other.progress - OCS_SWITCH_S
-                            )
-            self.old_config = config
-            self._refresh_slowdowns(max(now, rec.start), config)
-            reschedule_all(max(now, rec.start))
+            comp_s = reconfigure_now(now, skip_pause_for=job.job_id)
+            rec.reconfig_s += comp_s
+            start_t = now + comp_s
+            if math.isnan(rec.start):
+                rec.start = start_t  # first start only: JWT is queue wait
+            run.last_t = start_t
+            self._refresh_slowdowns(max(now, start_t), self.old_config)
+            reschedule_all(max(now, start_t))
             return True
 
+        last_t = 0.0
         while ev:
             t, kind, sq, jid = heapq.heappop(ev)
+            if until is not None and t > until:
+                last_t = until
+                break
+            last_t = t
             if kind == FINISH:
                 if finish_version.get(jid) != sq or jid not in self.running:
                     continue  # stale event
@@ -354,11 +549,73 @@ class Simulator:
                 reschedule_all(t)
                 while try_start(t):
                     pass
-            else:
+            elif kind == FAULT:
+                for r in self.running.values():
+                    r.advance(t)
+                requeue = self._apply_fault(t, self.fault_events[jid])
+                for ready, rq_jid in requeue:
+                    heapq.heappush(ev, (ready, REQUEUE, seq, rq_jid))
+                    seq += 1
+                # re-solve around the new mask; surviving jobs absorb the
+                # capacity change through the flow model
+                reconfigure_now(t)
+                self._refresh_slowdowns(t, self.old_config)
+                reschedule_all(t)
+                while try_start(t):
+                    pass
+            else:  # ARRIVE / REQUEUE
                 self.queue.append(self.jobs[jid])
                 while try_start(t):
                     pass
+        if until is not None:
+            # the heap may drain before the requested horizon; accounting
+            # (capacity integral, downtime) still covers the full window
+            last_t = until
+        self._end_time = last_t
+        for r in self.running.values():
+            r.advance(last_t)
+        self._cap_gpu_s += self._cap_gpus * (last_t - self._cap_t)
+        self._cap_t = last_t
+        for p, t0 in self._pod_down_since.items():
+            self._gpu_down_s += (last_t - t0) * self.spec.gpus_per_pod
+        self._pod_down_since = {}
         return [self.records[j.job_id] for j in self.jobs]
+
+    # ---- resilience metrics ----------------------------------------------
+
+    def fault_summary(self) -> Dict[str, float]:
+        """Goodput / availability / disruption metrics of the finished run.
+
+        *Goodput* is useful delivered work (progress that survived, in
+        GPU-seconds at each job's full size) over the capacity integral
+        (expansion-aware).  *Availability* is the share of capacity-time
+        not lost to failed pods.  See EXPERIMENTS.md §Resilience."""
+        useful = 0.0
+        for rec in self.records.values():
+            r = self.running.get(rec.job.job_id)
+            if r is not None:
+                useful += r.progress * rec.job.num_gpus
+            elif math.isfinite(rec.finish):
+                useful += rec.job.service_time * rec.job.num_gpus
+            else:
+                useful += (
+                    self.carry_progress.get(rec.job.job_id, 0.0)
+                    * rec.job.num_gpus
+                )
+        cap = max(self._cap_gpu_s, 1e-9)
+        return {
+            "horizon_s": self._end_time,
+            "capacity_gpu_s": self._cap_gpu_s,
+            "useful_gpu_s": useful,
+            "goodput": useful / cap,
+            "availability": 1.0 - self._gpu_down_s / cap,
+            "lost_gpu_s": self.lost_gpu_s,
+            "restarts": float(self.restarts),
+            "shrinks": float(self.shrinks),
+            "failures": float(self.fault_counts["failures"]),
+            "repairs": float(self.fault_counts["repairs"]),
+            "expands": float(self.fault_counts["expands"]),
+        }
 
 
 def summarize(records: Sequence[JobRecord]) -> Dict[str, float]:

@@ -1,0 +1,335 @@
+"""repro.fault: masks, fault models, degraded-mode topology engineering and
+the failure/expansion-aware scheduler.
+
+Centerpiece (ISSUE 2 satellite): a property test that `mdmcf_reconfigure`
+under random `PortMask`s still satisfies ILP constraints (1)-(6), realizes
+the degraded demand exactly (Thm 4.1 on the surviving clean pairs), and
+never assigns a masked slot."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.logical import random_feasible_demand
+from repro.core.reconfig import (
+    check_ilp_constraints,
+    mdmcf_reconfigure,
+    uniform_best_effort,
+    uniform_greedy,
+)
+from repro.core.topology import ClusterSpec, demand_feasible
+from repro.fault import (
+    ExpandEvent,
+    FailureEvent,
+    FaultModel,
+    PortMask,
+    RepairEvent,
+    apply_event,
+    degrade_demand,
+    mdmcf_degraded,
+    restart_cost_s,
+    rollback_loss,
+)
+from repro.sim import SimConfig, Simulator, generate_trace, summarize
+
+
+def _spec(p=8, k=8):
+    return ClusterSpec(num_pods=p, k_spine=k, k_leaf=8)
+
+
+# ---------------------------------------------------------------------------
+# PortMask
+# ---------------------------------------------------------------------------
+
+def test_mask_budgets_and_clean_pairs():
+    spec = _spec()
+    m = PortMask.healthy(spec, num_groups=2)
+    assert m.is_trivial()
+    assert (m.degree_budget() == spec.k_spine).all()
+    m.fail_link(0, 3, 2)  # kills pair 1 in group 0 (clean-pair granularity)
+    assert m.clean_pairs(0).tolist() == [0, 2, 3]
+    assert m.clean_pairs(1).tolist() == [0, 1, 2, 3]
+    assert (m.degree_budget()[0] == 6).all()
+    # port-granular budget only dings the failed pod
+    u = m.degree_budget("uniform")
+    assert u[0, 2] == 7 and u[0, 0] == 8 and (u[1] == 8).all()
+    m.repair_link(0, 3, 2)
+    assert m.is_trivial()
+
+
+def test_mask_layers_are_independent():
+    """An OCS repair must not resurrect an individually failed transceiver."""
+    spec = _spec()
+    m = PortMask.healthy(spec, num_groups=1)
+    m.fail_link(0, 2, 1)
+    m.fail_ocs(0, 2)
+    m.repair_ocs(0, 2)
+    assert m.egress_blocked()[0, 2, 1] and m.ingress_blocked()[0, 2, 1]
+    assert not m.egress_blocked()[0, 2, 0]
+
+
+def test_mask_rejects_bad_config():
+    spec = _spec(p=4, k=4)
+    m = PortMask.healthy(spec, num_groups=1)
+    m.fail_link(0, 0, 1, direction="egress")
+    x = np.zeros((1, 4, 4, 4), dtype=np.int8)
+    x[0, 0, 1, 2] = 1  # uses pod 1's failed egress on OCS (0, 0)
+    with pytest.raises(AssertionError):
+        m.check_config(x)
+    x[:] = 0
+    x[0, 1, 1, 2] = 1  # different OCS: fine
+    m.check_config(x)
+
+
+def test_drained_and_inactive_pods_have_zero_budget():
+    spec = _spec()
+    m = PortMask.healthy(spec, num_groups=2)
+    m.fail_pod(3)
+    m.set_active_count(6)  # pods 6, 7 not yet populated
+    b = m.degree_budget()
+    assert (b[:, 3] == 0).all() and (b[:, 6:] == 0).all()
+    assert b[0, 0] == spec.k_spine
+    m.expand([6, 7])
+    assert (m.degree_budget()[:, 6:] == spec.k_spine).all()
+
+
+# ---------------------------------------------------------------------------
+# FaultModel
+# ---------------------------------------------------------------------------
+
+def test_fault_model_deterministic_sorted_paired():
+    fm = FaultModel(8, 8, 2, link_mtbf_s=5e4, link_mttr_s=3600,
+                    ocs_mtbf_s=2e5, pod_mtbf_s=4e5, seed=7)
+    a, b = fm.sample(48 * 3600.0), fm.sample(48 * 3600.0)
+    assert a == b
+    times = [e.time for e in a]
+    assert times == sorted(times)
+    # every failure has a later repair of the same component
+    for ev in a:
+        if isinstance(ev, FailureEvent):
+            rep = [
+                r for r in a
+                if isinstance(r, RepairEvent) and r.scope == ev.scope
+                and (r.h, r.k, r.pod) == (ev.h, ev.k, ev.pod)
+                and r.time > ev.time
+            ]
+            assert rep, ev
+
+
+# ---------------------------------------------------------------------------
+# degraded-mode topology engineering
+# ---------------------------------------------------------------------------
+
+def _random_mask(spec, num_groups, rng):
+    m = PortMask.healthy(spec, num_groups)
+    for _ in range(int(rng.integers(0, 5))):
+        m.fail_link(
+            int(rng.integers(num_groups)),
+            int(rng.integers(spec.k_spine)),
+            int(rng.integers(spec.num_pods)),
+        )
+    if rng.random() < 0.4:
+        m.fail_ocs(int(rng.integers(num_groups)), int(rng.integers(spec.k_spine)))
+    if rng.random() < 0.3:
+        m.fail_pod(int(rng.integers(spec.num_pods)))
+    return m
+
+
+def test_degrade_demand_is_mask_feasible():
+    spec = _spec()
+    rng = np.random.default_rng(0)
+    for seed in range(10):
+        rng = np.random.default_rng(seed)
+        C = random_feasible_demand(spec, rng, fill=1.0, num_groups=2)
+        m = _random_mask(spec, 2, rng)
+        Cd = degrade_demand(C, m)
+        assert demand_feasible(Cd, spec, mask=m)
+
+
+def test_mdmcf_masked_property():
+    """ISSUE 2 satellite: mdmcf under random PortMasks — ILP (1)-(6) hold,
+    the degraded demand is realized exactly, no masked slot is assigned."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def inner(seed):
+        rng = np.random.default_rng(seed)
+        p = int(rng.integers(3, 8))
+        k = int(rng.choice([4, 6, 8]))
+        spec = ClusterSpec(num_pods=p, k_spine=k, k_leaf=4)
+        C = random_feasible_demand(
+            spec, rng, fill=float(rng.uniform(0.4, 1.0)), num_groups=2
+        )
+        m = _random_mask(spec, 2, rng)
+        Cd = degrade_demand(C, m)
+        old = mdmcf_reconfigure(spec, C).config if rng.random() < 0.5 else None
+        res = mdmcf_reconfigure(spec, Cd, old=old, mask=m)
+        check_ilp_constraints(
+            spec, Cd, res.config, topology="cross_wiring", mask=m
+        )
+        if Cd.any():
+            assert res.ltrr == pytest.approx(1.0)
+
+    inner()
+
+
+def test_mdmcf_masked_rejects_undegraded_demand():
+    spec = _spec()
+    rng = np.random.default_rng(1)
+    C = random_feasible_demand(spec, rng, fill=1.0, num_groups=2)
+    m = PortMask.healthy(spec, num_groups=2)
+    m.fail_ocs(0, 0)  # budget drops below the full-fill demand
+    with pytest.raises(ValueError):
+        mdmcf_reconfigure(spec, C, mask=m)
+
+
+def test_mdmcf_degraded_graceful_and_clean():
+    """Production path: accepts port-granular demand, never assigns a
+    masked slot, stays exact with slack and degrades gracefully."""
+    spec = _spec(p=12, k=8)
+    rng = np.random.default_rng(2)
+    C = random_feasible_demand(spec, rng, fill=0.6, num_groups=2)
+    m = _random_mask(spec, 2, np.random.default_rng(3))
+    Cd = degrade_demand(C, m)  # within even the conservative budget
+    res = mdmcf_degraded(spec, Cd, mask=m)
+    check_ilp_constraints(
+        spec, Cd, res.config, topology="cross_wiring", require_exact=False,
+        mask=m,
+    )
+    assert res.ltrr >= mdmcf_reconfigure(spec, Cd, mask=m).ltrr - 1e-9
+
+
+def test_uniform_strategies_respect_mask():
+    spec = _spec(p=6, k=6)
+    rng = np.random.default_rng(4)
+    C = random_feasible_demand(spec, rng, fill=0.8, num_groups=2)
+    m = _random_mask(spec, 2, rng)
+    Cd = degrade_demand(C, m)
+    for fn in (uniform_greedy, uniform_best_effort):
+        res = fn(spec, Cd, mask=m)
+        check_ilp_constraints(
+            spec, Cd, res.config, topology="uniform", require_exact=False,
+            mask=m,
+        )
+
+
+def test_recovery_cost_models():
+    assert rollback_loss(5000.0, 1800.0) == pytest.approx(5000.0 - 2 * 1800.0)
+    assert rollback_loss(100.0, 0.0) == 100.0
+    assert restart_cost_s("llama2-70b", 64) > restart_cost_s("llama2-70b", 512)
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration
+# ---------------------------------------------------------------------------
+
+def _jobs(n=50, pods=16, k=8, wl=0.9, seed=0):
+    return generate_trace(
+        n, num_gpus=pods * k * k, workload_level=wl, seed=seed,
+        max_job_gpus=pods * k * k // 4,
+    )
+
+
+def _cfg(pods=16, k=8, **kw):
+    return SimConfig(
+        architecture="cross_wiring", strategy="mdmcf",
+        num_pods=pods, k_spine=k, k_leaf=k, **kw,
+    )
+
+
+def test_sim_without_faults_matches_legacy():
+    """A fault-free Simulator with the new machinery must reproduce the
+    exact schedule of the pre-fault code path (mask stays trivial)."""
+    jobs = _jobs()
+    r1 = Simulator(_cfg(), jobs).run()
+    r2 = Simulator(_cfg(), jobs, fault_events=[]).run()
+    assert [(r.start, r.finish) for r in r1] == [(r.start, r.finish) for r in r2]
+    assert all(math.isfinite(r.finish) for r in r1)
+
+
+def test_sim_pod_failure_policies():
+    jobs = _jobs()
+    t_fail = jobs[len(jobs) // 3].arrival
+    evs = [
+        FailureEvent(t_fail, "pod", pod=1),
+        RepairEvent(t_fail + 7200.0, "pod", pod=1),
+    ]
+    out = {}
+    for pol in ("rewire_around", "ckpt_restart", "shrink_collective"):
+        sim = Simulator(_cfg(recovery_policy=pol), jobs, fault_events=evs)
+        recs = sim.run()
+        assert all(math.isfinite(r.finish) for r in recs), pol
+        out[pol] = sim
+    # someone was on pod 1 under both restart-y policies
+    assert out["rewire_around"].restarts >= 1
+    assert out["ckpt_restart"].restarts >= 1
+    assert (
+        out["shrink_collective"].restarts + out["shrink_collective"].shrinks
+        >= 1
+    )
+    # checkpoints strictly bound the work lost vs restart-from-scratch
+    assert (
+        out["ckpt_restart"].lost_gpu_s <= out["rewire_around"].lost_gpu_s
+    )
+    assert out["shrink_collective"].lost_gpu_s == 0.0
+    fs = out["ckpt_restart"].fault_summary()
+    assert 0.0 < fs["availability"] < 1.0
+    assert fs["failures"] == 1 and fs["repairs"] == 1
+
+
+def test_sim_fault_determinism():
+    jobs = _jobs(40)
+    fm = FaultModel(16, 8, 2, link_mtbf_s=1e5, link_mttr_s=3600, seed=5)
+    evs = fm.sample(jobs[-1].arrival)
+    a = Simulator(_cfg(), jobs, fault_events=evs).run()
+    b = Simulator(_cfg(), jobs, fault_events=evs).run()
+    assert [(r.start, r.finish) for r in a] == [(r.start, r.finish) for r in b]
+
+
+def test_sim_link_failures_rewire_without_restarts():
+    jobs = _jobs(40)
+    fm = FaultModel(16, 8, 2, link_mtbf_s=1e5, link_mttr_s=3600, seed=6)
+    evs = fm.sample(jobs[-1].arrival)
+    assert evs, "model produced no events"
+    sim = Simulator(_cfg(), jobs, fault_events=evs)
+    recs = sim.run()
+    assert sim.restarts == 0  # OCS-layer faults never kill a job
+    assert all(math.isfinite(r.finish) for r in recs)
+
+
+def test_sim_live_expansion_no_restarts():
+    """Acceptance: grow P-ΔP → P live; nothing restarts, queueing drops."""
+    pods, k, d = 16, 8, 4
+    jobs = generate_trace(
+        60, num_gpus=(pods - d) * k * k, workload_level=4.0, seed=0,
+        max_job_gpus=(pods - d) * k * k // 4,
+    )
+    t_exp = jobs[len(jobs) // 3].arrival
+    grow = [ExpandEvent(t_exp, tuple(range(pods - d, pods)))]
+    small = Simulator(_cfg(pods, k, active_pods=pods - d), jobs)
+    s_small = summarize(small.run())
+    sim = Simulator(_cfg(pods, k, active_pods=pods - d), jobs, fault_events=grow)
+    s_grown = summarize(sim.run())
+    assert sim.restarts == 0
+    assert sim.fault_counts["expands"] == 1
+    assert s_grown["avg_jct"] <= s_small["avg_jct"]
+    assert s_grown["completed"] == len(jobs)
+    # capacity integral reflects the grow-out (avg GPU capacity rises)
+    fs_g, fs_s = sim.fault_summary(), small.fault_summary()
+    assert (
+        fs_g["capacity_gpu_s"] / fs_g["horizon_s"]
+        > fs_s["capacity_gpu_s"] / fs_s["horizon_s"]
+    )
+
+
+def test_apply_event_roundtrip():
+    spec = _spec()
+    m = PortMask.healthy(spec, num_groups=2)
+    apply_event(m, FailureEvent(0.0, "link", h=1, k=2, pod=3))
+    apply_event(m, FailureEvent(1.0, "pod", pod=5))
+    assert not m.is_trivial()
+    apply_event(m, RepairEvent(2.0, "link", h=1, k=2, pod=3))
+    apply_event(m, RepairEvent(3.0, "pod", pod=5))
+    assert m.is_trivial()
