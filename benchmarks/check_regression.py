@@ -1,0 +1,67 @@
+"""Perf-smoke gate: fail CI when control-plane throughput regresses >N×.
+
+    python benchmarks/check_regression.py \
+        artifacts/bench/control_plane.json \
+        benchmarks/baselines/control_plane.json --max-regression 3
+
+Rows are matched by (pods, k_spine).  The *failing* gate is the
+machine-independent incremental-vs-cold speedup ratio: it must stay
+above baseline/N (floor 1.5×), which catches a lost delta path or an
+accidentally re-quadratic hot loop on any runner class.  Absolute
+incremental events/sec below baseline/N is reported as a warning only —
+CI runners are not the machine the baseline was recorded on, so an
+absolute floor would flake on hardware differences alone.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current")
+    ap.add_argument("baseline")
+    ap.add_argument("--max-regression", type=float, default=3.0)
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        cur = {(r["pods"], r["k_spine"]): r for r in json.load(f)["rows"]}
+    with open(args.baseline) as f:
+        base = {(r["pods"], r["k_spine"]): r for r in json.load(f)["rows"]}
+
+    failures = []
+    for key, b in base.items():
+        c = cur.get(key)
+        if c is None:
+            failures.append(f"{key}: row missing from current run")
+            continue
+        floor_eps = b["incremental_events_per_sec"] / args.max_regression
+        if c["incremental_events_per_sec"] < floor_eps:
+            print(
+                f"check_regression,warn,{key}: incremental "
+                f"{c['incremental_events_per_sec']:.0f} eps < {floor_eps:.0f} "
+                f"(baseline/{args.max_regression:g}; hardware-dependent, not fatal)",
+                file=sys.stderr,
+            )
+        floor_speedup = max(1.5, b["speedup"] / args.max_regression)
+        if c["speedup"] < floor_speedup:
+            failures.append(
+                f"{key}: speedup {c['speedup']:.2f}x < {floor_speedup:.2f}x "
+                f"(baseline {b['speedup']:.2f}x / {args.max_regression:g})"
+            )
+        print(
+            f"check_regression,{key},eps={c['incremental_events_per_sec']:.0f}"
+            f"(warn floor {floor_eps:.0f}),speedup={c['speedup']:.2f}x"
+            f"(fail floor {floor_speedup:.2f}x)"
+        )
+    if failures:
+        print("PERF REGRESSION:", *failures, sep="\n  ", file=sys.stderr)
+        return 1
+    print("check_regression,ok")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -15,6 +15,7 @@ import time
 from . import (
     bench_availability,
     bench_collectives,
+    bench_control_plane,
     bench_jct,
     bench_ltrr,
     bench_mrar,
@@ -39,6 +40,10 @@ BENCHES = {
     "availability": (
         bench_availability,
         "ours: goodput under failures + live expansion",
+    ),
+    "control_plane": (
+        bench_control_plane,
+        "ours: simulator events/sec, incremental vs cold",
     ),
 }
 
@@ -98,7 +103,19 @@ def _summarize(name: str, payload: dict) -> None:
             keys = [k for k in r if k != "nodes"]
             print(
                 f"reconfig_time,{r['nodes']},"
-                + ",".join(f"{k}={r[k]:.4f}s" for k in keys)
+                + ",".join(
+                    f"{k}={r[k]:.2f}x" if "speedup" in k else f"{k}={r[k]:.4f}s"
+                    for k in keys
+                )
+            )
+    elif name == "control_plane":
+        for r in payload["rows"]:
+            print(
+                f"control_plane,{r['nodes']},"
+                f"cold={r['cold_events_per_sec']:.0f}eps,"
+                f"incremental={r['incremental_events_per_sec']:.0f}eps,"
+                f"speedup={r['speedup']:.2f}x,"
+                f"delta_hits={r['delta_hits']}/{r['reconfigs']}"
             )
     elif name == "mrar":
         for r in payload["rows"]:

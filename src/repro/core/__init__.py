@@ -9,6 +9,12 @@ from .decomposition import (
     symmetric_split_euler,
     symmetric_split_mcf,
 )
+from .incremental import (
+    ColoringState,
+    DeltaInfeasible,
+    StaleStateError,
+    mdmcf_delta,
+)
 from .reconfig import (
     ReconfigResult,
     check_ilp_constraints,
@@ -35,6 +41,10 @@ __all__ = [
     "symmetric_split",
     "symmetric_split_euler",
     "symmetric_split_mcf",
+    "ColoringState",
+    "DeltaInfeasible",
+    "StaleStateError",
+    "mdmcf_delta",
     "ReconfigResult",
     "check_ilp_constraints",
     "config_cosine",

@@ -31,6 +31,7 @@ __all__ = [
     "symmetric_split",
     "symmetric_split_euler",
     "symmetric_split_mcf",
+    "assign_unit",
     "edge_color_bipartite",
     "halve_matrix",
     "integer_matrix_decompose",
@@ -43,62 +44,83 @@ __all__ = [
 # Theorem 3.1 — fast path: Eulerian balanced orientation
 # --------------------------------------------------------------------------
 
-def _euler_orient(num_vertices: int, edges: List[Tuple[int, int]]) -> List[Tuple[int, int]]:
+def _euler_orient(num_vertices: int, edges) -> np.ndarray:
     """Orient ``edges`` (undirected multigraph) so |out(v) - in(v)| <= 1.
 
     Classical construction: join all odd-degree vertices to a dummy vertex,
     walk Euler circuits (Hierholzer) orienting along the walk, drop dummy
-    edges.  O(E).
+    edges.  O(E).  Returns an ``(N, 2)`` int array of (tail, head) rows.
+    The adjacency structure is built as a CSR incidence array with numpy
+    (degrees via bincount, per-vertex slices via a stable argsort) so only
+    the circuit walk itself remains a Python loop.
     """
-    deg = [0] * num_vertices
-    for u, v in edges:
-        deg[u] += 1
-        deg[v] += 1
+    E0 = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    deg = np.bincount(E0.ravel(), minlength=num_vertices + 1)
     dummy = num_vertices
-    all_edges = list(edges)
-    for v in range(num_vertices):
-        if deg[v] % 2:
-            all_edges.append((dummy, v))
+    odd = np.nonzero(deg[:num_vertices] % 2)[0]
+    all_edges = np.concatenate(
+        [E0, np.stack([np.full(odd.size, dummy, dtype=np.int64), odd], axis=1)]
+    )
+    M = all_edges.shape[0]
+    if M == 0:
+        return np.empty((0, 2), dtype=np.int64)
 
-    # adjacency: vertex -> list of (edge_id, other_endpoint)
-    adj: List[List[Tuple[int, int]]] = [[] for _ in range(num_vertices + 1)]
-    for eid, (u, v) in enumerate(all_edges):
-        adj[u].append((eid, v))
-        adj[v].append((eid, u))
-    used = [False] * len(all_edges)
-    ptr = [0] * (num_vertices + 1)  # per-vertex scan pointer (amortized O(E))
-    oriented: List[Tuple[int, int]] = []
+    # CSR incidence: per vertex, (edge_id, other_endpoint) in edge order —
+    # stable sort of the interleaved endpoint list reproduces the classical
+    # append-order adjacency exactly.
+    verts = all_edges.ravel()
+    eids = np.repeat(np.arange(M, dtype=np.int64), 2)
+    others = all_edges[:, ::-1].ravel()
+    order = np.argsort(verts, kind="stable")
+    adj_eid = eids[order]
+    adj_other = others[order]
+    counts = np.bincount(verts, minlength=num_vertices + 1)
+    indptr = np.zeros(num_vertices + 2, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+
+    used = np.zeros(M, dtype=bool)
+    ptr = indptr[:-1].copy()  # per-vertex scan pointer (amortized O(E))
+    tails: List[int] = []
+    eid_out: List[int] = []
 
     for start in range(num_vertices + 1):
-        if ptr[start] >= len(adj[start]):
+        if ptr[start] >= indptr[start + 1]:
             continue
         # Hierholzer, iterative.  Record traversal direction of each edge.
         stack = [start]
-        path_edges: List[Tuple[int, int]] = []  # (edge_id, tail_vertex)
-        edge_stack: List[Tuple[int, int]] = []
+        path_tails: List[int] = []
+        path_eids: List[int] = []
+        tail_stack: List[int] = []
+        eid_stack: List[int] = []
         while stack:
             v = stack[-1]
             advanced = False
-            while ptr[v] < len(adj[v]):
-                eid, w = adj[v][ptr[v]]
+            while ptr[v] < indptr[v + 1]:
+                eid = adj_eid[ptr[v]]
+                w = adj_other[ptr[v]]
                 ptr[v] += 1
                 if used[eid]:
                     continue
                 used[eid] = True
-                stack.append(w)
-                edge_stack.append((eid, v))  # traversed v -> w
+                stack.append(int(w))
+                tail_stack.append(v)  # traversed v -> w
+                eid_stack.append(int(eid))
                 advanced = True
                 break
             if not advanced:
                 stack.pop()
-                if edge_stack:
-                    path_edges.append(edge_stack.pop())
-        for eid, tail in path_edges:
-            u, v = all_edges[eid]
-            head = v if tail == u else u
-            if tail != dummy and head != dummy:
-                oriented.append((tail, head))
-    return oriented
+                if eid_stack:
+                    path_tails.append(tail_stack.pop())
+                    path_eids.append(eid_stack.pop())
+        tails.extend(path_tails)
+        eid_out.extend(path_eids)
+
+    t = np.asarray(tails, dtype=np.int64)
+    e = np.asarray(eid_out, dtype=np.int64)
+    u, v = all_edges[e, 0], all_edges[e, 1]
+    h = np.where(t == u, v, u)
+    keep = (t != dummy) & (h != dummy)
+    return np.stack([t[keep], h[keep]], axis=1)
 
 
 def symmetric_split_euler(C: np.ndarray) -> np.ndarray:
@@ -123,9 +145,8 @@ def symmetric_split_euler(C: np.ndarray) -> np.ndarray:
     A += half  # adds C_ij//2 in both directions
     rem = off - 2 * half  # 0/1 symmetric, zero diagonal
     iu, ju = np.nonzero(np.triu(rem, k=1))
-    edges = list(zip(iu.tolist(), ju.tolist()))
-    for u, v in _euler_orient(P, edges):
-        A[u, v] += 1
+    oriented = _euler_orient(P, np.stack([iu, ju], axis=1))
+    np.add.at(A, (oriented[:, 0], oriented[:, 1]), 1)
     return A
 
 
@@ -220,6 +241,82 @@ def check_symmetric_split(C: np.ndarray, A: np.ndarray) -> None:
 # Theorem 3.2 specialization — bipartite edge coloring (König)
 # --------------------------------------------------------------------------
 
+def assign_unit(
+    rowc: np.ndarray,
+    colc: np.ndarray,
+    i: int,
+    j: int,
+    on_set=None,
+    on_clear=None,
+) -> int:
+    """Color one directed unit ``(i, j)`` against a partial proper coloring.
+
+    ``rowc[i, c]``/``colc[j, c]`` hold the matched column/row per color (or
+    -1), with the number of colors given by their second axis.  Requires a
+    free color at row ``i`` and at column ``j`` — the König precondition
+    (fewer colored units at each endpoint than colors), under which a
+    common free color exists or an (a, b)-alternating path inversion
+    creates one.
+
+    ``on_set(i, j, c)`` / ``on_clear(i, j, c)`` observe every (un)coloring,
+    letting callers (e.g. the incremental MDMCF state) mirror the coloring
+    into an OCS configuration.  Returns the number of path-flipped units.
+    """
+    free_i = rowc[i] == -1
+    free_j = colc[j] == -1
+    both = free_i & free_j
+    if both.any():
+        c = int(both.argmax())
+        rowc[i, c] = j
+        colc[j, c] = i
+        if on_set is not None:
+            on_set(i, j, c)
+        return 0
+    if not (free_i.any() and free_j.any()):
+        raise ValueError("degree bound violated: no free color at an endpoint")
+    a = int(free_i.argmax())  # first color free at row i
+    b = int(free_j.argmax())  # first color free at col j
+    # Invert the (a, b)-alternating path starting at column j (which is
+    # missing color a).  The path cannot reach row i (parity argument), so
+    # after inversion color a is free at both endpoints.
+    path: List[Tuple[int, int, int]] = []  # (row, col, color)
+    cur_color = a
+    cur_node = j
+    at_col = True
+    while True:
+        if at_col:
+            r = int(colc[cur_node, cur_color])
+            if r == -1:
+                break
+            path.append((r, cur_node, cur_color))
+            cur_node, at_col = r, False
+            cur_color = b if cur_color == a else a
+        else:
+            cc = int(rowc[cur_node, cur_color])
+            if cc == -1:
+                break
+            path.append((cur_node, cc, cur_color))
+            cur_node, at_col = cc, True
+            cur_color = b if cur_color == a else a
+    for (r, cc, col_) in path:
+        rowc[r, col_] = -1
+        colc[cc, col_] = -1
+        if on_clear is not None:
+            on_clear(r, cc, col_)
+    for (r, cc, col_) in path:
+        other = b if col_ == a else a
+        rowc[r, other] = cc
+        colc[cc, other] = r
+        if on_set is not None:
+            on_set(r, cc, other)
+    assert rowc[i, a] == -1 and colc[j, a] == -1
+    rowc[i, a] = j
+    colc[j, a] = i
+    if on_set is not None:
+        on_set(i, j, a)
+    return len(path)
+
+
 def edge_color_bipartite(
     A: np.ndarray,
     num_colors: int,
@@ -238,6 +335,9 @@ def edge_color_bipartite(
 
     Algorithm: classical alternating-path bipartite edge coloring
     (König / Vizing restricted to bipartite), O(E · (P + num_colors)).
+    The bulk of the units carry a color free at both endpoints and is
+    assigned in vectorized conflict-free waves; only the leftovers walk
+    the scalar alternating-path machinery (:func:`assign_unit`).
     """
     A = np.asarray(A)
     if (A < 0).any():
@@ -252,10 +352,6 @@ def edge_color_bipartite(
     colc = np.full((Q, K), -1, dtype=np.int64)
     remaining = A.astype(np.int64).copy()
 
-    def assign(i: int, j: int, c: int) -> None:
-        rowc[i, c] = j
-        colc[j, c] = i
-
     # ---- warm start ------------------------------------------------------
     if warm is not None:
         warm = np.asarray(warm)
@@ -264,64 +360,42 @@ def edge_color_bipartite(
         cs, is_, js = np.nonzero(warm)
         for c, i, j in zip(cs.tolist(), is_.tolist(), js.tolist()):
             if remaining[i, j] > 0 and rowc[i, c] == -1 and colc[j, c] == -1:
-                assign(i, j, c)
+                rowc[i, c] = j
+                colc[j, c] = i
                 remaining[i, j] -= 1
 
-    # ---- main loop ---------------------------------------------------------
+    # ---- wave phase: batch-assign units with a common free color ---------
     iu, ju = np.nonzero(remaining)
-    for i, j in zip(iu.tolist(), ju.tolist()):
-        for _ in range(int(remaining[i, j])):
-            # free colors
-            a = -1  # free at row i
-            b = -1  # free at col j
-            common = -1
-            for c in range(K):
-                fi = rowc[i, c] == -1
-                fj = colc[j, c] == -1
-                if fi and fj:
-                    common = c
-                    break
-                if fi and a == -1:
-                    a = c
-                if fj and b == -1:
-                    b = c
-            if common >= 0:
-                assign(i, j, common)
-                continue
-            assert a >= 0 and b >= 0, "degree bound violated"
-            # Invert the (a, b)-alternating path starting at column j (which
-            # is missing color a).  The path cannot reach row i (parity
-            # argument), so after inversion color a is free at both endpoints.
-            # Phase 1: collect alternating path edges starting at col j.
-            path: List[Tuple[int, int, int]] = []  # (row, col, color)
-            cur_color = a
-            cur_node = j
-            at_col = True
-            while True:
-                if at_col:
-                    r = colc[cur_node, cur_color]
-                    if r == -1:
-                        break
-                    path.append((r, cur_node, cur_color))
-                    cur_node, at_col = r, False
-                    cur_color = b if cur_color == a else a
-                else:
-                    cc = rowc[cur_node, cur_color]
-                    if cc == -1:
-                        break
-                    path.append((cur_node, cc, cur_color))
-                    cur_node, at_col = cc, True
-                    cur_color = b if cur_color == a else a
-            # Phase 2: flip colors along the path.
-            for (r, cc, col_) in path:
-                rowc[r, col_] = -1
-                colc[cc, col_] = -1
-            for (r, cc, col_) in path:
-                other = b if col_ == a else a
-                rowc[r, other] = cc
-                colc[cc, other] = r
-            assert rowc[i, a] == -1 and colc[j, a] == -1
-            assign(i, j, a)
+    counts = remaining[iu, ju]
+    ui = np.repeat(iu, counts)
+    uj = np.repeat(ju, counts)
+    while ui.size:
+        common = (rowc[ui] == -1) & (colc[uj] == -1)  # (U, K)
+        has = common.any(axis=1)
+        if not has.any():
+            break
+        hi, hj = ui[has], uj[has]
+        pick = common[has].argmax(axis=1)  # first common free color
+        U = hi.size
+        idx = np.arange(U)
+        # conflict-free subset: keep only the first unit per (row, color)
+        # and per (col, color) slot, exactly what sequential order would do
+        kic = hi * K + pick
+        kjc = hj * K + pick
+        first_ic = np.full(P * K, U, dtype=np.int64)
+        first_jc = np.full(Q * K, U, dtype=np.int64)
+        np.minimum.at(first_ic, kic, idx)
+        np.minimum.at(first_jc, kjc, idx)
+        win = (first_ic[kic] == idx) & (first_jc[kjc] == idx)
+        rowc[hi[win], pick[win]] = hj[win]
+        colc[hj[win], pick[win]] = hi[win]
+        keep = np.ones(ui.size, dtype=bool)
+        keep[np.nonzero(has)[0][win]] = False
+        ui, uj = ui[keep], uj[keep]
+
+    # ---- leftovers: alternating-path recoloring --------------------------
+    for i, j in zip(ui.tolist(), uj.tolist()):
+        assign_unit(rowc, colc, i, j)
 
     colors = np.zeros((K, P, Q), dtype=np.int8)
     for c in range(K):
@@ -349,14 +423,13 @@ def halve_matrix(C: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     base = C // 2
     rem = C - 2 * base  # 0/1
     iu, ju = np.nonzero(rem)
-    edges = [(int(i), int(P + j)) for i, j in zip(iu, ju)]
     C1 = base.copy()
     C2 = base.copy()
-    for u, v in _euler_orient(P + Q, edges):
-        if u < P:  # row -> col  ⇒ give the odd unit to C1
-            C1[u, v - P] += 1
-        else:  # col -> row       ⇒ give it to C2
-            C2[v, u - P] += 1
+    oriented = _euler_orient(P + Q, np.stack([iu, P + ju], axis=1))
+    u, v = oriented[:, 0], oriented[:, 1]
+    fwd = u < P  # row -> col  ⇒ give the odd unit to C1, else to C2
+    np.add.at(C1, (u[fwd], v[fwd] - P), 1)
+    np.add.at(C2, (v[~fwd], u[~fwd] - P), 1)
     return C1, C2
 
 

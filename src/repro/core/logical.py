@@ -51,8 +51,7 @@ def shave_to_budget(M: np.ndarray, budget: np.ndarray) -> np.ndarray:
     """In-place: symmetrically remove links (fattest pair of the most
     oversubscribed pod first) until every pod's degree fits its budget
     (eq. 12).  Deterministic; shared by demand clipping everywhere."""
-    deg = M.sum(axis=1)
-    over = deg - budget
+    over = M.sum(axis=1) - budget
     while (over > 0).any():
         p = int(np.argmax(over))
         nz = np.nonzero(M[p])[0]
@@ -61,8 +60,13 @@ def shave_to_budget(M: np.ndarray, budget: np.ndarray) -> np.ndarray:
         q = int(nz[np.argmax(M[p, nz])])
         M[p, q] -= 1
         M[q, p] -= 1
-        deg = M.sum(axis=1)
-        over = deg - budget
+        # O(1) degree maintenance (a removed link costs each endpoint one
+        # degree; a diagonal link costs its pod two)
+        if p == q:
+            over[p] -= 2
+        else:
+            over[p] -= 1
+            over[q] -= 1
     return M
 
 

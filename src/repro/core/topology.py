@@ -113,16 +113,66 @@ class OCSConfig:
         self.num_groups = num_groups if num_groups is not None else spec.num_ocs_groups
         P, K = spec.num_pods, spec.ocs_per_group
         self.x = np.zeros((self.num_groups, K, P, P), dtype=np.int8)
+        self._derived_cache: Dict[str, np.ndarray] = {}
 
     def copy(self) -> "OCSConfig":
         out = OCSConfig(self.spec, self.num_groups)
-        out.x = self.x.copy()
+        out.x = self.x.copy()  # writable even when self is frozen
         return out
+
+    # ---- derived-view cache ----------------------------------------------
+    def freeze(self) -> "OCSConfig":
+        """Mark ``x`` immutable and enable memoization of the derived views.
+
+        Solvers freeze the configuration they emit (``ReconfigResult``
+        does it), so the O(H·P²) reductions below are computed once per
+        reconfiguration instead of on every slowdown re-evaluation in
+        between.  Hand-built (unfrozen) configs keep recomputing fresh —
+        mutate-after-read stays correct for them.  Rebuilding ``x`` on a
+        frozen config requires ``invalidate_cache()`` (which re-opens it).
+        """
+        self.x.flags.writeable = False
+        return self
+
+    def invalidate_cache(self) -> None:
+        """Drop memoized derived views and make ``x`` writable again."""
+        self._derived_cache.clear()
+        self.x = np.array(self.x)  # fresh writable buffer
+
+    def _derived(self, key: str, fn) -> np.ndarray:
+        if self.x.flags.writeable:
+            return fn()  # mutable config: never cache
+        out = self._derived_cache.get(key)
+        if out is None:
+            out = fn()
+            out.flags.writeable = False
+            self._derived_cache[key] = out
+        return out
+
+    def preseed_pair_capacity(self, C: np.ndarray) -> None:
+        """Seed the ``pair_capacity`` cache from the demand an *exact*
+        solver just realized (Thm 4.1: ``Σ_k x == C``), skipping the
+        O(H·K·P²) reduction on every flow-model / ring-scoring read
+        between reconfigurations.  Only meaningful on a frozen config;
+        callers are the exact MDMCF paths.
+
+        Deliberately seeds *only* ``pair_capacity`` (the slowdown
+        re-evaluation hot path): ``realized``/``realized_bidirectional``
+        — and therefore :func:`~repro.core.reconfig.ltrr` — keep reducing
+        the raw emitted circuits, so the LTRR benchmarks still measure
+        realization rather than echo the asserted invariant.
+        """
+        if self.x.flags.writeable:
+            return
+        # integer sum first, tiny float divide after — no float64 copy of C
+        seed = np.asarray(C).sum(axis=0) / max(1, self.num_groups)
+        seed.flags.writeable = False
+        self._derived_cache["pair_capacity"] = seed
 
     # ---- realized logical topology ---------------------------------------
     def realized(self) -> np.ndarray:
         """Directed link counts ``R[h, i, j] = Σ_k x[h][k][i, j]``."""
-        return self.x.sum(axis=1)
+        return self._derived("realized", lambda: self.x.sum(axis=1))
 
     def realized_bidirectional(self) -> np.ndarray:
         """Bidirectional (L2-compatible) link counts per (h, i, j).
@@ -131,14 +181,22 @@ class OCSConfig:
         The number of bidirectional links is min(R_ij, R_ji) directionwise;
         with symmetric R this is just R.
         """
-        r = self.realized().astype(np.int64)
-        return np.minimum(r, np.transpose(r, (0, 2, 1)))
+
+        def _compute() -> np.ndarray:
+            r = self.realized().astype(np.int64)
+            return np.minimum(r, np.transpose(r, (0, 2, 1)))
+
+        return self._derived("realized_bidirectional", _compute)
 
     def pair_capacity(self) -> np.ndarray:
         """Per-group-average bidirectional link capacity between pod pairs
         — the ``(P, P)`` matrix the flow model and ring scoring share."""
-        r = self.realized_bidirectional().astype(np.float64)
-        return r.sum(axis=0) / max(1, self.num_groups)
+
+        def _compute() -> np.ndarray:
+            r = self.realized_bidirectional().astype(np.float64)
+            return r.sum(axis=0) / max(1, self.num_groups)
+
+        return self._derived("pair_capacity", _compute)
 
     def validate(self, mask=None) -> None:
         """Assert per-OCS sub-permutation feasibility (constraints (4)(5)).
@@ -156,8 +214,8 @@ class OCSConfig:
             mask.check_config(self.x)
 
     def rewiring_distance(self, other: "OCSConfig") -> int:
-        """Min-Rewiring objective (eq. 7): Σ |x - u|."""
-        return int(np.abs(self.x.astype(np.int32) - other.x.astype(np.int32)).sum())
+        """Min-Rewiring objective (eq. 7): Σ |x - u| (= Σ x≠u for 0/1 x)."""
+        return int(np.count_nonzero(self.x != other.x))
 
 
 class PhysicalTopology:

@@ -168,6 +168,17 @@ def uncoverable_fraction(edges: Edges, config) -> float:
     return float(short) / float(total)
 
 
+@functools.lru_cache(maxsize=16)
+def _cyclic_perm_indices(n: int) -> np.ndarray:
+    """Index array of all cyclic orders over ``n`` sorted pods, first pod
+    pinned and mirror images dropped — ``((n-1)!/2, n)``, cached per n."""
+    perms = np.array(list(itertools.permutations(range(1, n))), dtype=np.int64)
+    perms = perms[perms[:, 0] < perms[:, -1]]  # skip mirror-image rings
+    return np.concatenate(
+        [np.zeros((perms.shape[0], 1), dtype=np.int64), perms], axis=1
+    )
+
+
 def ring_order(
     pods: Sequence[int],
     config=None,
@@ -180,7 +191,8 @@ def ring_order(
     order is always in the candidate set and ties break toward it.  With no
     configuration yet (cold start) the sorted order is returned unchanged.
     Small rings are solved exactly (cyclic permutations modulo rotation and
-    reflection); larger ones greedily chain best-provisioned pairs.
+    reflection, scored in one vectorized pass over the capacity matrix);
+    larger ones greedily chain best-provisioned pairs.
     """
     base = tuple(sorted(pods))
     n = len(base)
@@ -188,13 +200,9 @@ def ring_order(
         return base  # n ≤ 3: all cyclic orders are the same ring
     cap = config.pair_capacity()
 
-    candidates: List[Tuple[int, ...]] = [base]
     if n <= exhaustive_limit:
-        first = base[0]
-        for perm in itertools.permutations(base[1:]):
-            if perm[0] > perm[-1]:
-                continue  # skip mirror-image rings
-            candidates.append((first,) + perm)
+        # identity is the first permutation, so base is always candidate 0
+        cands = np.asarray(base, dtype=np.int64)[_cyclic_perm_indices(n)]
     else:
         # greedy: start at the lowest pod id, repeatedly hop to the
         # remaining pod with the fattest realized pipe
@@ -205,13 +213,16 @@ def ring_order(
             nxt = max(left, key=lambda q: (cap[cur, q], -q))
             left.remove(nxt)
             order.append(nxt)
-        candidates.append(tuple(order))
+        cands = np.stack([np.asarray(base), np.asarray(order)])
 
-    best = min(
-        candidates,
-        key=lambda o: (_ring_uncovered(o, cap, links), o != base, o),
-    )
-    return best
+    hops_from = cands
+    hops_to = np.roll(cands, -1, axis=1)
+    unc = np.maximum(0.0, links - cap[hops_from, hops_to]).sum(axis=1)
+    # min over (uncovered, is-not-base, lexicographic), base is candidate 0
+    sel = np.nonzero(unc == unc.min())[0]
+    if sel[0] == 0:
+        return base
+    return tuple(min(map(tuple, cands[sel])))
 
 
 # ---------------------------------------------------------------------------

@@ -171,6 +171,24 @@ class PortMask:
         in_ok = ~self.ingress_blocked()[h, k] & up
         return eg_ok[:, None] & in_ok[None, :]
 
+    def fingerprint(self) -> bytes:
+        """Digest of the full health state.  The incremental control plane
+        (:mod:`repro.core.incremental`) stamps its :class:`ColoringState`
+        with this; any mask change invalidates the state, forcing the
+        scheduler back to a cold solve it *can* trust."""
+        import hashlib
+
+        d = hashlib.blake2b(digest_size=16)
+        for a in (
+            self.ocs_down,
+            self.port_down_eg,
+            self.port_down_in,
+            self.drained,
+            self.active,
+        ):
+            d.update(a.tobytes())
+        return d.digest()
+
     def is_trivial(self) -> bool:
         """True iff the mask constrains nothing (all healthy, all active)."""
         return bool(

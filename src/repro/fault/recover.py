@@ -48,6 +48,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from ..core.logical import shave_to_budget
+from ..core.reconfig import linear_sum_assignment
 from ..dist.collectives import MODEL_PROFILES
 from .masks import PortMask
 
@@ -146,14 +147,14 @@ def mdmcf_degraded(spec, C: np.ndarray, old=None, mask: Optional[PortMask] = Non
     """
     import time as _time
 
-    from scipy.optimize import linear_sum_assignment
-
     from ..core.decomposition import edge_color_bipartite, symmetric_split
     from ..core.reconfig import ReconfigResult, mdmcf_reconfigure
     from ..core.topology import OCSConfig
 
     if mask is None or mask.is_trivial():
         return mdmcf_reconfigure(spec, C, old=old)
+    if linear_sum_assignment is None:
+        raise ImportError("scipy is required for degraded-mode slot assignment")
     t0 = _time.perf_counter()
     C = np.asarray(C)
     H, P, _ = C.shape

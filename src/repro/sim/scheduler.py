@@ -32,16 +32,22 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..core.incremental import (
+    ColoringState,
+    DeltaInfeasible,
+    StaleStateError,
+    mdmcf_delta,
+)
 from ..core.logical import Job, Placement, shave_to_budget
 from ..core.reconfig import (
+    ReconfigResult,
     helios_matching,
-    ltrr,
     mdmcf_cold,
     mdmcf_reconfigure,
     uniform_best_effort,
     uniform_greedy,
 )
-from ..core.topology import ClusterSpec, OCSConfig
+from ..core.topology import ClusterSpec, OCSConfig, demand_feasible
 from ..dist import collectives as dist_collectives
 from ..dist import demand as dist_demand
 from ..fault import (
@@ -72,11 +78,17 @@ def ilp_time_model(num_gpus: int) -> float:
     return 0.5 * math.exp(num_gpus / 4800.0)
 
 
-def poly_time_model(num_gpus: int) -> float:
+def poly_time_model(num_gpus: int, incremental: bool = False) -> float:
     """Deterministic stand-in for the polynomial strategies' computation
     time (used by ``timing='modeled'``).  Calibrated to this container's
-    measured MDMCF wall times (see benchmarks/bench_reconfig_time.py);
-    linear in cluster size, ~60 ms at 32k nodes."""
+    measured MDMCF wall times (benchmarks/bench_reconfig_time.py; see
+    EXPERIMENTS.md §Control-plane performance): the vectorized warm cold
+    solve runs ~2e-6 s/GPU (~64 ms at 32k nodes, P=128, H=16), and the
+    incremental delta path (``mdmcf_delta`` on a single-job change)
+    ~1.6e-7 s/GPU (~5 ms at 32k) — the rate charged when the scheduler's
+    ColoringState served the event."""
+    if incremental:
+        return 1.6e-7 * num_gpus
     return 2e-6 * num_gpus
 
 
@@ -91,6 +103,9 @@ class SimConfig:
     sim_groups: int = 2  # OCS groups actually solved (demand is identical
     # across groups; measured runtime is scaled to all groups)
     timing: str = "modeled"  # modeled (deterministic) | measured (wall clock)
+    incremental: bool = True  # carry ColoringState between events and patch
+    # the decomposition with mdmcf_delta (cold-solving only on mask changes
+    # or budget-exceeding demand); False = cold-solve every event
     # ---- resilience (repro.fault) ---------------------------------------
     recovery_policy: str = REWIRE_AROUND  # | shrink_collective | ckpt_restart
     ckpt_interval_s: float = 1800.0  # checkpoint cadence for ckpt_restart
@@ -224,6 +239,12 @@ class Simulator:
         self.reconfig_calls = 0
         self.reconfig_wall = 0.0
         self.ltrr_samples: List[float] = []
+        self.events = 0  # heap events processed (bench_control_plane metric)
+        # ---- incremental control plane (repro.core.incremental) ----------
+        self._coloring_state: Optional[ColoringState] = None
+        self.delta_calls = 0  # reconfigurations served by mdmcf_delta
+        self._last_incremental = False
+        self._last_rewired: Optional[int] = None  # Σ|Δx| of the last solve
         # ---- resilience state (repro.fault) ------------------------------
         self.mask = PortMask(cfg.num_pods, cfg.k_spine, cfg.sim_groups)
         if cfg.active_pods is not None:
@@ -268,19 +289,27 @@ class Simulator:
         """Clipped symmetric demand over sim_groups (identical per group
         while healthy; per-group once the mask degrades budgets)."""
         P, K, H = self.cfg.num_pods, self.cfg.k_spine, self.cfg.sim_groups
-        C = np.zeros((H, P, P), dtype=np.int64)
         mask = self._mask_arg()
         if mask is None:
+            # healthy demand is identical across groups: accumulate one
+            # (P, P) plane and materialize the (H, P, P) tensor once
+            acc = np.zeros((P, P), dtype=np.int64)
             budget = np.full(P, K, dtype=np.int64)
+            ring = np.empty((P, P), dtype=np.int64)
             for r in self.running.values():
-                ring = np.zeros((P, P), dtype=np.int64)
-                for (i, j), links in r.edges.items():
-                    ring[i, j] += links
-                    ring[j, i] += links
+                if not r.edges:
+                    continue
+                ring[:] = 0
+                ei = np.fromiter(
+                    (v for e in r.edges for v in e), dtype=np.int64
+                ).reshape(-1, 2)
+                w = np.fromiter(r.edges.values(), dtype=np.int64)
+                np.add.at(ring, (ei[:, 0], ei[:, 1]), w)
+                np.add.at(ring, (ei[:, 1], ei[:, 0]), w)
                 shave_to_budget(ring, budget)
                 budget -= ring.sum(axis=1)
-                C[:] += ring[None]
-            return C
+                acc += ring
+            return np.repeat(acc[None], H, axis=0)
         # port-granular upper bound for every architecture: strategies do
         # their own structural degradation (clean-pair core + salvage for
         # Cross Wiring, shrunken matchings for Uniform); what they cannot
@@ -288,6 +317,51 @@ class Simulator:
         return masked_aggregate_demand(
             P, H, [r.edges for r in self.running.values()], mask
         )
+
+    def _solve_mdmcf(self, C: np.ndarray, mask: Optional[PortMask]) -> ReconfigResult:
+        """ITV-MDMCF with a persistent :class:`ColoringState`.
+
+        While the mask is unchanged and the demand fits the state's budget,
+        each event is served by :func:`mdmcf_delta` — O(|demand delta|).
+        Mask changes (stale state) or budget-exceeding demand fall back to
+        a cold solve; the state is rebuilt from it when the cold solve is
+        the exact clean-pair construction (``mdmcf_degraded``'s salvage
+        output has no adoptable coloring, so degraded events stay cold).
+        """
+        self._last_incremental = False
+        if not self.cfg.incremental:
+            self._coloring_state = None
+            if mask is None:
+                return mdmcf_reconfigure(self.spec, C, old=self.old_config)
+            return mdmcf_degraded(self.spec, C, old=self.old_config, mask=mask)
+        state = self._coloring_state
+        if state is not None:
+            try:
+                # healthy aggregate demand is shaved + symmetric by
+                # construction, and the emitted config's sub-permutation
+                # property holds by the state invariants — skip both
+                # O(H·K·P²) re-checks on the hot path
+                res = mdmcf_delta(
+                    self.spec,
+                    state,
+                    C,
+                    mask=mask,
+                    validate=False,
+                    check_feasible=mask is not None,
+                )
+                self._last_incremental = True
+                self.delta_calls += 1
+                return res
+            except (StaleStateError, DeltaInfeasible):
+                self._coloring_state = None
+        if mask is not None and not demand_feasible(C, self.spec, mask=mask):
+            # beyond the clean-pair budget: graceful degradation, no state
+            return mdmcf_degraded(self.spec, C, old=self.old_config, mask=mask)
+        res = mdmcf_reconfigure(self.spec, C, old=self.old_config, mask=mask)
+        self._coloring_state = ColoringState.from_config(
+            self.spec, res.demand, res.config, mask=mask
+        )
+        return res
 
     def _reconfigure(self) -> Tuple[Optional[OCSConfig], float]:
         """Run the strategy; returns (config, computation seconds)."""
@@ -300,10 +374,7 @@ class Simulator:
         mask = self._mask_arg()
         t0 = time.perf_counter()
         if st in ("mdmcf", "itv_ilp"):
-            if mask is None:
-                res = mdmcf_reconfigure(spec, C, old=self.old_config)
-            else:
-                res = mdmcf_degraded(spec, C, old=self.old_config, mask=mask)
+            res = self._solve_mdmcf(C, mask)
         elif st == "mcf":
             if mask is None:
                 res = mdmcf_cold(spec, C)
@@ -320,13 +391,17 @@ class Simulator:
         measured = (time.perf_counter() - t0) * scale
         self.reconfig_calls += 1
         self.reconfig_wall += measured
-        self.ltrr_samples.append(ltrr(res.config, C))
+        # mdmcf_delta already knows its Σ|Δx|; saves an O(H·K·P²) compare
+        self._last_rewired = getattr(res, "rewired", None)
+        self.ltrr_samples.append(res.ltrr)
         if st in ("itv_ilp", "uniform_ilp"):
             comp = ilp_time_model(self.cfg.num_gpus)
         elif self.cfg.timing == "measured":
             comp = measured
         else:
-            comp = poly_time_model(self.cfg.num_gpus)
+            comp = poly_time_model(
+                self.cfg.num_gpus, incremental=self._last_incremental
+            )
         return res.config, comp
 
     # ---- flow model ----------------------------------------------------------
@@ -481,7 +556,11 @@ class Simulator:
             Table 1 shows the effect is tiny)."""
             config, comp_s = self._reconfigure()
             if self.old_config is not None and config is not None:
-                changed = config.rewiring_distance(self.old_config)
+                changed = (
+                    self._last_rewired
+                    if self._last_rewired is not None
+                    else config.rewiring_distance(self.old_config)
+                )
                 if changed:
                     for other in self.running.values():
                         if other.job.job_id != skip_pause_for:
@@ -537,6 +616,7 @@ class Simulator:
                 last_t = until
                 break
             last_t = t
+            self.events += 1
             if kind == FINISH:
                 if finish_version.get(jid) != sq or jid not in self.running:
                     continue  # stale event

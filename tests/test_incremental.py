@@ -1,0 +1,219 @@
+"""Incremental topology engineering (repro.core.incremental): a random
+sequence of demand deltas through ``mdmcf_delta`` must always match the
+cold solve — exact realization, ILP constraints (1)-(6), masked validity —
+with rewiring count no worse than the warm-started cold solve's."""
+import numpy as np
+import pytest
+
+from repro.core.incremental import (
+    ColoringState,
+    DeltaInfeasible,
+    StaleStateError,
+    mdmcf_delta,
+)
+from repro.core.logical import random_feasible_demand, ring_demand
+from repro.core.reconfig import check_ilp_constraints, mdmcf_reconfigure
+from repro.core.topology import ClusterSpec, demand_feasible
+from repro.fault.masks import PortMask
+from repro.fault.recover import degrade_demand
+
+
+def _job_delta_sequence(spec, rng, H, steps, fill=0.5):
+    """Yield a job-arrival/-departure demand sequence starting from a
+    random base (the workload shape the scheduler feeds the delta path)."""
+    C = random_feasible_demand(spec, rng, fill=fill, num_groups=H)
+    yield C
+    rings = []
+    for _ in range(steps):
+        if rings and rng.random() < 0.4:
+            C = C - rings.pop(int(rng.integers(len(rings))))
+        else:
+            n = int(rng.integers(2, min(6, spec.num_pods) + 1))
+            pods = sorted(
+                rng.choice(spec.num_pods, size=n, replace=False).tolist()
+            )
+            R = ring_demand(spec, pods, links=1, num_groups=H)
+            if not demand_feasible(C + R, spec):
+                continue
+            rings.append(R)
+            C = C + R
+        yield C
+
+
+def _run_sequence(spec, rng, H=2, steps=8, fill=0.5):
+    """Drive a delta sequence, asserting per-step exactness and that the
+    *cumulative* rewiring stays within the warm-started cold solve's (a
+    single step may occasionally churn a few more circuits than a full
+    re-color would, but the sequence never does — pinning untouched
+    demand to its slots wins over any horizon)."""
+    seq = _job_delta_sequence(spec, rng, H, steps, fill=fill)
+    C0 = next(seq)
+    res0 = mdmcf_reconfigure(spec, C0)
+    state = ColoringState.from_config(spec, C0, res0.config)
+    prev = res0.config
+    total_inc = total_cold_warm = 0
+    for C in seq:
+        res = mdmcf_delta(spec, state, C)
+        # exact realization + ILP (1)-(6) on every step
+        check_ilp_constraints(spec, C, res.config, topology="cross_wiring")
+        assert res.ltrr == pytest.approx(1.0)
+        # the rewired metric is the true Σ|Δx|
+        assert res.rewired == res.config.rewiring_distance(prev)
+        total_inc += res.rewired
+        cold_warm = mdmcf_reconfigure(spec, C, old=prev).config
+        total_cold_warm += cold_warm.rewiring_distance(prev)
+        prev = res.config
+    assert total_inc <= total_cold_warm
+    return state
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_delta_sequence_matches_cold_solve(seed):
+    rng = np.random.default_rng(seed)
+    P = int(rng.integers(4, 12))
+    K = int(rng.choice([4, 8]))
+    spec = ClusterSpec(num_pods=P, k_spine=K, k_leaf=4)
+    _run_sequence(spec, rng)
+
+
+def test_delta_from_empty_state():
+    spec = ClusterSpec(num_pods=6, k_spine=4, k_leaf=4)
+    state = ColoringState.empty(spec, 2)
+    C = ring_demand(spec, [0, 2, 4], links=1, num_groups=2)
+    res = mdmcf_delta(spec, state, C)
+    check_ilp_constraints(spec, C, res.config, topology="cross_wiring")
+    # back to zero
+    res = mdmcf_delta(spec, state, np.zeros_like(C))
+    assert res.config.x.sum() == 0
+
+
+def test_untouched_groups_never_rewire():
+    spec = ClusterSpec(num_pods=8, k_spine=8, k_leaf=4)
+    rng = np.random.default_rng(0)
+    C = random_feasible_demand(spec, rng, fill=0.5, num_groups=3)
+    res0 = mdmcf_reconfigure(spec, C)
+    state = ColoringState.from_config(spec, C, res0.config)
+    C2 = C.copy()
+    C2[1] = random_feasible_demand(spec, rng, fill=0.4, num_groups=1)[0]
+    res = mdmcf_delta(spec, state, C2)
+    check_ilp_constraints(spec, C2, res.config, topology="cross_wiring")
+    assert (res.config.x[0] == res0.config.x[0]).all()
+    assert (res.config.x[2] == res0.config.x[2]).all()
+
+
+def test_masked_delta_exact_and_stale_detection():
+    rng = np.random.default_rng(5)
+    spec = ClusterSpec(num_pods=8, k_spine=8, k_leaf=4)
+    H = 2
+    mask = PortMask(8, 8, H)
+    mask.fail_link(0, 3, 2)
+    mask.fail_ocs(1, 6)
+    C = degrade_demand(
+        random_feasible_demand(spec, rng, fill=0.6, num_groups=H), mask
+    )
+    res0 = mdmcf_reconfigure(spec, C, mask=mask)
+    state = ColoringState.from_config(spec, C, res0.config, mask=mask)
+    for _ in range(4):
+        C = degrade_demand(
+            random_feasible_demand(spec, rng, fill=0.5, num_groups=H), mask
+        )
+        res = mdmcf_delta(spec, state, C, mask=mask)
+        check_ilp_constraints(
+            spec, C, res.config, topology="cross_wiring", mask=mask
+        )
+    # any mask change invalidates the state
+    mask.fail_link(1, 0, 0)
+    with pytest.raises(StaleStateError):
+        mdmcf_delta(spec, state, C, mask=mask)
+
+
+def test_infeasible_delta_rejected_state_survives():
+    spec = ClusterSpec(num_pods=4, k_spine=4, k_leaf=4)
+    state = ColoringState.empty(spec, 1)
+    bad = np.zeros((1, 4, 4), dtype=np.int64)
+    bad[0, 0, 1] = bad[0, 1, 0] = spec.k_spine + 1  # degree overflow
+    with pytest.raises(DeltaInfeasible):
+        mdmcf_delta(spec, state, bad)
+    ok = np.zeros((1, 4, 4), dtype=np.int64)
+    ok[0, 0, 1] = ok[0, 1, 0] = 2
+    res = mdmcf_delta(spec, state, ok)  # state not poisoned by the reject
+    check_ilp_constraints(spec, ok, res.config, topology="cross_wiring")
+
+
+def test_scheduler_carries_state_and_stays_exact():
+    """End-to-end: the simulator's incremental path must keep the raw x
+    (no derived-view caches) exactly realizing the aggregate demand."""
+    from repro.sim import SimConfig, Simulator, generate_trace
+
+    jobs = generate_trace(
+        60, num_gpus=32 * 64, workload_level=0.9, seed=3, max_job_gpus=512
+    )
+    cfg = SimConfig(
+        architecture="cross_wiring", strategy="mdmcf", num_pods=32,
+        k_spine=8, k_leaf=8, sim_groups=4, incremental=True,
+    )
+    sim = Simulator(cfg, jobs)
+    recs = sim.run()
+    assert sim.delta_calls > 0, "delta path never used"
+    st = sim._coloring_state
+    assert st is not None and not st._poisoned
+    out = st.emit_config()
+    out.validate()  # sub-permutation on raw x
+    x = out.x.astype(np.int64)
+    assert (x.sum(axis=1) == st.C).all()  # exact realization, no caches
+    assert (sim.old_config.x == st._x).all()  # emitted mirror in sync
+    even, odd = x[:, 0::2], x[:, 1::2]
+    assert (odd == np.transpose(even, (0, 1, 3, 2))).all()  # L2 pairing
+    # and the workload completed as under the cold path
+    import math
+
+    assert all(math.isfinite(r.finish) for r in recs)
+
+
+def test_scheduler_incremental_matches_cold_jct_ordering():
+    """Incremental vs cold runs of the same trace agree on LTRR == 1 and
+    complete the same job set (JCTs may differ slightly: min-rewiring
+    deltas move fewer circuits, so fewer OCS switching pauses)."""
+    from repro.sim import SimConfig, Simulator, generate_trace
+
+    jobs = generate_trace(
+        50, num_gpus=32 * 64, workload_level=0.801, seed=1, max_job_gpus=512
+    )
+    finishes = {}
+    for inc in (False, True):
+        cfg = SimConfig(
+            architecture="cross_wiring", strategy="mdmcf", num_pods=32,
+            k_spine=8, k_leaf=8, incremental=inc,
+        )
+        sim = Simulator(cfg, jobs)
+        recs = sim.run()
+        assert np.min(sim.ltrr_samples) == pytest.approx(1.0)
+        finishes[inc] = [np.isfinite(r.finish) for r in recs]
+    assert finishes[False] == finishes[True]
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property: random delta sequences == cold solve, fewer rewirings
+# ---------------------------------------------------------------------------
+
+def test_property_random_delta_sequences():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @st.composite
+    def sequences(draw):
+        p = draw(st.integers(4, 10))
+        k = draw(st.sampled_from([4, 8]))
+        seed = draw(st.integers(0, 2**31 - 1))
+        steps = draw(st.integers(2, 8))
+        return p, k, seed, steps
+
+    @settings(max_examples=25, deadline=None)
+    @given(sequences())
+    def inner(arg):
+        p, k, seed, steps = arg
+        spec = ClusterSpec(num_pods=p, k_spine=k, k_leaf=4)
+        rng = np.random.default_rng(seed)
+        _run_sequence(spec, rng, steps=steps)
+
+    inner()
