@@ -83,10 +83,7 @@ def _steady_goodput(P, k, fractions, horizon, seed=0):
     jobs = []
     for jid, (pods, model, ep, pp) in enumerate(_steady_layout(P)):
         links = k if len(pods) == 2 else k // 2
-        edges = dist_demand.job_edges(model, pods, links, ep=ep, pp=pp)
-        alpha = dist_demand.comm_fraction_for(
-            model, len(pods), ep=ep, pp=pp, links=links
-        )
+        edges, alpha = dist_demand.job_flow(model, pods, links, ep=ep, pp=pp)
         jobs.append((jid, edges, alpha, len(pods) * spec.gpus_per_pod))
     total_gpus = sum(j[3] for j in jobs)
 
@@ -157,28 +154,36 @@ def _policies(P, k, n_jobs, seed=0):
         RepairEvent(t_fail + 2 * 3600.0, "pod", pod=1),
     ]
     rows = []
-    for policy in ("rewire_around", "ckpt_restart", "shrink_collective"):
-        sim = Simulator(
-            SimConfig(
-                architecture="cross_wiring", strategy="mdmcf",
-                num_pods=P, k_spine=k, k_leaf=k, recovery_policy=policy,
-            ),
-            jobs,
-            fault_events=events,
-        )
-        recs = sim.run()
-        fs = sim.fault_summary()
-        s = summarize(recs)
-        rows.append(
-            {
-                "policy": policy,
-                "restarts": int(fs["restarts"]),
-                "shrinks": int(fs["shrinks"]),
-                "lost_gpu_s": fs["lost_gpu_s"],
-                "availability": fs["availability"],
-                "avg_jct": s["avg_jct"],
-            }
-        )
+    # engine axis: the fluid engine prices OCS retune windows (100 ms) and
+    # drives the 'cheapest' policy with fluid-measured degradation
+    for engine in ("analytic", "fluid"):
+        policies = ("rewire_around", "ckpt_restart", "shrink_collective",
+                    "cheapest")
+        for policy in policies:
+            sim = Simulator(
+                SimConfig(
+                    architecture="cross_wiring", strategy="mdmcf",
+                    num_pods=P, k_spine=k, k_leaf=k, recovery_policy=policy,
+                    engine=engine,
+                    reconfig_delay_s=0.1 if engine == "fluid" else 0.0,
+                ),
+                jobs,
+                fault_events=events,
+            )
+            recs = sim.run()
+            fs = sim.fault_summary()
+            s = summarize(recs)
+            rows.append(
+                {
+                    "policy": policy,
+                    "engine": engine,
+                    "restarts": int(fs["restarts"]),
+                    "shrinks": int(fs["shrinks"]),
+                    "lost_gpu_s": fs["lost_gpu_s"],
+                    "availability": fs["availability"],
+                    "avg_jct": s["avg_jct"],
+                }
+            )
     return rows
 
 
@@ -272,7 +277,8 @@ def main():
         )
     for r in p["policies"]:
         print(
-            f"availability,policy,{r['policy']},restarts={r['restarts']},"
+            f"availability,policy,{r['policy']}@{r['engine']},"
+            f"restarts={r['restarts']},"
             f"shrinks={r['shrinks']},lost_gpu_s={r['lost_gpu_s']:.0f},"
             f"avg_jct={r['avg_jct']:.0f}"
         )

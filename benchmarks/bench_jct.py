@@ -25,6 +25,12 @@ PAIRS = [
     ("clos", "none"),
 ]
 
+# engine axis: fluid rows re-run the OCS pairs with the event-driven fluid
+# engine and a 100 ms reconfiguration dark window (sim/fluid.py) — what the
+# analytic snapshot model approximates with its fixed switching pause
+FLUID_PAIRS = [("cross_wiring", "mdmcf"), ("uniform", "greedy")]
+FLUID_DELAY_S = 0.1
+
 
 def _one_scale(num_pods: int, k: int, n_jobs: int, wl: float, seed: int = 0):
     num_gpus = num_pods * k * k
@@ -34,11 +40,15 @@ def _one_scale(num_pods: int, k: int, n_jobs: int, wl: float, seed: int = 0):
     )
     out = {}
     best = None
-    for arch, strat in PAIRS:
+    runs = [(arch, strat, "analytic") for arch, strat in PAIRS]
+    runs += [(arch, strat, "fluid") for arch, strat in FLUID_PAIRS]
+    for arch, strat, engine in runs:
         sim = Simulator(
             SimConfig(
                 architecture=arch, strategy=strat,
                 num_pods=num_pods, k_spine=k, k_leaf=k,
+                engine=engine,
+                reconfig_delay_s=FLUID_DELAY_S if engine == "fluid" else 0.0,
             ),
             jobs,
         )
@@ -58,7 +68,11 @@ def _one_scale(num_pods: int, k: int, n_jobs: int, wl: float, seed: int = 0):
         s["pct_affected"] = float(
             np.mean([r.min_phi < 0.999 for r in recs]) * 100
         )
-        out[f"{arch}/{strat}"] = s
+        key = f"{arch}/{strat}"
+        if engine != "analytic":
+            key += f"@{engine}"
+            s["downtime_circuit_s"] = sim.downtime_circuit_s
+        out[key] = s
     return out
 
 

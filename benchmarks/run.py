@@ -16,6 +16,7 @@ from . import (
     bench_availability,
     bench_collectives,
     bench_control_plane,
+    bench_fluid,
     bench_jct,
     bench_ltrr,
     bench_mrar,
@@ -44,6 +45,10 @@ BENCHES = {
     "control_plane": (
         bench_control_plane,
         "ours: simulator events/sec, incremental vs cold",
+    ),
+    "fluid": (
+        bench_fluid,
+        "ours: fluid engine events/sec, fidelity gap, downtime pricing",
     ),
 }
 
@@ -159,6 +164,33 @@ def _summarize(name: str, payload: dict) -> None:
                 f"step,{r['arch']},train_ms={r['train_ms']:.1f},"
                 f"decode_ms={r['decode_ms']:.1f}"
             )
+    elif name == "fluid":
+        t = payload["throughput"]
+        print(
+            f"fluid,events,P={t['num_pods']},events={t['events']},"
+            f"eps={t['events_per_sec']:.0f}/s"
+        )
+        for r in payload["rows"]:
+            if r["kind"] == "fidelity":
+                print(
+                    f"fluid,fidelity,delay={r['delay_s']},"
+                    f"gap_mean={r['rel_gap_mean']:.2e},"
+                    f"downtime_circ_s={r['downtime_circuit_s']:.2f}"
+                )
+            else:
+                print(
+                    f"fluid,downtime,{r['mode']},delay={r['delay_s']},"
+                    f"circ_s={r['downtime_circuit_s']:.2f},"
+                    f"avg_jct={r['avg_jct']:.0f}"
+                )
+        checks = payload["checks"]
+        print(
+            "fluid,checks,"
+            + ",".join(
+                f"{k}={v}" for k, v in checks.items()
+                if not isinstance(v, dict)
+            )
+        )
     elif name == "collectives":
         for r in payload["rows"]:
             print(

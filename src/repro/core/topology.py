@@ -20,7 +20,7 @@ Everything here is plain numpy — this is the cluster *control plane*.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, FrozenSet, List, Optional, Tuple
 
 import numpy as np
 
@@ -50,6 +50,13 @@ class ClusterSpec:
         number of links between each (leaf, spine) pair inside a pod.
     k_ocs:
         number of ingress (= egress) ports per OCS; bounds the pod count.
+    slowdown_cap:
+        flow-model slowdown ceiling for starved cross-pod traffic: a flow
+        whose OCS circuits are gone still progresses at ``1/slowdown_cap``
+        of full rate over residual electrical paths.  ``None`` configures
+        *zero* residual electrical capacity — a fully-dark circuit then
+        stalls its flows outright (infinite slowdown) instead of quietly
+        bottoming out at the cap.
     """
 
     num_pods: int
@@ -57,10 +64,13 @@ class ClusterSpec:
     k_leaf: int = 8
     tau: int = 1
     k_ocs: int = 512
+    slowdown_cap: Optional[float] = 4.0
 
     def __post_init__(self) -> None:
         if self.k_spine % 2:
             raise ValueError("K_spine must be even (paper assumes port pairing)")
+        if self.slowdown_cap is not None and self.slowdown_cap < 1.0:
+            raise ValueError("slowdown_cap must be >= 1 (or None for no floor)")
         if self.k_leaf % self.tau:
             raise ValueError("K_leaf must be divisible by tau")
         if self.num_pods > self.k_ocs:
@@ -216,6 +226,18 @@ class OCSConfig:
     def rewiring_distance(self, other: "OCSConfig") -> int:
         """Min-Rewiring objective (eq. 7): Σ |x - u| (= Σ x≠u for 0/1 x)."""
         return int(np.count_nonzero(self.x != other.x))
+
+    def changed_pairs(self, other: "OCSConfig") -> FrozenSet[Tuple[int, int]]:
+        """Pod pairs ``(i, j)`` (i ≤ j) whose circuits differ from ``other``
+        anywhere in the OCS layer — the circuits that must physically
+        retune during a reconfiguration and therefore carry zero bandwidth
+        for the switching delay (the fluid engine's dark set).  Incremental
+        deltas (:mod:`~repro.core.incremental`) move fewer circuits, so
+        their dark set — and the time-priced downtime — is smaller."""
+        diff = (self.x != other.x).any(axis=(0, 1))
+        diff |= diff.T
+        ii, jj = np.nonzero(np.triu(diff))
+        return frozenset(zip(ii.tolist(), jj.tolist()))
 
 
 class PhysicalTopology:

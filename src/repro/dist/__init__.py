@@ -23,6 +23,7 @@ from .demand import (
     comm_fraction_for,
     edges_to_matrix,
     job_edges,
+    job_flow,
     ring_order,
     uncoverable_fraction,
 )
@@ -63,6 +64,7 @@ __all__ = [
     "comm_fraction_for",
     "edges_to_matrix",
     "job_edges",
+    "job_flow",
     "mesh_axis_sizes",
     "param_pspec",
     "param_specs",

@@ -38,6 +38,7 @@ __all__ = [
     "comm_fraction_for",
     "edges_to_matrix",
     "job_edges",
+    "job_flow",
     "ring_order",
     "uncoverable_fraction",
 ]
@@ -121,6 +122,30 @@ def job_edges(
         model, len(pods), tp=tp, ep=ep, pp=pp, zero1=zero1
     )
     return collectives_to_edges(colls, pods, links)
+
+
+def job_flow(
+    model: str,
+    pods: Sequence[int],
+    links: int,
+    ep: int = 1,
+    pp: int = 1,
+    tp: int = 8,
+    zero1: bool = False,
+) -> Tuple[Edges, float]:
+    """One job's planner demand as a fluid-flow payload: ``(edges, α)``.
+
+    The bridge the flow engines consume — ``edges`` feed
+    :class:`repro.sim.fluid.Flow` / :class:`repro.sim.flowsim.JobFlows`
+    and α is the cross-pod communication fraction the slowdown model
+    stretches by 1/φ.  Both derive from the same planned schedule, so a
+    caller can never pair mismatched demand and fraction.
+    """
+    edges = job_edges(model, pods, links, ep=ep, pp=pp, tp=tp, zero1=zero1)
+    alpha = comm_fraction_for(
+        model, len(pods), ep=ep, pp=pp, links=max(1, links), tp=tp
+    )
+    return edges, alpha
 
 
 def edges_to_matrix(edges: Edges, num_pods: int, num_groups: int = 1) -> np.ndarray:

@@ -19,6 +19,7 @@ from .model import (
     merge_events,
 )
 from .recover import (
+    CHEAPEST,
     CKPT_RESTART,
     POLICIES,
     REWIRE_AROUND,
@@ -27,11 +28,13 @@ from .recover import (
     degrade_demand,
     masked_aggregate_demand,
     mdmcf_degraded,
+    policy_costs,
     restart_cost_s,
     rollback_loss,
 )
 
 __all__ = [
+    "CHEAPEST",
     "CKPT_RESTART",
     "ExpandEvent",
     "FailureEvent",
@@ -48,6 +51,7 @@ __all__ = [
     "masked_aggregate_demand",
     "mdmcf_degraded",
     "merge_events",
+    "policy_costs",
     "restart_cost_s",
     "rollback_loss",
 ]

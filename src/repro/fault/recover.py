@@ -43,6 +43,7 @@ Recovery policies (consumed by ``sim/scheduler.py``)
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, Optional
 
 import numpy as np
@@ -60,10 +61,12 @@ __all__ = [
     "REWIRE_AROUND",
     "SHRINK_COLLECTIVE",
     "CKPT_RESTART",
+    "CHEAPEST",
     "checkpoint_bytes",
     "degrade_demand",
     "masked_aggregate_demand",
     "mdmcf_degraded",
+    "policy_costs",
     "restart_cost_s",
     "rollback_loss",
 ]
@@ -71,7 +74,8 @@ __all__ = [
 REWIRE_AROUND = "rewire_around"
 SHRINK_COLLECTIVE = "shrink_collective"
 CKPT_RESTART = "ckpt_restart"
-POLICIES = (REWIRE_AROUND, SHRINK_COLLECTIVE, CKPT_RESTART)
+CHEAPEST = "cheapest"  # per-victim argmin over the fluid-priced costs
+POLICIES = (REWIRE_AROUND, SHRINK_COLLECTIVE, CKPT_RESTART, CHEAPEST)
 
 # Checkpoint state vs bf16 gradient bytes: bf16 params (1×) + fp32 master
 # params (2×) + two fp32 Adam moments (4×) = 7× — the pytree
@@ -238,3 +242,77 @@ def rollback_loss(progress_s: float, ckpt_interval_s: float) -> float:
     if ckpt_interval_s <= 0:
         return progress_s
     return progress_s - ckpt_interval_s * (progress_s // ckpt_interval_s)
+
+
+def _stretch(comm_fraction: float, phi: float, cap: Optional[float]) -> float:
+    """Local copy of the flow model's JRT multiplier (``repro.fault`` sits
+    below ``repro.sim`` in the layering, so no import): comm stretches by
+    1/φ above the residual-electrical floor ``1/cap``; ``cap=None`` with
+    φ=0 means no progress at all."""
+    floor = 0.0
+    if cap is not None and math.isfinite(cap) and cap > 0:
+        floor = 1.0 / cap
+    phi = min(1.0, max(phi, floor))
+    if phi <= 0.0:
+        return math.inf if comm_fraction > 0 else 1.0
+    return 1.0 + comm_fraction * (1.0 / phi - 1.0)
+
+
+def policy_costs(
+    *,
+    service_s: float,
+    progress_s: float,
+    model: str,
+    num_gpus: int,
+    lost_gpus: int,
+    comm_fraction: float,
+    phi_shrunk: float,
+    ckpt_interval_s: float,
+    slowdown_cap: Optional[float] = 4.0,
+    cur_gpus: Optional[int] = None,
+) -> Dict[str, float]:
+    """Estimated seconds until a pod-failure victim completes, per policy.
+
+    ``phi_shrunk`` must be the *fluid-measured* bandwidth fraction of the
+    job's replanned (pod-dropped) collectives on the realized topology —
+    the max-min level :func:`repro.sim.fluid.fluid_fractions` reports with
+    the dead pod's circuits dark — not the static worst-edge φ snapshot a
+    single pre-failure configuration would suggest.  The restart policies
+    requeue the job, so their remaining work is priced at full rate on a
+    fresh healthy placement (their cost is dominated by the lost progress
+    and restore I/O):
+
+    * ``rewire_around`` — no checkpoint infrastructure: the whole run so
+      far is lost; fixed reschedule overhead plus the full service time.
+    * ``ckpt_restart`` — roll back to the last checkpoint (losing the
+      tail), pay the sharded restore, then finish the rest.
+    * ``shrink_collective`` — keep running on the surviving GPUs: the
+      remaining work stretches by the compute deficit *and* by the
+      fluid-measured communication slowdown of the shrunken ring.
+      Infinite when no GPU survives.
+
+    ``num_gpus`` is the job's *full* size (its service time is calibrated
+    to it, and restarts re-place at full size); ``cur_gpus`` the GPUs it
+    currently runs on — smaller after earlier shrinks, so a second shrink
+    is priced against the full calibration base, not the already-shrunk
+    one.  Defaults to ``num_gpus`` (never shrunk).
+    """
+    if cur_gpus is None:
+        cur_gpus = num_gpus
+    remaining = max(0.0, service_s - progress_s)
+    out = {
+        REWIRE_AROUND: RESTART_FIXED_S + service_s,
+        CKPT_RESTART: restart_cost_s(model, num_gpus)
+        + remaining
+        + rollback_loss(progress_s, ckpt_interval_s),
+    }
+    survivors = cur_gpus - lost_gpus
+    if survivors > 0:
+        out[SHRINK_COLLECTIVE] = (
+            remaining
+            * (num_gpus / survivors)
+            * _stretch(comm_fraction, phi_shrunk, slowdown_cap)
+        )
+    else:
+        out[SHRINK_COLLECTIVE] = math.inf
+    return out

@@ -1,20 +1,41 @@
-"""RapidAISim-analog: flow-level multi-tenant cluster simulation (paper §6)."""
+"""RapidAISim-analog: flow-level multi-tenant cluster simulation (paper §6).
+
+Two progress engines share one scheduler interface
+(``SimConfig.engine``): the closed-form snapshot model (:mod:`.flowsim`)
+and the event-driven max-min fluid simulator (:mod:`.fluid`) that prices
+OCS reconfiguration downtime and time-varying contention.
+"""
 from .flowsim import (
     JobFlows,
     job_slowdown,
     realized_fractions,
     ring_edges,
     waterfill_fractions,
+    waterfill_levels,
 )
-from .scheduler import JobRecord, SimConfig, Simulator, ilp_time_model, summarize
+from .fluid import CapacityEvent, Flow, FlowRecord, FluidSim, fluid_fractions
+from .scheduler import (
+    ENGINES,
+    JobRecord,
+    SimConfig,
+    Simulator,
+    ilp_time_model,
+    summarize,
+)
 from .trace import arrival_rate_for, generate_trace
 
 __all__ = [
+    "CapacityEvent",
+    "ENGINES",
+    "Flow",
+    "FlowRecord",
+    "FluidSim",
     "JobFlows",
     "JobRecord",
     "SimConfig",
     "Simulator",
     "arrival_rate_for",
+    "fluid_fractions",
     "generate_trace",
     "ilp_time_model",
     "job_slowdown",
@@ -22,4 +43,5 @@ __all__ = [
     "ring_edges",
     "summarize",
     "waterfill_fractions",
+    "waterfill_levels",
 ]

@@ -19,19 +19,43 @@ Architectures:
 * ``clos``  — 3-tier electrical Clos: demand is always routable, but ECMP
   hash polarization [28] concentrates flows: φ = 1/(1+β·ρ) with ρ the
   pod-pair oversubscription ratio and β the polarization severity.
+
+The residual-electrical slowdown ceiling is a deployment parameter
+(:attr:`~repro.core.topology.ClusterSpec.slowdown_cap`): a starved flow
+bottoms out at ``1/slowdown_cap`` of full rate over leftover electrical
+paths, and ``slowdown_cap=None`` models a cluster with *no* residual
+fabric — a fully-dark circuit then stalls its flows (infinite slowdown)
+instead of silently progressing at the cap.  ``SLOWDOWN_CAP`` is only the
+spec's default value.
+
+The vectorized progressive-filling core (:func:`waterfill_levels`) is
+shared with the event-driven fluid engine (:mod:`.fluid`), which replays
+the same allocation through time instead of from one snapshot.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+import math
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.logical import Placement, ring_pairs
+from ..core.logical import ring_pairs
 from ..core.topology import ClusterSpec, OCSConfig
 
-SLOWDOWN_CAP = 4.0  # a starved flow still gets residual electrical paths
+SLOWDOWN_CAP = 4.0  # default ClusterSpec.slowdown_cap (residual electrical)
 CLOS_BETA = 0.013  # hash-polarization severity (calibrated to ~1.3% avg JRT gap)
+
+
+def phi_floor(cap: Optional[float]) -> float:
+    """The φ floor implied by a slowdown cap (0 when no residual fabric)."""
+    if cap is None or not math.isfinite(cap) or cap <= 0:
+        return 0.0
+    return 1.0 / cap
+
+
+def _spec_cap(spec: ClusterSpec) -> Optional[float]:
+    return getattr(spec, "slowdown_cap", SLOWDOWN_CAP)
 
 
 @dataclasses.dataclass
@@ -85,6 +109,7 @@ def realized_fractions(
 
     assert config is not None, "OCS architectures need a realized config"
     realized_pair = config.pair_capacity()
+    floor = phi_floor(_spec_cap(spec))
 
     for f in flows:
         worst = 1.0
@@ -92,60 +117,42 @@ def realized_fractions(
             got = realized_pair[e[0], e[1]]
             share = got * (r / max(1, total_req[e]))
             worst = min(worst, share / r if r else 1.0)
-        phi[f.job_id] = float(np.clip(worst, 1.0 / SLOWDOWN_CAP, 1.0))
+        phi[f.job_id] = float(np.clip(worst, floor, 1.0))
     return phi
 
 
-def job_slowdown(comm_fraction: float, phi: float) -> float:
-    """JRT multiplier: comm stretches by 1/φ, compute unaffected."""
-    return 1.0 + comm_fraction * (1.0 / max(phi, 1.0 / SLOWDOWN_CAP) - 1.0)
+def job_slowdown(
+    comm_fraction: float, phi: float, cap: Optional[float] = SLOWDOWN_CAP
+) -> float:
+    """JRT multiplier: comm stretches by 1/φ, compute unaffected.
 
-
-def waterfill_fractions(
-    spec: ClusterSpec,
-    flows: Sequence[JobFlows],
-    config: Optional[OCSConfig],
-    architecture: str,
-) -> Dict[int, float]:
-    """φ per job from vectorized max-min water-filling over edges.
-
-    Progressive filling: every unfrozen flow's satisfied fraction x rises
-    uniformly until some edge saturates (Σ demand·x = capacity); flows on
-    saturated edges freeze at that level and release no further demand,
-    and the remaining flows keep filling with the leftover capacity.  A
-    collective runs at its slowest edge, so x is per-flow, not per-edge —
-    each job's φ is the level at which it froze.
-
-    Compared to the proportional heuristic (:func:`realized_fractions`),
-    capacity a frozen flow cannot use is redistributed, so φ is a true
-    max-min allocation.  ``best``/``clos`` delegate (no OCS edges there).
+    ``cap`` is the residual-electrical slowdown ceiling (see module doc);
+    with ``cap=None`` a φ of zero means the flow makes no progress at all
+    (``inf`` — the fluid engine turns this into a stall, not a finite JRT).
     """
-    if architecture in ("best", "clos"):
-        return realized_fractions(spec, flows, config, architecture)
-    assert config is not None, "OCS architectures need a realized config"
-    flows = list(flows)
-    if not flows:
-        return {}
+    phi = min(1.0, max(phi, phi_floor(cap)))
+    if phi <= 0.0:
+        return math.inf if comm_fraction > 0 else 1.0
+    return 1.0 + comm_fraction * (1.0 / phi - 1.0)
 
-    cap_pair = config.pair_capacity()
 
-    edge_ix: Dict[Tuple[int, int], int] = {}
-    for f in flows:
-        for e in f.edges:
-            edge_ix.setdefault(e, len(edge_ix))
-    if not edge_ix:
-        return {f.job_id: 1.0 for f in flows}
+def waterfill_levels(D: np.ndarray, cap: np.ndarray) -> np.ndarray:
+    """Vectorized max-min progressive filling: per-flow fill levels.
 
-    F, E = len(flows), len(edge_ix)
-    D = np.zeros((F, E), dtype=np.float64)  # requested links per (flow, edge)
-    for fi, f in enumerate(flows):
-        for e, r in f.edges.items():
-            D[fi, edge_ix[e]] = float(r)
-    cap = np.array(
-        [cap_pair[i, j] for (i, j) in edge_ix], dtype=np.float64
-    )
-
+    ``D`` is the ``(F, E)`` per-flow edge demand, ``cap`` the ``(E,)`` edge
+    capacities.  Every unfrozen flow's satisfied fraction x rises uniformly
+    until some edge saturates (Σ demand·x = capacity); flows on saturated
+    edges freeze at that level and release no further demand, and the rest
+    keep filling with the leftover capacity.  A collective runs at its
+    slowest edge, so x is per-flow, not per-edge.  Returns x ∈ [0, 1]^F,
+    *unclipped* — a flow whose every path is dark gets exactly 0.
+    """
+    D = np.asarray(D, dtype=np.float64)
+    cap = np.asarray(cap, dtype=np.float64)
+    F, E = D.shape
     x = np.ones(F, dtype=np.float64)
+    if F == 0 or E == 0:
+        return x
     active = D.any(axis=1)
     frozen_use = np.zeros(E, dtype=np.float64)
     for _ in range(E):
@@ -165,8 +172,60 @@ def waterfill_fractions(
         x[hit] = lvl
         frozen_use += lvl * (hit @ D)
         active &= ~hit
+    return x
 
+
+def demand_matrix(
+    flows: Sequence[JobFlows], cap_pair: np.ndarray
+) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+    """Assemble the ``(F, E)`` demand matrix and ``(E,)`` capacity vector
+    over the union edge set of ``flows`` (None when no flow has edges).
+
+    Small-scale snapshot path; the fluid engine's per-event hot loop uses
+    cached encoded edge arrays instead (``fluid.FluidSim._rates``).
+    """
+    edge_ix: Dict[Tuple[int, int], int] = {}
+    for f in flows:
+        for e in f.edges:
+            edge_ix.setdefault(e, len(edge_ix))
+    if not edge_ix:
+        return None
+    F, E = len(flows), len(edge_ix)
+    D = np.zeros((F, E), dtype=np.float64)  # requested links per (flow, edge)
+    for fi, f in enumerate(flows):
+        for e, r in f.edges.items():
+            D[fi, edge_ix[e]] = float(r)
+    cap = np.array([cap_pair[i, j] for (i, j) in edge_ix], dtype=np.float64)
+    return D, cap
+
+
+def waterfill_fractions(
+    spec: ClusterSpec,
+    flows: Sequence[JobFlows],
+    config: Optional[OCSConfig],
+    architecture: str,
+) -> Dict[int, float]:
+    """φ per job from vectorized max-min water-filling over edges.
+
+    Compared to the proportional heuristic (:func:`realized_fractions`),
+    capacity a frozen flow cannot use is redistributed, so φ is a true
+    max-min allocation (see :func:`waterfill_levels`).  ``best``/``clos``
+    delegate (no OCS edges there).  φ is clipped to the spec's residual-
+    electrical floor — zero when ``slowdown_cap`` is None.
+    """
+    if architecture in ("best", "clos"):
+        return realized_fractions(spec, flows, config, architecture)
+    assert config is not None, "OCS architectures need a realized config"
+    flows = list(flows)
+    if not flows:
+        return {}
+
+    mat = demand_matrix(flows, config.pair_capacity())
+    if mat is None:
+        return {f.job_id: 1.0 for f in flows}
+    x = waterfill_levels(*mat)
+    floor = phi_floor(_spec_cap(spec))
     return {
-        f.job_id: float(np.clip(x[fi], 1.0 / SLOWDOWN_CAP, 1.0))
+        f.job_id: float(np.clip(x[fi], floor, 1.0))
         for fi, f in enumerate(flows)
     }

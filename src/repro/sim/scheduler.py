@@ -51,6 +51,7 @@ from ..core.topology import ClusterSpec, OCSConfig, demand_feasible
 from ..dist import collectives as dist_collectives
 from ..dist import demand as dist_demand
 from ..fault import (
+    CHEAPEST,
     ExpandEvent,
     FailureEvent,
     FaultEvent,
@@ -62,14 +63,18 @@ from ..fault import (
     apply_event,
     masked_aggregate_demand,
     mdmcf_degraded,
+    policy_costs,
     restart_cost_s,
     rollback_loss,
 )
 from ..fault.recover import RESTART_FIXED_S
 from . import flowsim
+from . import fluid as fluid_engine
 from .trace import COMM_FRACTION
 
-OCS_SWITCH_S = 0.1  # optical switching pause applied to impacted jobs
+OCS_SWITCH_S = 0.1  # analytic engine's optical switching pause stand-in;
+# the fluid engine prices switching as real dark windows instead
+ENGINES = ("analytic", "fluid")
 
 
 def ilp_time_model(num_gpus: int) -> float:
@@ -106,8 +111,16 @@ class SimConfig:
     incremental: bool = True  # carry ColoringState between events and patch
     # the decomposition with mdmcf_delta (cold-solving only on mask changes
     # or budget-exceeding demand); False = cold-solve every event
+    # ---- progress engine (repro.sim.fluid) -------------------------------
+    engine: str = "analytic"  # analytic (closed-form snapshot stretch) |
+    # fluid (event-driven max-min fluid flows with reconfiguration dark
+    # windows; see sim/fluid.py)
+    reconfig_delay_s: float = 0.0  # OCS retune time: circuits changed by a
+    # reconfiguration carry zero bandwidth this long (fluid engine only;
+    # the analytic engine keeps the legacy OCS_SWITCH_S progress pause)
     # ---- resilience (repro.fault) ---------------------------------------
-    recovery_policy: str = REWIRE_AROUND  # | shrink_collective | ckpt_restart
+    recovery_policy: str = REWIRE_AROUND  # | shrink_collective |
+    # ckpt_restart | cheapest (per-victim argmin of the fluid-priced costs)
     ckpt_interval_s: float = 1800.0  # checkpoint cadence for ckpt_restart
     active_pods: Optional[int] = None  # initially populated pods (expansion
     # scenarios; None → all num_pods live from t=0)
@@ -115,6 +128,10 @@ class SimConfig:
     def __post_init__(self) -> None:
         if self.recovery_policy not in POLICIES:
             raise ValueError(f"recovery_policy must be one of {POLICIES}")
+        if self.engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}")
+        if self.reconfig_delay_s < 0:
+            raise ValueError("reconfig_delay_s must be >= 0")
 
     @property
     def spec(self) -> ClusterSpec:
@@ -258,6 +275,12 @@ class Simulator:
         self.restarts = 0
         self.shrinks = 0
         self.lost_gpu_s = 0.0  # GPU-seconds of work destroyed by rollbacks
+        self.policy_decisions: List[Dict[str, object]] = []  # cheapest-policy log
+        # ---- fluid engine state (repro.sim.fluid) ------------------------
+        self._dark = fluid_engine.DarkWindows()  # circuits retuning now
+        self.downtime_events = 0
+        self.downtime_s = 0.0  # wall seconds of dark windows opened
+        self.downtime_circuit_s = 0.0  # time-priced: Σ delay · Σ|Δx|
         self._pod_down_since: Dict[int, float] = {}
         self._gpu_down_s = 0.0  # GPU-seconds pods spent failed
         self._cap_t = 0.0  # capacity integral (expansion-aware)
@@ -421,15 +444,24 @@ class Simulator:
             flowsim.JobFlows(jid, r.edges, r.comm_frac)
             for jid, r in self.running.items()
         ]
-        phi = flowsim.waterfill_fractions(
-            self.spec, flows, config, self.cfg.architecture
-        )
+        cap = self.spec.slowdown_cap
+        if self.cfg.engine == "fluid":
+            phi = fluid_engine.fluid_fractions(
+                self.spec, flows, config, self.cfg.architecture,
+                dark_pairs=self._dark.active(now), cap=cap,
+            )
+        else:
+            phi = flowsim.waterfill_fractions(
+                self.spec, flows, config, self.cfg.architecture
+            )
         for jid, r in self.running.items():
             r.advance(now)
             p = phi.get(jid, 1.0)
             # compute_scale > 1 after shrink-collective: fewer GPUs do the
             # same work, on top of any communication stretch
-            r.slowdown = r.compute_scale * flowsim.job_slowdown(r.comm_frac, p)
+            r.slowdown = r.compute_scale * flowsim.job_slowdown(
+                r.comm_frac, p, cap=cap
+            )
             r.record.min_phi = min(r.record.min_phi, p)
 
     # ---- fault handling --------------------------------------------------
@@ -458,6 +490,20 @@ class Simulator:
         self.lost_gpu_s += lost * r.job.num_gpus
         return now + cost
 
+    def _replan_without_pod(self, job: Job, pods: Dict[int, int]):
+        """Re-plan a job's collectives over ``pods`` (a surviving pod →
+        GPU-count map): returns ``(order, edges, comm_frac)``."""
+        pods_left = sorted(pods)
+        if len(pods_left) >= 2:
+            links = self._ring_links(job, pods)
+            order = dist_demand.ring_order(pods_left, self.old_config, links=links)
+            edges = dist_demand.job_edges(
+                job.model, order, links, ep=job.ep, pp=job.pp, tp=job.tp
+            )
+            comm_frac = self._comm_fraction(job, len(pods_left), links)
+            return order, edges, comm_frac
+        return tuple(pods_left), {}, 0.0
+
     def _shrink_job(self, now: float, r: _Running, pod: int) -> None:
         """Drop ``pod`` from a running job's collectives and continue on
         the surviving GPUs (shrink-collective policy)."""
@@ -465,19 +511,55 @@ class Simulator:
         self.free[pod] += lost_gpus
         r.cur_gpus -= lost_gpus
         r.compute_scale = r.job.num_gpus / r.cur_gpus
-        pods_left = sorted(r.placement.pods)
-        if len(pods_left) >= 2:
-            links = self._ring_links(r.job, r.placement.pods)
-            order = dist_demand.ring_order(pods_left, self.old_config, links=links)
-            r.edges = dist_demand.job_edges(
-                r.job.model, order, links, ep=r.job.ep, pp=r.job.pp, tp=r.job.tp
-            )
-            r.comm_frac = self._comm_fraction(r.job, len(pods_left), links)
-        else:
-            order, r.edges, r.comm_frac = tuple(pods_left), {}, 0.0
+        order, r.edges, r.comm_frac = self._replan_without_pod(
+            r.job, r.placement.pods
+        )
         r.placement = Placement(r.job.job_id, r.placement.pods, ring_order=order)
         r.record.shrinks += 1
         self.shrinks += 1
+
+    def _choose_policy(self, now: float, r: _Running, pod: int) -> str:
+        """Pick the cheapest recovery policy for one victim of a pod
+        failure, pricing the shrink path with the *fluid-measured*
+        degradation: the max-min φ its replanned collectives would get on
+        the realized topology with the dead pod's circuits dark (not the
+        static worst-edge snapshot — see ``repro.fault.recover``)."""
+        survivors = {p: n for p, n in r.pods.items() if p != pod}
+        lost_gpus = r.pods.get(pod, 0)
+        _, edges, alpha = self._replan_without_pod(r.job, survivors)
+        phi_shrunk = 1.0
+        if edges and self.old_config is not None:
+            dark = frozenset(
+                (min(pod, q), max(pod, q)) for q in range(self.cfg.num_pods)
+            )
+            flows = [
+                flowsim.JobFlows(jid, o.edges, o.comm_frac)
+                for jid, o in self.running.items()
+                if jid != r.job.job_id
+            ]
+            flows.append(flowsim.JobFlows(r.job.job_id, edges, alpha))
+            phi_shrunk = fluid_engine.fluid_fractions(
+                self.spec, flows, self.old_config, self.cfg.architecture,
+                dark_pairs=dark, cap=self.spec.slowdown_cap,
+            ).get(r.job.job_id, 1.0)
+        costs = policy_costs(
+            service_s=r.job.service_time,
+            progress_s=r.progress,
+            model=r.job.model,
+            num_gpus=r.job.num_gpus,
+            cur_gpus=r.cur_gpus,
+            lost_gpus=lost_gpus,
+            comm_fraction=alpha,
+            phi_shrunk=phi_shrunk,
+            ckpt_interval_s=self.cfg.ckpt_interval_s,
+            slowdown_cap=self.spec.slowdown_cap,
+        )
+        chosen = min(sorted(costs), key=lambda p: costs[p])
+        self.policy_decisions.append(
+            {"t": now, "job_id": float(r.job.job_id),
+             "phi_shrunk": phi_shrunk, "policy": chosen, **costs}
+        )
+        return chosen
 
     def _apply_fault(self, now: float, ev: FaultEvent) -> List[Tuple[float, int]]:
         """Update mask/capacity/victims for one event.  Returns requeue
@@ -504,12 +586,15 @@ class Simulator:
                     r for r in list(self.running.values()) if ev.pod in r.pods
                 ]
                 for r in victims:
-                    if policy == SHRINK_COLLECTIVE and len(r.pods) > 1:
+                    pol = policy
+                    if pol == CHEAPEST:
+                        pol = self._choose_policy(now, r, ev.pod)
+                    if pol == SHRINK_COLLECTIVE and len(r.pods) > 1:
                         self._shrink_job(now, r, ev.pod)
                     else:
                         # rewire-around has no checkpoints to fall back on —
                         # a dead pod means losing the whole run so far
-                        scratch = policy == REWIRE_AROUND
+                        scratch = pol == REWIRE_AROUND
                         ready = self._restart_job(now, r, from_scratch=scratch)
                         requeue.append((ready, r.job.job_id))
         elif isinstance(ev, RepairEvent):
@@ -528,7 +613,7 @@ class Simulator:
         ``until`` caps simulated time (goodput/availability accounting over
         a fixed horizon); running jobs are advanced to the cap and left
         unfinished (``finish`` stays NaN)."""
-        ARRIVE, FINISH, FAULT, REQUEUE = 0, 1, 2, 3
+        ARRIVE, FINISH, FAULT, REQUEUE, DARK_END, REFRESH = 0, 1, 2, 3, 4, 5
         ev: List[Tuple[float, int, int, int]] = []  # (t, kind, seq, payload)
         seq = 0
         for j in self.jobs:
@@ -542,8 +627,14 @@ class Simulator:
 
         def schedule_finish(now: float, r: _Running):
             nonlocal seq
+            rem = r.remaining()
+            if not math.isfinite(rem):
+                # stalled flow (dark circuits, no residual fabric): the
+                # DARK_END / next fault event will reschedule it
+                finish_version[r.job.job_id] = -1
+                return
             finish_version[r.job.job_id] = seq
-            heapq.heappush(ev, (now + r.remaining(), FINISH, seq, r.job.job_id))
+            heapq.heappush(ev, (now + rem, FINISH, seq, r.job.job_id))
             seq += 1
 
         def reschedule_all(now: float):
@@ -551,9 +642,19 @@ class Simulator:
                 schedule_finish(now, r)
 
         def reconfigure_now(now: float, skip_pause_for: Optional[int] = None):
-            """Re-solve the control plane; OCS switching pause hits running
-            jobs whose circuits move (min-rewiring keeps this set small;
-            Table 1 shows the effect is tiny)."""
+            """Re-solve the control plane and price the switching.
+
+            Analytic engine: the legacy OCS switching pause rolls back a
+            slice of progress on impacted jobs (min-rewiring keeps the set
+            small; Table 1 shows the effect is tiny).  Fluid engine: the
+            changed circuits go *dark* for ``reconfig_delay_s`` instead — a
+            real bandwidth hole the water-filling sees — and the downtime
+            is time-priced as delay · Σ|Δx|, so incremental deltas (fewer
+            circuits moved) are strictly cheaper than cold re-solves.  The
+            retune can only begin once the solver has emitted the new
+            configuration, so the window is anchored at ``now + comp_s``
+            (the same instant the starting job's slowdown refresh runs)."""
+            nonlocal seq
             config, comp_s = self._reconfigure()
             if self.old_config is not None and config is not None:
                 changed = (
@@ -561,7 +662,25 @@ class Simulator:
                     if self._last_rewired is not None
                     else config.rewiring_distance(self.old_config)
                 )
-                if changed:
+                if changed and self.cfg.engine == "fluid":
+                    delay = self.cfg.reconfig_delay_s
+                    if delay > 0:
+                        pairs = config.changed_pairs(self.old_config)
+                        start = now + comp_s
+                        self._dark.add(pairs, start, start + delay)
+                        self.downtime_events += 1
+                        self.downtime_s += delay
+                        self.downtime_circuit_s += delay * changed
+                        heapq.heappush(
+                            ev, (start + delay, DARK_END, seq, 0)
+                        )
+                        seq += 1
+                        # rates must be re-evaluated the instant the window
+                        # opens (the job-start path refreshes then anyway;
+                        # the fault path refreshes at `now` only)
+                        heapq.heappush(ev, (start, REFRESH, seq, 0))
+                        seq += 1
+                elif changed:
                     for other in self.running.values():
                         if other.job.job_id != skip_pause_for:
                             other.progress = max(
@@ -643,6 +762,14 @@ class Simulator:
                 reschedule_all(t)
                 while try_start(t):
                     pass
+            elif kind == DARK_END:
+                if not self._dark.prune(t):
+                    continue  # stale: this pair's window was merged/extended
+                self._refresh_slowdowns(t, self.old_config)
+                reschedule_all(t)
+            elif kind == REFRESH:  # a dark window just opened
+                self._refresh_slowdowns(t, self.old_config)
+                reschedule_all(t)
             else:  # ARRIVE / REQUEUE
                 self.queue.append(self.jobs[jid])
                 while try_start(t):

@@ -1,0 +1,1 @@
+# Package marker so `python -m tests.golden.regen` works from the repo root.

@@ -1,0 +1,92 @@
+"""Golden fluid-engine trace: scenario definition + regeneration.
+
+The golden table freezes the per-job JCTs of one seeded fluid-engine run
+(Cross Wiring, incremental MDMCF, a link failure/repair mid-trace and a
+nonzero reconfiguration delay) so that *any* behavioral drift in the
+engine — water-filling, dark windows, mask handling, scheduler event
+ordering — shows up as a reviewed diff instead of a silent change.
+
+Regenerate after an intentional change with:
+
+    PYTHONPATH=src python -m tests.golden.regen
+
+and commit the updated ``fluid_trace.json`` together with the change.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "fluid_trace.json")
+
+SCENARIO = {
+    "num_pods": 12,
+    "k_spine": 8,
+    "k_leaf": 8,
+    "n_jobs": 18,
+    "seed": 7,
+    "workload_level": 0.9,
+    "architecture": "cross_wiring",
+    "strategy": "mdmcf",
+    "engine": "fluid",
+    "reconfig_delay_s": 0.01,
+    "fault": {"scope": "link", "h": 0, "k": 2, "pod": 3},
+}
+
+
+def run_scenario():
+    """Run the pinned scenario; returns (records, simulator)."""
+    from repro.fault import FailureEvent, RepairEvent
+    from repro.sim import SimConfig, Simulator, generate_trace
+
+    s = SCENARIO
+    num_gpus = s["num_pods"] * s["k_spine"] * s["k_leaf"]
+    jobs = generate_trace(
+        s["n_jobs"], num_gpus=num_gpus, workload_level=s["workload_level"],
+        seed=s["seed"], max_job_gpus=num_gpus // 4,
+    )
+    t_fail = jobs[s["n_jobs"] // 3].arrival
+    f = s["fault"]
+    events = [
+        FailureEvent(t_fail, f["scope"], h=f["h"], k=f["k"], pod=f["pod"]),
+        RepairEvent(t_fail + 1800.0, f["scope"], h=f["h"], k=f["k"], pod=f["pod"]),
+    ]
+    sim = Simulator(
+        SimConfig(
+            architecture=s["architecture"], strategy=s["strategy"],
+            num_pods=s["num_pods"], k_spine=s["k_spine"], k_leaf=s["k_leaf"],
+            engine=s["engine"], reconfig_delay_s=s["reconfig_delay_s"],
+        ),
+        jobs,
+        fault_events=events,
+    )
+    records = sim.run()
+    return records, sim
+
+
+def build_table():
+    records, sim = run_scenario()
+    jct = {
+        str(r.job.job_id): (r.jct if math.isfinite(r.finish) else None)
+        for r in records
+    }
+    return {
+        "scenario": SCENARIO,
+        "jct": jct,
+        "downtime_events": sim.downtime_events,
+        "reconfig_calls": sim.reconfig_calls,
+    }
+
+
+def main() -> None:
+    table = build_table()
+    with open(GOLDEN_PATH, "w") as fh:
+        json.dump(table, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {GOLDEN_PATH}: {len(table['jct'])} jobs, "
+          f"{table['downtime_events']} downtime windows")
+
+
+if __name__ == "__main__":
+    main()

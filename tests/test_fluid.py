@@ -1,0 +1,453 @@
+"""Fluid engine unit + property tests (ISSUE 4).
+
+Covers: the max-min water-filling core (conservation, bottleneck
+saturation, monotonicity — hypothesis when available, seeded always),
+the ClusterSpec.slowdown_cap surface (a fully-dark circuit stalls when no
+residual electrical capacity is configured), reconfiguration dark
+windows, and the fluid-priced recovery-policy cost model.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.logical import Job
+from repro.core.reconfig import mdmcf_reconfigure
+from repro.core.topology import ClusterSpec, OCSConfig
+from repro.dist import demand as dist_demand
+from repro.fault import (
+    CHEAPEST,
+    CKPT_RESTART,
+    FailureEvent,
+    REWIRE_AROUND,
+    RepairEvent,
+    SHRINK_COLLECTIVE,
+    policy_costs,
+)
+from repro.sim import SimConfig, Simulator, generate_trace, summarize
+from repro.sim import flowsim, fluid
+
+
+def _seeded_cases(n=60, seed=0):
+    rng = np.random.default_rng(seed)
+    for _ in range(n):
+        F = int(rng.integers(1, 7))
+        E = int(rng.integers(1, 7))
+        D = rng.integers(0, 4, size=(F, E)).astype(np.float64)
+        cap = np.round(rng.uniform(0.0, 10.0, size=E), 3)
+        yield D, cap
+
+
+def _check_waterfill_properties(D, cap):
+    x = flowsim.waterfill_levels(D, cap)
+    F, E = D.shape
+    assert x.shape == (F,)
+    assert (x >= -1e-12).all() and (x <= 1.0 + 1e-12).all()
+    # conservation: no edge carries more than its capacity
+    load = x @ D
+    assert (load <= cap + 1e-6).all(), (load, cap)
+    # bottleneck saturation: every rate-limited flow sits on a saturated edge
+    for f in range(F):
+        if x[f] >= 1.0 - 1e-9 or not D[f].any():
+            continue
+        on = D[f] > 0
+        assert (load[on] >= cap[on] - 1e-6).any(), (f, x, load, cap)
+    # leximin monotonicity: removing a flow never decreases the *minimum*
+    # survivor level.  (Per-flow monotonicity is provably FALSE for
+    # multi-edge collective flows: removing a flow can raise one edge's
+    # saturation level so other flows no longer freeze early there and
+    # press a second edge harder, hurting a flow that only uses the
+    # second edge.  Max-min is leximin-optimal, not pointwise-monotone;
+    # see test_waterfill_single_edge_monotonicity for the regime where
+    # the pointwise property does hold.)
+    for drop in range(F):
+        keep = [f for f in range(F) if f != drop]
+        if not keep:
+            continue
+        x2 = flowsim.waterfill_levels(D[keep], cap)
+        assert x2.min() >= x[keep].min() - 1e-9, (drop, x, x2)
+
+
+def test_waterfill_properties_seeded():
+    for D, cap in _seeded_cases():
+        _check_waterfill_properties(D, cap)
+
+
+def test_waterfill_properties_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def inner(seed):
+        for D, cap in _seeded_cases(n=3, seed=seed):
+            _check_waterfill_properties(D, cap)
+
+    inner()
+
+
+def test_waterfill_single_edge_monotonicity():
+    """When every flow uses exactly one edge the edges decouple, and
+    removing a flow never decreases any survivor's rate."""
+    rng = np.random.default_rng(7)
+    for _ in range(60):
+        F = int(rng.integers(1, 8))
+        E = int(rng.integers(1, 8))
+        D = np.zeros((F, E))
+        for f in range(F):
+            D[f, int(rng.integers(E))] = float(rng.integers(1, 4))
+        cap = np.round(rng.uniform(0.0, 10.0, size=E), 3)
+        x = flowsim.waterfill_levels(D, cap)
+        for drop in range(F):
+            keep = [f for f in range(F) if f != drop]
+            if not keep:
+                continue
+            x2 = flowsim.waterfill_levels(D[keep], cap)
+            assert (x2 >= x[keep] - 1e-9).all()
+
+
+def test_waterfill_levels_edge_cases():
+    # no flows / no edges
+    assert flowsim.waterfill_levels(np.zeros((0, 3)), np.ones(3)).shape == (0,)
+    x = flowsim.waterfill_levels(np.zeros((2, 0)), np.zeros(0))
+    assert (x == 1.0).all()
+    # zero capacity: demanding flows get exactly 0, idle flows stay at 1
+    D = np.array([[1.0, 0.0], [0.0, 0.0]])
+    x = flowsim.waterfill_levels(D, np.zeros(2))
+    assert x[0] == 0.0 and x[1] == 1.0
+    # everyone fits → all 1
+    x = flowsim.waterfill_levels(np.ones((3, 2)), np.full(2, 10.0))
+    assert (x == 1.0).all()
+
+
+# ---------------------------------------------------------------------------
+# slowdown cap surface (ISSUE 4 satellite: φ→0 on fully-dark circuits)
+# ---------------------------------------------------------------------------
+
+def _dark_config(spec, num_groups=2):
+    """A config with zero circuits everywhere: every edge is dark."""
+    return OCSConfig(spec, num_groups=num_groups).freeze()
+
+
+def test_dark_circuit_with_residual_cap_is_floored():
+    spec = ClusterSpec(num_pods=4, k_spine=8, k_leaf=8)  # default cap 4.0
+    flows = [flowsim.JobFlows(0, {(0, 1): 2}, 0.5)]
+    phi = flowsim.waterfill_fractions(spec, flows, _dark_config(spec), "cross_wiring")
+    assert phi[0] == pytest.approx(1.0 / 4.0)
+    assert flowsim.job_slowdown(0.5, phi[0], cap=spec.slowdown_cap) == pytest.approx(
+        1.0 + 0.5 * 3.0
+    )
+
+
+def test_dark_circuit_without_residual_cap_stalls():
+    """A fully-dark circuit with slowdown_cap=None must NOT yield a finite
+    slowdown: there is no residual electrical path to limp along on."""
+    spec = ClusterSpec(num_pods=4, k_spine=8, k_leaf=8, slowdown_cap=None)
+    flows = [flowsim.JobFlows(0, {(0, 1): 2}, 0.5)]
+    phi = flowsim.waterfill_fractions(spec, flows, _dark_config(spec), "cross_wiring")
+    assert phi[0] == 0.0
+    assert flowsim.job_slowdown(0.5, 0.0, cap=None) == math.inf
+    # compute-only flows are unaffected even at φ=0
+    assert flowsim.job_slowdown(0.0, 0.0, cap=None) == 1.0
+
+
+def test_slowdown_cap_validation():
+    with pytest.raises(ValueError):
+        ClusterSpec(num_pods=4, k_spine=8, k_leaf=8, slowdown_cap=0.5)
+
+
+# ---------------------------------------------------------------------------
+# FluidSim: dark windows, stalls, capacity events
+# ---------------------------------------------------------------------------
+
+def _ring_setup(P=8, k=8, pods=(0, 2, 4, 6), links=2):
+    spec = ClusterSpec(num_pods=P, k_spine=k, k_leaf=k)
+    edges = flowsim.ring_edges(list(pods), links)
+    C = dist_demand.edges_to_matrix(edges, P, 2)
+    config = mdmcf_reconfigure(spec, C).config
+    return spec, edges, config
+
+
+def test_fluid_dark_window_delays_completion():
+    spec, edges, config = _ring_setup()
+    alpha, work = 0.4, 100.0
+    base = fluid.FluidSim(
+        spec, "cross_wiring", config, flows=[fluid.Flow(0, edges, alpha, work)]
+    )
+    base_jct = base.run()[0].jct
+    # darken one ring edge for 10 s mid-run, no residual electrical fabric:
+    # the flow must fully stall for the window
+    spec_hard = ClusterSpec(
+        num_pods=spec.num_pods, k_spine=spec.k_spine, k_leaf=spec.k_leaf,
+        slowdown_cap=None,
+    )
+    dark = fluid.CapacityEvent(
+        time=10.0, dark_pairs=frozenset({(0, 2)}), downtime_s=10.0, rewired=4
+    )
+    sim = fluid.FluidSim(
+        spec_hard, "cross_wiring", config,
+        flows=[fluid.Flow(0, edges, alpha, work)], capacity_events=[dark],
+    )
+    rec = sim.run()[0]
+    assert rec.jct == pytest.approx(base_jct + 10.0)
+    assert rec.stalled_s == pytest.approx(10.0)
+    assert rec.min_phi == 0.0
+    assert sim.downtime_circuit_s == pytest.approx(10.0 * 4)
+
+
+def test_fluid_dark_window_with_residual_cap_limps():
+    """With the default residual cap the flow keeps crawling at 1/cap
+    through the window instead of stalling outright."""
+    spec, edges, config = _ring_setup()
+    alpha, work = 0.4, 100.0
+    dark = fluid.CapacityEvent(
+        time=10.0, dark_pairs=frozenset({(0, 2)}), downtime_s=10.0
+    )
+    sim = fluid.FluidSim(
+        spec, "cross_wiring", config,
+        flows=[fluid.Flow(0, edges, alpha, work)], capacity_events=[dark],
+    )
+    rec = sim.run()[0]
+    base = fluid.FluidSim(
+        spec, "cross_wiring", config, flows=[fluid.Flow(0, edges, alpha, work)]
+    ).run()[0]
+    slow = flowsim.job_slowdown(alpha, 1.0 / 4.0, cap=4.0)
+    lost = 10.0 * (1.0 - 1.0 / slow)  # work-seconds lost to the window,
+    # made up at full rate (φ=1) once the window closes
+    assert rec.stalled_s == 0.0
+    assert rec.jct == pytest.approx(base.jct + lost, rel=1e-9)
+
+
+def test_fluid_contention_beats_snapshot():
+    """Two staggered flows on one edge: the fluid JCT of the first flow is
+    *shorter* than a whole-run snapshot stretch (it ran alone before the
+    second arrived) — the time-varying effect the closed form misses."""
+    spec = ClusterSpec(num_pods=4, k_spine=8, k_leaf=8)
+    edges = {(0, 1): 8}
+    C = dist_demand.edges_to_matrix(edges, 4, 2)
+    config = mdmcf_reconfigure(spec, C).config  # capacity exactly one flow
+    flows = [
+        fluid.Flow(0, edges, 0.5, 100.0, arrival=0.0),
+        fluid.Flow(1, edges, 0.5, 100.0, arrival=50.0),
+    ]
+    recs = fluid.FluidSim(spec, "cross_wiring", config, flows=flows).run()
+    jf = [flowsim.JobFlows(f.flow_id, f.edges, f.comm_fraction) for f in flows]
+    phi_both = flowsim.waterfill_fractions(spec, jf, config, "cross_wiring")
+    snap = 100.0 * flowsim.job_slowdown(0.5, phi_both[0])
+    alone = 100.0
+    assert alone < recs[0].jct < snap
+    # conservation at the fluid level: both flows finish, in arrival order
+    assert recs[0].finish < recs[1].finish
+
+
+def test_overlapping_dark_windows_stay_per_pair():
+    """A long outage on one pair must not extend an unrelated pair's
+    short window (windows are tracked per pair, not collapsed into one
+    global interval)."""
+    spec = ClusterSpec(
+        num_pods=6, k_spine=8, k_leaf=8, slowdown_cap=None
+    )
+    edges_a, edges_b = {(0, 1): 2}, {(2, 3): 2}
+    agg = {**edges_a, **edges_b}
+    C = dist_demand.edges_to_matrix(agg, 6, 2)
+    config = mdmcf_reconfigure(spec, C).config
+    events = [
+        fluid.CapacityEvent(0.0, dark_pairs=frozenset({(0, 1)}), downtime_s=50.0),
+        fluid.CapacityEvent(10.0, dark_pairs=frozenset({(2, 3)}), downtime_s=1.0),
+    ]
+    flows = [
+        fluid.Flow(0, edges_a, 0.5, 100.0),
+        fluid.Flow(1, edges_b, 0.5, 100.0),
+    ]
+    sim = fluid.FluidSim(
+        spec, "cross_wiring", config, flows=flows, capacity_events=events
+    )
+    recs = {r.flow_id: r for r in sim.run()}
+    assert recs[0].stalled_s == pytest.approx(50.0)
+    assert recs[1].stalled_s == pytest.approx(1.0)  # not 40 s
+    assert recs[1].finish == pytest.approx(101.0)
+    # re-darkening the same pair merges instead of double-counting
+    w = fluid.DarkWindows()
+    w.add([(0, 1)], 0.0, 5.0)
+    w.add([(0, 1)], 3.0, 8.0)
+    assert w.active(4.0) == [(0, 1)]
+    assert not w.prune(5.0) and w.prune(8.0)
+
+
+def test_fluid_until_caps_time():
+    spec, edges, config = _ring_setup()
+    sim = fluid.FluidSim(
+        spec, "cross_wiring", config, flows=[fluid.Flow(0, edges, 0.3, 1e6)]
+    )
+    recs = sim.run(until=100.0)
+    assert math.isnan(recs[0].finish)
+
+
+def test_fluid_fractions_match_waterfill_on_healthy_snapshot():
+    spec, edges, config = _ring_setup()
+    flows = [
+        flowsim.JobFlows(0, edges, 0.3),
+        flowsim.JobFlows(1, {(0, 2): 3, (2, 4): 1}, 0.5),
+    ]
+    a = flowsim.waterfill_fractions(spec, flows, config, "cross_wiring")
+    b = fluid.fluid_fractions(spec, flows, config, "cross_wiring")
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration: engine axis, downtime accounting
+# ---------------------------------------------------------------------------
+
+def _jobs(n=40, pods=8, k=8, seed=1):
+    return generate_trace(
+        n, num_gpus=pods * k * k, workload_level=0.85, seed=seed,
+        max_job_gpus=pods * k * k // 4,
+    )
+
+
+def test_engine_validation():
+    with pytest.raises(ValueError):
+        SimConfig(architecture="best", strategy="none", engine="packet")
+    with pytest.raises(ValueError):
+        SimConfig(architecture="best", strategy="none", reconfig_delay_s=-1.0)
+
+
+def test_fluid_engine_completes_and_prices_downtime():
+    jobs = _jobs()
+    sim = Simulator(
+        SimConfig(
+            architecture="cross_wiring", strategy="mdmcf",
+            num_pods=8, k_spine=8, k_leaf=8,
+            engine="fluid", reconfig_delay_s=0.1,
+        ),
+        jobs,
+    )
+    recs = sim.run()
+    assert all(math.isfinite(r.finish) for r in recs)
+    if sim.downtime_events:
+        assert sim.downtime_circuit_s > 0
+        assert sim.downtime_s == pytest.approx(0.1 * sim.downtime_events)
+
+
+def test_fluid_engine_deterministic():
+    jobs = _jobs(30)
+    cfg = SimConfig(
+        architecture="cross_wiring", strategy="mdmcf",
+        num_pods=8, k_spine=8, k_leaf=8, engine="fluid", reconfig_delay_s=0.05,
+    )
+    r1 = Simulator(cfg, jobs).run()
+    r2 = Simulator(cfg, jobs).run()
+    assert [(r.start, r.finish) for r in r1] == [(r.start, r.finish) for r in r2]
+
+
+def test_reconfig_delay_never_speeds_jobs_up():
+    jobs = _jobs(30)
+    base_cfg = dict(
+        architecture="cross_wiring", strategy="mdmcf",
+        num_pods=8, k_spine=8, k_leaf=8, engine="fluid",
+    )
+    r0 = Simulator(SimConfig(**base_cfg, reconfig_delay_s=0.0), jobs).run()
+    r1 = Simulator(SimConfig(**base_cfg, reconfig_delay_s=1.0), jobs).run()
+    assert summarize(r1)["avg_jct"] >= summarize(r0)["avg_jct"] - 1e-9
+
+
+def test_scheduler_extra_strategies_smoke():
+    """mcf / helios / uniform_ilp through both engines (coverage of the
+    strategy dispatch; correctness of each solver is tested elsewhere)."""
+    jobs = _jobs(15)
+    for arch, strat in [
+        ("cross_wiring", "mcf"),
+        ("uniform", "helios"),
+        ("uniform", "uniform_ilp"),
+    ]:
+        for engine in ("analytic", "fluid"):
+            sim = Simulator(
+                SimConfig(
+                    architecture=arch, strategy=strat,
+                    num_pods=8, k_spine=8, k_leaf=8, engine=engine,
+                ),
+                jobs,
+            )
+            recs = sim.run()
+            assert all(math.isfinite(r.finish) for r in recs), (arch, strat, engine)
+
+
+# ---------------------------------------------------------------------------
+# fluid-priced recovery-policy costs
+# ---------------------------------------------------------------------------
+
+def test_policy_costs_shape_and_ordering():
+    kw = dict(
+        service_s=10000.0, progress_s=6000.0, model="llama2-13b",
+        num_gpus=128, lost_gpus=64, comm_fraction=0.3,
+        ckpt_interval_s=1800.0,
+    )
+    healthy = policy_costs(phi_shrunk=1.0, **kw)
+    degraded = policy_costs(phi_shrunk=0.25, **kw)
+    assert set(healthy) == {REWIRE_AROUND, CKPT_RESTART, SHRINK_COLLECTIVE}
+    # restart costs don't depend on the measured φ; shrink does
+    assert healthy[REWIRE_AROUND] == degraded[REWIRE_AROUND]
+    assert healthy[CKPT_RESTART] == degraded[CKPT_RESTART]
+    assert degraded[SHRINK_COLLECTIVE] > healthy[SHRINK_COLLECTIVE]
+    # losing every GPU makes shrink impossible
+    dead = policy_costs(
+        phi_shrunk=1.0, **{**kw, "lost_gpus": kw["num_gpus"]}
+    )
+    assert dead[SHRINK_COLLECTIVE] == math.inf
+    # with deep progress and a checkpoint to restore, scratch-restart is
+    # strictly worse than rolling back
+    assert healthy[REWIRE_AROUND] > healthy[CKPT_RESTART]
+
+
+def test_policy_costs_second_shrink_uses_full_calibration_base():
+    """A job that already shrank once (cur_gpus < num_gpus) must price a
+    further shrink against its *full* size: service time is calibrated to
+    num_gpus, and _shrink_job will set compute_scale = num_gpus/survivors."""
+    kw = dict(
+        service_s=10000.0, progress_s=2000.0, model="llama2-13b",
+        comm_fraction=0.0, phi_shrunk=1.0, ckpt_interval_s=1800.0,
+    )
+    second = policy_costs(num_gpus=256, cur_gpus=192, lost_gpus=64, **kw)
+    # survivors = 128 → the remaining 8000 s stretch by 256/128 = 2×
+    assert second[SHRINK_COLLECTIVE] == pytest.approx(8000.0 * 2.0)
+    never_shrunk = policy_costs(num_gpus=256, lost_gpus=64, **kw)
+    assert never_shrunk[SHRINK_COLLECTIVE] == pytest.approx(8000.0 * 256 / 192)
+
+
+def test_policy_costs_stall_pricing():
+    """With no residual fabric and a fully-dark shrunken ring, shrink is
+    priced as never finishing."""
+    c = policy_costs(
+        service_s=1000.0, progress_s=100.0, model="llama2-13b",
+        num_gpus=16, lost_gpus=8, comm_fraction=0.3, phi_shrunk=0.0,
+        ckpt_interval_s=600.0, slowdown_cap=None,
+    )
+    assert c[SHRINK_COLLECTIVE] == math.inf
+
+
+def test_cheapest_policy_in_scheduler():
+    """`recovery_policy='cheapest'` picks per victim from the fluid-priced
+    costs and logs the decision."""
+    pods, k = 12, 8
+    jobs = _jobs(25, pods=pods, k=k, seed=4)
+    t_fail = jobs[8].arrival
+    events = [
+        FailureEvent(t_fail, "pod", pod=1),
+        RepairEvent(t_fail + 3600.0, "pod", pod=1),
+    ]
+    sim = Simulator(
+        SimConfig(
+            architecture="cross_wiring", strategy="mdmcf",
+            num_pods=pods, k_spine=k, k_leaf=k,
+            engine="fluid", recovery_policy=CHEAPEST,
+        ),
+        jobs,
+        fault_events=events,
+    )
+    recs = sim.run()
+    assert all(math.isfinite(r.finish) for r in recs)
+    for d in sim.policy_decisions:
+        assert d["policy"] in (REWIRE_AROUND, CKPT_RESTART, SHRINK_COLLECTIVE)
+        chosen = d["policy"]
+        for other in (REWIRE_AROUND, CKPT_RESTART, SHRINK_COLLECTIVE):
+            assert d[chosen] <= d[other] + 1e-9

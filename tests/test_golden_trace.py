@@ -1,0 +1,55 @@
+"""Golden-trace regression: a seeded fluid-engine run must reproduce the
+committed per-job JCT table (tests/golden/fluid_trace.json) within 1e-6
+relative tolerance.  On mismatch the assertion prints a per-job diff and
+the regeneration command — behavioral drift must be a reviewed diff, not
+a silent change."""
+import json
+import math
+
+import pytest
+
+from tests.golden import regen
+
+RTOL = 1e-6
+
+
+def _load_golden():
+    try:
+        with open(regen.GOLDEN_PATH) as fh:
+            return json.load(fh)
+    except FileNotFoundError:  # pragma: no cover - repo always ships it
+        pytest.fail(
+            "tests/golden/fluid_trace.json missing — generate it with: "
+            "PYTHONPATH=src python -m tests.golden.regen"
+        )
+
+
+def test_fluid_golden_trace():
+    golden = _load_golden()
+    assert golden["scenario"] == regen.SCENARIO, (
+        "Golden scenario drifted from regen.SCENARIO — regenerate with: "
+        "PYTHONPATH=src python -m tests.golden.regen"
+    )
+    table = regen.build_table()
+    diffs = []
+    for jid, want in sorted(golden["jct"].items(), key=lambda kv: int(kv[0])):
+        got = table["jct"].get(jid)
+        if want is None or got is None:
+            if want != got:
+                diffs.append(f"  job {jid}: want {want}, got {got}")
+            continue
+        rel = abs(got - want) / max(abs(want), 1e-12)
+        if not math.isfinite(got) or rel > RTOL:
+            diffs.append(
+                f"  job {jid}: want {want:.6f}, got {got:.6f} (rel {rel:.2e})"
+            )
+    assert not diffs, (
+        "Golden fluid trace diverged ({} of {} jobs):\n{}\n"
+        "If this change is intentional, regenerate the table with:\n"
+        "    PYTHONPATH=src python -m tests.golden.regen\n"
+        "and commit the updated tests/golden/fluid_trace.json.".format(
+            len(diffs), len(golden["jct"]), "\n".join(diffs)
+        )
+    )
+    assert table["downtime_events"] == golden["downtime_events"]
+    assert table["reconfig_calls"] == golden["reconfig_calls"]
