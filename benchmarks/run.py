@@ -22,6 +22,7 @@ from . import (
     bench_mrar,
     bench_reconfig_interval,
     bench_reconfig_time,
+    bench_serving,
     bench_step,
     bench_throughput,
 )
@@ -49,6 +50,10 @@ BENCHES = {
     "fluid": (
         bench_fluid,
         "ours: fluid engine events/sec, fidelity gap, downtime pricing",
+    ),
+    "serving": (
+        bench_serving,
+        "ours: serving p99 KV-transfer latency + goodput per fabric",
     ),
 }
 

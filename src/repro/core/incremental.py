@@ -76,6 +76,23 @@ class ColoringState:
       units with ``k2[h]`` colors; color ``c`` lives on OCS pair
       ``pairs[h][c]`` (even OCS carries the class, odd its transpose);
     * ``_x`` mirrors the coloring as a full OCS configuration.
+
+    Build one by adopting a cold solve (:meth:`from_config`) or from the
+    all-zero demand (:meth:`empty`), then patch it with
+    :func:`mdmcf_delta` — exactness (LTRR = 1) is preserved on every
+    feasible step:
+
+    >>> import numpy as np
+    >>> from repro.core.topology import ClusterSpec
+    >>> from repro.core.reconfig import mdmcf_reconfigure
+    >>> spec = ClusterSpec(num_pods=4, k_spine=4, k_leaf=4)
+    >>> C = np.zeros((spec.num_ocs_groups, 4, 4), dtype=np.int64)
+    >>> C[:, 0, 1] = C[:, 1, 0] = 2
+    >>> res = mdmcf_reconfigure(spec, C)
+    >>> state = ColoringState.from_config(spec, res.demand, res.config)
+    >>> C2 = C.copy(); C2[:, 2, 3] = C2[:, 3, 2] = 1
+    >>> round(float(mdmcf_delta(spec, state, C2).ltrr), 9)  # exact delta
+    1.0
     """
 
     def __init__(

@@ -131,7 +131,20 @@ def ring_demand(
 
 @dataclasses.dataclass
 class Job:
-    """A multi-tenant LLM training job (paper §6.3 workload model)."""
+    """One multi-tenant cluster job (paper §6.3 workload model).
+
+    Two archetypes share the dataclass, selected by ``kind``:
+
+    * ``"train"`` — a batch training job: runs for ``service_time``
+      ideal-fabric seconds, its cross-pod traffic is the DP ring / EP
+      all-to-all / PP chain planned by :mod:`repro.dist`.
+    * ``"serve"`` — an inference-serving replica fleet
+      (:mod:`repro.sim.serving`): ``service_time`` is ``inf`` (it runs to
+      the simulation horizon), and its cross-pod traffic is the
+      prefill→decode KV-cache stream sized from ``req_rate`` requests/s ×
+      ``kv_tokens`` prompt tokens; ``prefill_frac`` splits the fleet's
+      GPUs into the two pools and ``diurnal`` sets the daily load swing.
+    """
 
     job_id: int
     num_gpus: int
@@ -141,6 +154,12 @@ class Job:
     tp: int = 8
     ep: int = 1
     pp: int = 1  # pipeline stages (cross-pod chain traffic when > 1)
+    # ---- serving archetype (repro.sim.serving) ---------------------------
+    kind: str = "train"  # train | serve
+    req_rate: float = 0.0  # serve: mean offered requests/s
+    kv_tokens: int = 0  # serve: prompt tokens whose KV migrates per request
+    prefill_frac: float = 0.25  # serve: share of GPUs in the prefill pool
+    diurnal: float = 0.0  # serve: relative diurnal load amplitude [0, 1)
 
     @property
     def dp_pp_ways(self) -> int:

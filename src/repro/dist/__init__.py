@@ -24,7 +24,10 @@ from .demand import (
     edges_to_matrix,
     job_edges,
     job_flow,
+    kv_bytes_per_token,
+    kv_flow,
     ring_order,
+    serving_edges,
     uncoverable_fraction,
 )
 # sharding.py imports jax; the planner half (collectives/demand) and the
@@ -65,12 +68,15 @@ __all__ = [
     "edges_to_matrix",
     "job_edges",
     "job_flow",
+    "kv_bytes_per_token",
+    "kv_flow",
     "mesh_axis_sizes",
     "param_pspec",
     "param_specs",
     "plan_collectives",
     "ring_order",
     "schedule_time",
+    "serving_edges",
     "shard_map_dp",
     "to_shardings",
     "uncoverable_fraction",

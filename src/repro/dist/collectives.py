@@ -131,6 +131,10 @@ class ModelProfile:
     capacity).  ``pp_act_bytes``: activation tensor crossing one PP stage
     boundary per microbatch.  ``compute_s``: per-step compute time on the
     reference accelerator (calibrates the communication *fraction*).
+    ``kv_bytes_per_token``: KV-cache footprint of one token
+    (2 · layers · kv_heads · head_dim · dtype bytes) — the payload a
+    disaggregated serving deployment migrates from prefill to decode pods
+    per prompt token (see :func:`repro.dist.demand.kv_flow`).
     """
 
     grad_bytes: float
@@ -143,26 +147,39 @@ class ModelProfile:
     # pods (small-EP models keep it on the electrical fabric per §3.1)
     ep_spill: bool = False
     pp_act_bytes: float = 0.0
+    kv_bytes_per_token: float = 0.0
 
 
 # Trace models: dense LLaMA-family, MoE (pangu/gpt2 with EP=2 in the paper
 # testbed; mixtral-class with wide EP), and a PP archetype for 70B-class
 # jobs that pipeline across pods.
 MODEL_PROFILES: Dict[str, ModelProfile] = {
-    "llama-7b": ModelProfile(14e9, 0.55, 32, pp_act_bytes=67e6),
-    "llama2-7b": ModelProfile(14e9, 0.55, 32, pp_act_bytes=67e6),
-    "llama2-13b": ModelProfile(26e9, 0.95, 40, pp_act_bytes=84e6),
+    # kv_bytes_per_token = 2 · layers · kv_heads · head_dim · 2 B (bf16):
+    # MHA for the 7B/13B-class models, GQA (8 kv heads) for mixtral/70B.
+    "llama-7b": ModelProfile(
+        14e9, 0.55, 32, pp_act_bytes=67e6, kv_bytes_per_token=524288.0
+    ),
+    "llama2-7b": ModelProfile(
+        14e9, 0.55, 32, pp_act_bytes=67e6, kv_bytes_per_token=524288.0
+    ),
+    "llama2-13b": ModelProfile(
+        26e9, 0.95, 40, pp_act_bytes=84e6, kv_bytes_per_token=819200.0
+    ),
     "pangu-alpha-6b": ModelProfile(
-        12e9, 0.50, 31, moe=True, moe_layers=8, moe_tokens_bytes=34e6
+        12e9, 0.50, 31, moe=True, moe_layers=8, moe_tokens_bytes=34e6,
+        kv_bytes_per_token=507904.0,
     ),
     "gpt2-13b": ModelProfile(
-        26e9, 0.90, 40, moe=True, moe_layers=10, moe_tokens_bytes=42e6
+        26e9, 0.90, 40, moe=True, moe_layers=10, moe_tokens_bytes=42e6,
+        kv_bytes_per_token=819200.0,
     ),
     "mixtral-8x7b": ModelProfile(
         26e9, 0.70, 32, moe=True, moe_layers=32, moe_tokens_bytes=67e6,
-        ep_spill=True,
+        ep_spill=True, kv_bytes_per_token=131072.0,
     ),
-    "llama2-70b": ModelProfile(140e9, 2.8, 80, pp_act_bytes=134e6),
+    "llama2-70b": ModelProfile(
+        140e9, 2.8, 80, pp_act_bytes=134e6, kv_bytes_per_token=327680.0
+    ),
 }
 
 

@@ -39,6 +39,9 @@ __all__ = [
     "edges_to_matrix",
     "job_edges",
     "job_flow",
+    "kv_bytes_per_token",
+    "kv_flow",
+    "serving_edges",
     "ring_order",
     "uncoverable_fraction",
 ]
@@ -167,6 +170,132 @@ def clip_feasible(C: np.ndarray, k_spine: int) -> np.ndarray:
     for h in range(C.shape[0]):
         shave_to_budget(C[h], budget)
     return C
+
+
+# ---------------------------------------------------------------------------
+# inference serving: prefill → decode KV-cache migration demand
+# ---------------------------------------------------------------------------
+
+# KV caches are stored in the compute dtype; demand.py stays numpy-only, so
+# map dtype names by hand (np.dtype("bfloat16") does not exist).
+_DTYPE_BYTES = {"bfloat16": 2, "float16": 2, "float32": 4, "float64": 8}
+
+
+def kv_bytes_per_token(model) -> float:
+    """KV-cache bytes one generated-context token occupies — the payload a
+    disaggregated serving deployment streams from a prefill pod to a decode
+    pod per prompt token.
+
+    ``model`` is either a trace-model name (looked up in
+    :data:`~repro.dist.collectives.MODEL_PROFILES`) or a
+    :class:`~repro.models.config.ModelConfig`-like object with
+    ``num_layers`` / ``num_kv_heads`` / ``head_dim`` / ``compute_dtype``
+    attributes.  For GQA/MHA attention the per-layer footprint is the
+    textbook ``2 (K and V) · kv_heads · head_dim · dtype`` bytes; MLA
+    caches the compressed latent instead (``kv_lora_rank +
+    qk_rope_head_dim``), and non-attention layers (mamba/rwkv blocks of a
+    hybrid pattern) contribute nothing — their state does not grow with
+    context.  The result matches what
+    :meth:`repro.serve.engine.ServeEngine.comm_profile` measures off the
+    real cache pytree (``tests/test_serving.py``).
+
+    >>> kv_bytes_per_token("mixtral-8x7b")  # 2 · 32 · 8 · 128 · 2 B
+    131072.0
+    """
+    if isinstance(model, str):
+        prof = MODEL_PROFILES.get(model)
+        return float(prof.kv_bytes_per_token) if prof is not None else 0.0
+    cfg = model
+    dtype_bytes = _DTYPE_BYTES.get(str(cfg.compute_dtype), 2)
+    pattern = getattr(cfg, "block_pattern", None)
+    if pattern:
+        attn_layers = sum(
+            1 for i in range(cfg.num_layers)
+            if pattern[i % len(pattern)] == "attn"
+        )
+    else:
+        attn_layers = cfg.num_layers if cfg.attn_kind != "none" else 0
+    if getattr(cfg, "attn_kind", "gqa") == "mla" and cfg.mla is not None:
+        per_layer = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+    else:
+        per_layer = 2 * cfg.num_kv_heads * cfg.head_dim
+    return float(attn_layers * per_layer * dtype_bytes)
+
+
+def kv_flow(
+    model,
+    prefill_pods: Sequence[int],
+    decode_pods: Sequence[int],
+    links: int,
+    req_rate: float,
+    kv_tokens: int,
+    link_bw: float = 12.5e9,
+) -> Edges:
+    """Prefill→decode KV migration demand as bipartite pod-pair edges.
+
+    A disaggregated serving job computes prompt KV on ``prefill_pods`` and
+    streams it to ``decode_pods`` — short, latency-critical transfers of
+    ``kv_tokens · kv_bytes_per_token(model)`` bytes per request, arriving
+    at ``req_rate`` requests/s.  The *offered* load in bytes/s is
+    converted to spine-level links (``link_bw`` bytes/s each, the
+    100 Gb/s default of :class:`~repro.dist.collectives.AlphaBeta`) and
+    spread evenly over the ``|prefill| × |decode|`` pairs, at least one
+    link per pair and at most ``links`` (the per-pair port budget) each.
+    Deliberately *not* shaved to the pod degree budget here: the edges
+    state what the load needs, and when a hot fleet over-subscribes its
+    ports the control plane's demand clipping + max-min water-filling
+    turn the shortfall into φ < 1 — i.e. proportionally stretched
+    transfer latency, the fluid proxy for queueing delay.  Pools sharing
+    a pod exchange KV over the in-pod electrical fabric — those pairs
+    never reach the OCS and are skipped.
+    """
+    pre = [p for p in prefill_pods]
+    dec = [p for p in decode_pods]
+    edges: Edges = {}
+    pairs = [(p, d) for p in pre for d in dec if p != d]
+    if not pairs or links <= 0:
+        return edges
+    bytes_per_s = req_rate * kv_tokens * kv_bytes_per_token(model)
+    need = int(np.ceil(bytes_per_s / link_bw)) if bytes_per_s > 0 else 0
+    per_pair = min(links, max(1, int(round(need / len(pairs)))))
+    for p, d in pairs:
+        _add(edges, p, d, per_pair)
+    return edges
+
+
+def serving_edges(
+    model,
+    prefill_pods: Sequence[int],
+    decode_pods: Sequence[int],
+    links: int,
+    req_rate: float,
+    kv_tokens: int,
+    link_bw: float = 12.5e9,
+) -> Edges:
+    """Full cross-pod demand of one disaggregated serving fleet.
+
+    The KV migration stream (:func:`kv_flow`), plus — for MoE models
+    whose experts spill out of a pod (``ModelProfile.ep_spill``) — the
+    decode pool's expert-parallel dispatch/combine all-to-all: every
+    decode step scatters tokens to the experts' pods, a clique over the
+    decode pool carrying the same per-pair intensity as the KV stream.
+    That clique is the serving twin of the training MoE-EP pattern: the
+    demand Theorem 4.1 lets Cross Wiring realize exactly and a
+    symmetric-matching fabric (Uniform/Helios) cannot.
+    """
+    edges = kv_flow(
+        model, prefill_pods, decode_pods, links, req_rate, kv_tokens,
+        link_bw=link_bw,
+    )
+    prof = MODEL_PROFILES.get(model) if isinstance(model, str) else None
+    if (
+        prof is not None and prof.moe and prof.ep_spill
+        and len(decode_pods) >= 2
+    ):
+        stripe = max(edges.values(), default=1)
+        for a, b in itertools.combinations(sorted(decode_pods), 2):
+            _add(edges, a, b, stripe)
+    return edges
 
 
 # ---------------------------------------------------------------------------

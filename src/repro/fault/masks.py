@@ -42,6 +42,21 @@ class PortMask:
       egress / ingress transceiver on OCS ``(h, k)`` dead.
     * ``drained[p]``          — pod ``p`` failed / taken out of service.
     * ``active[p]``           — pod ``p`` physically populated (expansion).
+
+    Mutators (``fail_*`` / ``repair_*`` / ``expand``) keep the layers
+    independent; the control plane reads the combined view through
+    ``pod_up`` / ``clean_pairs`` / ``degree_budget`` and caches against
+    ``fingerprint()``:
+
+    >>> m = PortMask(num_pods=4, k_spine=4, num_groups=1)
+    >>> bool(m.is_trivial())
+    True
+    >>> m.fail_pod(2)
+    >>> m.pod_up().tolist()
+    [True, True, False, True]
+    >>> m.repair_pod(2)
+    >>> bool(m.is_trivial())
+    True
     """
 
     def __init__(self, num_pods: int, k_spine: int, num_groups: int):

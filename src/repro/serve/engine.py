@@ -14,6 +14,15 @@ import numpy as np
 
 
 class ServeEngine:
+    """Continuous-batching inference engine over one ModelAPI.
+
+    ``generate`` runs greedy decoding against the jitted prefill/decode
+    steps; ``comm_profile`` exports the engine's measured communication
+    footprint, which calibrates the cluster simulator's serving archetype
+    (:mod:`repro.sim.serving` — per-request KV bytes moved from prefill
+    to decode pods in a disaggregated deployment).
+    """
+
     def __init__(self, api, params, batch: int, s_max: int, mesh=None):
         self.api = api
         self.params = params
@@ -22,6 +31,35 @@ class ServeEngine:
         self.mesh = mesh
         self._prefill = jax.jit(api.prefill)
         self._decode = jax.jit(api.decode)
+
+    def comm_profile(self) -> Dict[str, float]:
+        """Measured per-request communication profile of this engine.
+
+        ``kv_bytes_per_token`` is derived from the *real* cache pytree —
+        the byte growth of ``api.init_cache`` per context slot — so it is
+        exact for every architecture family (GQA, MLA latents, hybrid
+        patterns whose mamba/rwkv state does not grow with context), not
+        a formula restated.  The analytic twin is
+        :func:`repro.dist.demand.kv_bytes_per_token`;
+        ``tests/test_serving.py`` pins the two against each other.  The
+        simulator sizes prefill→decode KV migration flows
+        (:func:`repro.dist.demand.kv_flow`) from this number.
+        """
+        def nbytes(s_max: int) -> int:
+            cache = self.api.init_cache(1, s_max)
+            return int(
+                sum(x.nbytes for x in jax.tree_util.tree_leaves(cache))
+            )
+        s0, s1 = 8, 16
+        per_token = (nbytes(s1) - nbytes(s0)) / (s1 - s0)
+        cfg = self.api.cfg
+        return {
+            "kv_bytes_per_token": float(per_token),
+            "fixed_state_bytes": float(nbytes(s0) - per_token * s0),
+            "dtype_bytes": float(jnp.dtype(cfg.compute_dtype).itemsize),
+            "num_layers": float(cfg.num_layers),
+            "batch_slots": float(self.batch),
+        }
 
     def generate(
         self, batch_inputs: Dict[str, np.ndarray], max_new_tokens: int

@@ -22,6 +22,13 @@ from .scheduler import (
     ilp_time_model,
     summarize,
 )
+from .serving import (
+    ScaleEvent,
+    autoscale_events,
+    request_latencies,
+    serving_job,
+    serving_trace,
+)
 from .trace import arrival_rate_for, generate_trace
 
 __all__ = [
@@ -32,15 +39,20 @@ __all__ = [
     "FluidSim",
     "JobFlows",
     "JobRecord",
+    "ScaleEvent",
     "SimConfig",
     "Simulator",
     "arrival_rate_for",
+    "autoscale_events",
     "fluid_fractions",
     "generate_trace",
     "ilp_time_model",
     "job_slowdown",
     "realized_fractions",
+    "request_latencies",
     "ring_edges",
+    "serving_job",
+    "serving_trace",
     "summarize",
     "waterfill_fractions",
     "waterfill_levels",

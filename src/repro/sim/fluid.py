@@ -71,6 +71,14 @@ class Flow:
     comm_fraction: float
     work: float
     arrival: float = 0.0
+    # latency-sensitive flows (inference serving KV streams): the engine
+    # records their (t, φ) timeline in ``FluidSim.phi_history`` so
+    # per-request transfer completions — the TTFT proxy, not a JCT — can
+    # be integrated afterwards by ``repro.sim.serving.request_latencies``.
+    # Standalone-engine twin of ``Simulator.phi_timeline`` (the scheduler
+    # drives ``fluid_fractions`` directly and records its own timeline);
+    # both feed the same integrator, so the semantics cannot diverge.
+    latency_sensitive: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -260,6 +268,9 @@ class FluidSim:
         self.downtime_circuit_s = 0.0  # Σ downtime · rewired (time-priced)
         self._active: Dict[int, _Active] = {}
         self._dark = DarkWindows()
+        # (t, φ) breakpoints per latency-sensitive flow, piecewise
+        # constant — the serving latency integration consumes these
+        self.phi_history: Dict[int, List[Tuple[float, float]]] = {}
 
     def add_flow(self, flow: Flow) -> None:
         self.flows.append(flow)
@@ -309,6 +320,10 @@ class FluidSim:
         for a, p in zip(acts, phi.tolist()):
             if p < a.record.min_phi:
                 a.record.min_phi = p
+            if a.flow.latency_sensitive:
+                self.phi_history.setdefault(a.flow.flow_id, []).append(
+                    (now, p)
+                )
         # rate = 1/(1 + α(1/φ − 1)); φ = 0 → stall (rate 0) unless α = 0
         rate = np.empty(F)
         live = phi > 0.0
@@ -347,12 +362,14 @@ class FluidSim:
             for a, r in zip(acts, rates.tolist()):
                 fid = a.flow.flow_id
                 a.rate = r
-                if r > 0:
+                if r > 0 and math.isfinite(a.remaining):
                     finish_version[fid] = seq
                     heapq.heappush(heap, (now + a.remaining / r, FINISH, seq, fid))
                     seq += 1
                 else:
-                    finish_version[fid] = -1  # stalled: no finish scheduled
+                    # stalled, or an open-ended (infinite-work) serving
+                    # flow: no finish to schedule
+                    finish_version[fid] = -1
 
         last_t = 0.0
         while heap:

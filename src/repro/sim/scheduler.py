@@ -9,12 +9,18 @@ Simulates a P-pod OCS cluster running a job trace under a chosen
   the aggregate demand of all running jobs; the *computation time* of the
   strategy delays the job start (JWT includes it, as in the paper),
 * running jobs progress under processor-sharing with per-job slowdown from
-  the flow model (``flowsim.waterfill_fractions`` — max-min water-filling
-  over OCS edges); slowdowns are re-evaluated whenever the running set or
-  the OCS configuration changes.  Per-job communication fractions and edge
-  demand come from the collective planner (``repro.dist``): dense jobs
-  contribute a DP ring, MoE-EP jobs an all-to-all mesh, PP jobs a stage
-  chain, each ring-ordered against the current configuration.
+  the selected progress engine (``SimConfig.engine``): the closed-form
+  max-min water-filling (``flowsim.waterfill_fractions``) or the fluid
+  engine (``fluid.fluid_fractions``, which additionally zeroes circuits
+  inside reconfiguration dark windows); slowdowns are re-evaluated
+  whenever the running set or the OCS configuration changes.  Per-job
+  communication fractions and edge demand come from the collective
+  planner (``repro.dist``): dense jobs contribute a DP ring, MoE-EP jobs
+  an all-to-all mesh, PP jobs a stage chain, each ring-ordered against
+  the current configuration.  Inference-serving fleets
+  (``Job.kind == "serve"``, see ``repro.sim.serving``) contribute
+  prefill→decode KV streams instead and are priced per *request* via
+  ``serving_summary``, not per job.
 
 Strategy runtimes: polynomial algorithms (MDMCF, greedy, Helios) are
 *measured* (this container's wall clock, scaled to all OCS groups); exact
@@ -70,6 +76,7 @@ from ..fault import (
 from ..fault.recover import RESTART_FIXED_S
 from . import flowsim
 from . import fluid as fluid_engine
+from . import serving as serving_mod
 from .trace import COMM_FRACTION
 
 OCS_SWITCH_S = 0.1  # analytic engine's optical switching pause stand-in;
@@ -99,6 +106,29 @@ def poly_time_model(num_gpus: int, incremental: bool = False) -> float:
 
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
+    """Immutable description of one simulated (cluster × policy) run.
+
+    The first two fields pick the paper's comparison axes: the physical
+    ``architecture`` (``cross_wiring`` | ``uniform`` | ``clos`` | ``best``)
+    and the reconfiguration ``strategy`` computing logical→physical
+    mappings (``mdmcf`` | ``mcf`` | ``itv_ilp`` | ``greedy`` |
+    ``uniform_ilp`` | ``helios`` | ``none``).  ``num_pods`` / ``k_spine``
+    / ``k_leaf`` / ``tau`` size the :class:`~repro.core.topology.
+    ClusterSpec`; the remaining fields select control-plane behaviour
+    (``incremental`` delta solving, ``timing`` model), the progress
+    ``engine`` (analytic closed form vs event-driven fluid with
+    ``reconfig_delay_s`` dark windows), the resilience policy
+    (``recovery_policy`` / ``ckpt_interval_s`` / ``active_pods``), and the
+    serving SLO (``serving_slo`` × the ideal KV transfer time counts as
+    served; ``serving_period_s`` is the diurnal period shared by the
+    arrival process and autoscale schedules).
+
+    >>> cfg = SimConfig("cross_wiring", "mdmcf", num_pods=4, k_spine=4,
+    ...                 k_leaf=4)
+    >>> (cfg.num_gpus, cfg.spec.gpus_per_pod)
+    (64, 16)
+    """
+
     architecture: str  # cross_wiring | uniform | clos | best
     strategy: str  # mdmcf | mcf | itv_ilp | greedy | uniform_ilp | helios | none
     num_pods: int = 32
@@ -124,6 +154,11 @@ class SimConfig:
     ckpt_interval_s: float = 1800.0  # checkpoint cadence for ckpt_restart
     active_pods: Optional[int] = None  # initially populated pods (expansion
     # scenarios; None → all num_pods live from t=0)
+    # ---- inference serving (repro.sim.serving) ---------------------------
+    serving_slo: float = 4.0  # a request is "served" when its KV-transfer
+    # latency stays within serving_slo × the ideal (φ=1) transfer time
+    serving_period_s: float = 86400.0  # diurnal period of serving load
+    # (shared by request arrivals and scripted autoscale schedules)
 
     def __post_init__(self) -> None:
         if self.recovery_policy not in POLICIES:
@@ -149,6 +184,14 @@ class SimConfig:
 
 @dataclasses.dataclass
 class JobRecord:
+    """Per-job outcome of a simulated run: start/finish timestamps (JRT =
+    finish − start, JWT = start − arrival, JCT = finish − arrival),
+    control-plane time charged to the job (``reconfig_s``), the worst
+    realized bandwidth fraction it saw (``min_phi``), and its resilience
+    history (restarts / shrinks / rolled-back seconds).  ``finish`` stays
+    NaN for jobs still running at the horizon — serving fleets always,
+    training jobs when ``run(until=...)`` cut them off."""
+
     job: Job
     start: float = math.nan
     finish: float = math.nan
@@ -175,6 +218,7 @@ class _Running:
     __slots__ = (
         "job", "placement", "edges", "comm_frac", "progress", "slowdown",
         "last_t", "record", "compute_scale", "cur_gpus",
+        "prefill_pods", "decode_pods", "kv_links", "replica_gpus",
     )
 
     def __init__(
@@ -198,6 +242,12 @@ class _Running:
         # compute stretch (service_time is calibrated to num_gpus)
         self.cur_gpus = job.num_gpus
         self.compute_scale = 1.0
+        # serving-fleet state (kind == "serve"): disaggregated pools and
+        # the per-pod link budget its KV flows were sized with
+        self.prefill_pods: List[int] = []
+        self.decode_pods: List[int] = []
+        self.kv_links = 0
+        self.replica_gpus = 0
 
     @property
     def pods(self) -> Dict[int, int]:
@@ -236,7 +286,41 @@ def _place(
     return None
 
 
+def _split_pools(
+    pods: Dict[int, int], prefill_frac: float
+) -> Tuple[List[int], List[int]]:
+    """Partition a serving fleet's pods into (prefill, decode) pools.
+
+    Walks pods in id order accumulating GPUs until the prefill share is
+    covered; both pools are non-empty whenever the fleet spans ≥ 2 pods
+    (a single-pod fleet keeps its KV traffic on the electrical fabric)."""
+    order = sorted(pods)
+    if len(order) < 2:
+        return order, []
+    want = prefill_frac * sum(pods.values())
+    prefill: List[int] = []
+    got = 0
+    for p in order[:-1]:  # always leave ≥ 1 pod for decode
+        prefill.append(p)
+        got += pods[p]
+        if got >= want:
+            break
+    return prefill, [p for p in order if p not in prefill]
+
+
 class Simulator:
+    """Event-driven multi-tenant cluster simulator (see module docstring).
+
+    Drives the trace in ``jobs`` (training jobs and serving fleets; list
+    position must equal ``job_id``) under ``cfg``'s architecture ×
+    strategy × engine, applying the optional ``fault_events`` stream
+    (failures/repairs/expansion from :mod:`repro.fault`, plus serving
+    :class:`~repro.sim.serving.ScaleEvent` autoscaling).  ``run()``
+    returns per-job :class:`JobRecord`\\ s; ``fault_summary()`` and
+    ``serving_summary()`` aggregate goodput/availability and
+    request-latency metrics.  Deterministic given ``seed``.
+    """
+
     def __init__(
         self,
         cfg: SimConfig,
@@ -247,6 +331,7 @@ class Simulator:
         self.cfg = cfg
         self.spec = cfg.spec
         self.jobs = list(jobs)
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
         self.free = np.full(cfg.num_pods, self.spec.gpus_per_pod, dtype=np.int64)
         self.running: Dict[int, _Running] = {}
@@ -276,6 +361,13 @@ class Simulator:
         self.shrinks = 0
         self.lost_gpu_s = 0.0  # GPU-seconds of work destroyed by rollbacks
         self.policy_decisions: List[Dict[str, object]] = []  # cheapest-policy log
+        # ---- serving state (repro.sim.serving) ---------------------------
+        self.phi_timeline: Dict[int, List[Tuple[float, float]]] = {}
+        self._serving_work: Dict[int, Tuple[float, float]] = {}  # jid →
+        # (work_s at φ=1, alpha_s), frozen at first start for the latency
+        # integration (pool reshapes show up through φ, not the stripe)
+        self.autoscale_applied = 0
+        self.autoscale_skipped = 0  # no free pod / job not running
         # ---- fluid engine state (repro.sim.fluid) ------------------------
         self._dark = fluid_engine.DarkWindows()  # circuits retuning now
         self.downtime_events = 0
@@ -463,6 +555,159 @@ class Simulator:
                 r.comm_frac, p, cap=cap
             )
             r.record.min_phi = min(r.record.min_phi, p)
+            if r.job.kind == "serve":
+                self._phi_point(now, jid, p)
+
+    def _phi_point(self, t: float, jid: int, phi: float) -> None:
+        """Append a (t, φ) breakpoint to a serving job's realized-bandwidth
+        timeline (``serving.request_latencies`` integrates it; standalone
+        ``FluidSim.phi_history`` is the engine-level twin feeding the same
+        integrator).  A start refresh can run slightly ahead of the event
+        clock (reconfig computation time), so timestamps are monotonized."""
+        tl = self.phi_timeline.setdefault(jid, [])
+        if tl and t < tl[-1][0]:
+            t = tl[-1][0]
+        tl.append((t, phi))
+
+    # ---- serving fleets (repro.sim.serving) ------------------------------
+
+    def _serving_links(self, job: Job, pods: Dict[int, int]) -> int:
+        """Per-pod spine-port budget of a serving fleet's KV flows.  Unlike
+        a ring (two neighbours share the degree), the prefill→decode
+        bipartite pattern uses the full degree budget of the job's port
+        share."""
+        frac = min(1.0, max(pods.values()) / self.spec.gpus_per_pod)
+        return max(1, int(round(self.cfg.k_spine * frac)))
+
+    def _rate_at(self, job: Job, now: float) -> float:
+        """Instantaneous offered request rate of a serving fleet — the
+        diurnal swell of :func:`~repro.sim.serving.serving_trace` applied
+        to the mean rate, so demand re-statements at event time (start,
+        autoscale, shrink) carry crest-hour load at the crest rather than
+        the flat mean."""
+        if job.diurnal <= 0.0:
+            return job.req_rate
+        phase = 2 * math.pi * (now - job.arrival) / self.cfg.serving_period_s
+        return job.req_rate * (1.0 + job.diurnal * math.sin(phase))
+
+    def _kv_edges(self, r: _Running, now: float):
+        return dist_demand.serving_edges(
+            r.job.model, r.prefill_pods, r.decode_pods, r.kv_links,
+            self._rate_at(r.job, now), r.job.kv_tokens,
+        )
+
+    def _start_serving(
+        self, job: Job, pods: Dict[int, int], rec: JobRecord, start_t: float
+    ) -> _Running:
+        """Bring a serving fleet up on ``pods``: split prefill/decode
+        pools, size the KV migration flows, and freeze the per-request
+        transfer work the latency integration uses.  α = 1 — a serving
+        flow *is* its communication, so its progress integrates delivered
+        bandwidth (∫φ dt)."""
+        placement = Placement(job.job_id, pods, ring_order=tuple(sorted(pods)))
+        run = _Running(job, placement, {}, 0.0, rec, start_t=start_t)
+        run.prefill_pods, run.decode_pods = _split_pools(
+            pods, job.prefill_frac
+        )
+        run.kv_links = self._serving_links(job, pods)
+        run.replica_gpus = (
+            max(1, sum(pods[p] for p in run.decode_pods)
+                // max(1, len(run.decode_pods)))
+            if run.decode_pods else self.spec.gpus_per_pod
+        )
+        run.edges = self._kv_edges(run, start_t)
+        ab = dist_collectives.AlphaBeta()
+        if run.edges:
+            run.comm_frac = 1.0
+            stripe = max(run.edges.values())
+            work = serving_mod.request_work_s(
+                job.model, job.kv_tokens, links=stripe, ab=ab
+            )
+            alpha_s = ab.alpha_cross_pod
+        else:  # single-pod fleet: KV moves on the electrical fabric
+            work = (
+                job.kv_tokens * dist_demand.kv_bytes_per_token(job.model)
+                * ab.beta_in_pod
+            )
+            alpha_s = ab.alpha_in_pod
+        if work <= 0:
+            # zero-byte KV stream (no model profile / kv_tokens=0): every
+            # latency metric would be silently meaningless
+            raise ValueError(
+                f"serving job {job.job_id} ({job.model!r}) has no KV "
+                "payload — use serving.serving_job / a profiled model"
+            )
+        self._serving_work.setdefault(job.job_id, (work, alpha_s))
+        return run
+
+    def _apply_scale(self, now: float, ev: "serving_mod.ScaleEvent") -> None:
+        """Autoscale a running serving fleet's decode pool.  The PortMask
+        is untouched, so the reconfiguration that follows is a pure demand
+        delta — served by ``mdmcf_delta``, not a cold solve."""
+        r = self.running.get(ev.job_id)
+        if r is None or r.job.kind != "serve":
+            self.autoscale_skipped += 1
+            return
+        changed = 0
+        if ev.pods > 0:
+            up = self.mask.pod_up()
+            need = r.replica_gpus
+            for _ in range(ev.pods):
+                cand = [
+                    p for p in range(self.cfg.num_pods)
+                    if up[p] and p not in r.pods and self.free[p] >= need
+                ]
+                if not cand:
+                    break
+                p = min(cand, key=lambda q: (self.free[q], q))  # tightest
+                self.free[p] -= need
+                r.pods[p] = need
+                r.decode_pods.append(p)
+                r.cur_gpus += need
+                changed += 1
+        else:
+            for _ in range(-ev.pods):
+                if len(r.decode_pods) <= 1:
+                    break  # never drain the last decode replica
+                p = r.decode_pods.pop()
+                n = r.pods.pop(p)
+                self.free[p] += n
+                r.cur_gpus -= n
+                changed += 1
+        want = abs(ev.pods)
+        self.autoscale_applied += changed
+        self.autoscale_skipped += want - changed
+        if changed == 0:
+            return
+        r.edges = self._kv_edges(r, now)
+
+    def _shrink_serving(self, now: float, r: _Running, pod: int) -> None:
+        """A pod failure hit a serving fleet: drop the pod from its pool
+        and keep serving on the survivors.  A wiped pool is re-seeded
+        from the other one (a decode pod promotes to prefill and vice
+        versa) so a multi-pod fleet always keeps both stages — losing a
+        whole pool must surface as rebuilt/degraded KV flows, never as a
+        silently-perfect φ = 1.  A fleet reduced to nothing goes dark —
+        its timeline ends at φ = 0 and every later request waits forever
+        (counted against goodput)."""
+        lost = r.pods.pop(pod)
+        self.free[pod] += lost
+        r.cur_gpus = max(0, r.cur_gpus - lost)
+        if pod in r.decode_pods:
+            r.decode_pods.remove(pod)
+        if pod in r.prefill_pods:
+            r.prefill_pods.remove(pod)
+        if not r.prefill_pods and r.decode_pods:
+            r.prefill_pods.append(r.decode_pods.pop(0))
+        elif not r.decode_pods and len(r.prefill_pods) > 1:
+            r.decode_pods.append(r.prefill_pods.pop())
+        if not r.pods:
+            del self.running[r.job.job_id]
+            self._phi_point(now, r.job.job_id, 0.0)
+            return
+        r.edges = self._kv_edges(r, now)
+        r.record.shrinks += 1
+        self.shrinks += 1
 
     # ---- fault handling --------------------------------------------------
 
@@ -586,6 +831,11 @@ class Simulator:
                     r for r in list(self.running.values()) if ev.pod in r.pods
                 ]
                 for r in victims:
+                    if r.job.kind == "serve":
+                        # serving fleets never restart: they degrade by
+                        # dropping the dead pod from their pools
+                        self._shrink_serving(now, r, ev.pod)
+                        continue
                     pol = policy
                     if pol == CHEAPEST:
                         pol = self._choose_policy(now, r, ev.pod)
@@ -702,20 +952,26 @@ class Simulator:
             self.queue.pop(0)
             for p, n in pods.items():
                 self.free[p] -= n
-            links = self._ring_links(job, pods)
-            # topology-aware ring ordering against the *current* OCS config
-            # (minimizes uncoverable demand even before reconfiguration)
-            order = dist_demand.ring_order(
-                sorted(pods), self.old_config, links=links
-            )
-            placement = Placement(job.job_id, pods, ring_order=order)
-            edges = dist_demand.job_edges(
-                job.model, order, links, ep=job.ep, pp=job.pp, tp=job.tp
-            )
             rec = self.records[job.job_id]
-            alpha = self._comm_fraction(job, len(pods), links)
             start_t = now  # refined below once reconfig time is known
-            run = _Running(job, placement, edges, alpha, rec, start_t=start_t)
+            if job.kind == "serve":
+                run = self._start_serving(job, pods, rec, start_t)
+            else:
+                links = self._ring_links(job, pods)
+                # topology-aware ring ordering against the *current* OCS
+                # config (minimizes uncoverable demand even before
+                # reconfiguration)
+                order = dist_demand.ring_order(
+                    sorted(pods), self.old_config, links=links
+                )
+                placement = Placement(job.job_id, pods, ring_order=order)
+                edges = dist_demand.job_edges(
+                    job.model, order, links, ep=job.ep, pp=job.pp, tp=job.tp
+                )
+                alpha = self._comm_fraction(job, len(pods), links)
+                run = _Running(
+                    job, placement, edges, alpha, rec, start_t=start_t
+                )
             run.progress = self.carry_progress.pop(job.job_id, 0.0)
             self.running[job.job_id] = run
             comp_s = reconfigure_now(now, skip_pause_for=job.job_id)
@@ -751,10 +1007,17 @@ class Simulator:
             elif kind == FAULT:
                 for r in self.running.values():
                     r.advance(t)
-                requeue = self._apply_fault(t, self.fault_events[jid])
-                for ready, rq_jid in requeue:
-                    heapq.heappush(ev, (ready, REQUEUE, seq, rq_jid))
-                    seq += 1
+                fe = self.fault_events[jid]
+                if isinstance(fe, serving_mod.ScaleEvent):
+                    # autoscale rides the fault stream but never touches
+                    # the PortMask: the re-solve below is a pure demand
+                    # delta (incremental path, no cold solve)
+                    self._apply_scale(t, fe)
+                else:
+                    requeue = self._apply_fault(t, fe)
+                    for ready, rq_jid in requeue:
+                        heapq.heappush(ev, (ready, REQUEUE, seq, rq_jid))
+                        seq += 1
                 # re-solve around the new mask; surviving jobs absorb the
                 # capacity change through the flow model
                 reconfigure_now(t)
@@ -823,6 +1086,62 @@ class Simulator:
             "repairs": float(self.fault_counts["repairs"]),
             "expands": float(self.fault_counts["expands"]),
         }
+
+    # ---- serving metrics -------------------------------------------------
+
+    def serving_summary(self) -> Dict[str, object]:
+        """Request-level outcome of the run's serving fleets.
+
+        For every ``kind="serve"`` job, regenerate its deterministic
+        request stream (:func:`~repro.sim.serving.serving_trace`, seeded
+        from the simulator seed and the job id) over the simulated
+        horizon and price each request's KV-transfer completion against
+        the φ timeline the run recorded — queue wait, contention, and
+        reconfiguration dark windows all surface as latency.  Returns
+        per-job rows (p50/p99/goodput vs the ``serving_slo``) plus the
+        pooled tail across all fleets; call after :meth:`run`.
+        """
+        rows: Dict[int, Dict[str, float]] = {}
+        pooled: List[np.ndarray] = []
+        served = requests = 0.0
+        for j in self.jobs:
+            if j.kind != "serve":
+                continue
+            span = self._end_time - j.arrival
+            arrivals = (
+                serving_mod.serving_trace(
+                    span, j.req_rate, seed=(self.seed, j.job_id),
+                    diurnal=j.diurnal, period_s=self.cfg.serving_period_s,
+                    t0=j.arrival,
+                )
+                if span > 0 and j.req_rate > 0 else _EMPTY
+            )
+            work, alpha_s = self._serving_work.get(j.job_id, (0.0, 0.0))
+            lat = serving_mod.request_latencies(
+                arrivals, work, self.phi_timeline.get(j.job_id, ()),
+                alpha_s=alpha_s,
+            )
+            slo = self.cfg.serving_slo * (work + alpha_s)
+            row = serving_mod.summarize_requests(lat, slo)
+            row["ideal_s"] = work + alpha_s
+            row["slo_s"] = slo
+            rows[j.job_id] = row
+            pooled.append(lat)
+            requests += row["requests"]
+            served += row["goodput"] * row["requests"] if row["requests"] else 0
+        lat = np.concatenate(pooled) if pooled else _EMPTY
+        return {
+            "jobs": rows,
+            "requests": float(requests),
+            "p50_s": serving_mod.pool_quantile(lat, 0.5),
+            "p99_s": serving_mod.pool_quantile(lat, 0.99, strict=True),
+            "goodput": served / requests if requests else math.nan,
+            "autoscale_applied": float(self.autoscale_applied),
+            "autoscale_skipped": float(self.autoscale_skipped),
+        }
+
+
+_EMPTY = np.empty(0)
 
 
 def summarize(records: Sequence[JobRecord]) -> Dict[str, float]:

@@ -1,0 +1,337 @@
+"""Inference-serving workload archetype over the optical fabric.
+
+Training jobs are long-lived rings; production *serving* traffic — the
+ROADMAP's "millions of users" half — looks nothing like them: request-level
+Poisson arrivals with diurnal swell, disaggregated prefill/decode pools
+exchanging short latency-critical KV-cache transfers, and autoscaling that
+reshapes demand while the cluster is live (the shifting-demand regime
+FastReChain argues TE must be judged under — see PAPERS.md).  This module
+gives both progress engines that workload:
+
+* **Arrival process** — :func:`serving_trace`: an inhomogeneous Poisson
+  stream (thinning) whose rate swells by a diurnal factor, deterministic
+  given the seed (the simulator's reproducibility discipline).
+* **KV migration flows** — a serving job's cross-pod demand is the
+  prefill→decode KV-cache stream, sized by
+  :func:`repro.dist.demand.kv_flow` from the model's
+  ``kv_bytes_per_token`` (calibrated against the real serving engine via
+  :meth:`repro.serve.engine.ServeEngine.comm_profile`).
+* **Latency accounting** — a request arriving at ``t`` completes its KV
+  transfer when the *time-varying* realized bandwidth fraction φ has
+  delivered its bytes: :func:`request_latencies` integrates the φ
+  timeline the scheduler records per serving job, so reconfiguration dark
+  windows and contention surface as p99 tail latency (TTFT proxy), not as
+  JCT.
+* **Autoscaling** — :class:`ScaleEvent` adds/drains decode-pool pods of a
+  *running* serving job.  It rides the scheduler's fault-event stream
+  (the :class:`~repro.fault.model.ExpandEvent` machinery) but, unlike
+  expansion, never touches the :class:`~repro.fault.masks.PortMask` — so
+  the control plane absorbs it as a pure demand delta via
+  :func:`~repro.core.incremental.mdmcf_delta`, no cold solve
+  (``tests/test_serving.py`` pins this).
+
+The scheduler-facing entry points are :func:`serving_job` (build a
+``kind="serve"`` :class:`~repro.core.logical.Job`) and
+:func:`repro.sim.scheduler.Simulator.serving_summary`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.logical import Job
+from ..dist.collectives import AlphaBeta
+from ..dist.demand import kv_bytes_per_token
+
+__all__ = [
+    "KV_ALPHA_S",
+    "ScaleEvent",
+    "autoscale_events",
+    "pool_quantile",
+    "request_latencies",
+    "request_work_s",
+    "serving_job",
+    "serving_trace",
+    "summarize_requests",
+]
+
+# per-transfer circuit latency: one cross-pod hop of the alpha-beta model
+KV_ALPHA_S = AlphaBeta().alpha_cross_pod
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleEvent:
+    """Autoscale a running serving job's decode pool at ``time``.
+
+    ``pods > 0`` adds that many decode-pod replicas (allocated from free,
+    healthy pods); ``pods < 0`` drains them (last added first).  Processed
+    on the scheduler's fault-event stream, but the cluster's
+    :class:`~repro.fault.masks.PortMask` is untouched: the reconfiguration
+    that follows is a demand-only delta, served by the incremental control
+    plane (:func:`~repro.core.incremental.mdmcf_delta`) instead of a cold
+    solve.
+    """
+
+    time: float
+    job_id: int
+    pods: int
+
+    def __post_init__(self) -> None:
+        if self.pods == 0:
+            raise ValueError("ScaleEvent must add or drain at least one pod")
+
+
+def serving_job(
+    job_id: int,
+    num_gpus: int,
+    arrival: float = 0.0,
+    model: str = "llama2-13b",
+    req_rate: float = 10.0,
+    kv_tokens: int = 2048,
+    prefill_frac: float = 0.25,
+    diurnal: float = 0.0,
+    tp: int = 8,
+) -> Job:
+    """Build a ``kind="serve"`` :class:`~repro.core.logical.Job`.
+
+    A serving job is a replica fleet, not a batch job: it has no service
+    time (it runs until the simulation horizon) and its cross-pod demand
+    is the prefill→decode KV stream rather than a DP ring.  ``req_rate``
+    is the mean offered load in requests/s, ``kv_tokens`` the prompt
+    length whose KV migrates per request, ``prefill_frac`` the share of
+    the fleet's GPUs dedicated to the prefill pool, and ``diurnal`` the
+    relative amplitude of the daily load swing (0 = flat).
+
+    Raises ``ValueError`` for models without a KV profile — a zero-byte
+    KV stream would make every latency metric silently meaningless (the
+    training path has a legacy fallback for unprofiled models; the
+    serving path refuses instead).
+
+    >>> j = serving_job(7, 256, req_rate=20.0)
+    >>> (j.kind, j.service_time, j.dp_pp_ways > 1)
+    ('serve', inf, True)
+    """
+    if kv_bytes_per_token(model) <= 0:
+        raise ValueError(
+            f"model {model!r} has no kv_bytes_per_token profile — add it to "
+            "repro.dist.collectives.MODEL_PROFILES before serving it"
+        )
+    return Job(
+        job_id=job_id,
+        num_gpus=num_gpus,
+        arrival=arrival,
+        service_time=math.inf,
+        model=model,
+        tp=tp,
+        kind="serve",
+        req_rate=req_rate,
+        kv_tokens=kv_tokens,
+        prefill_frac=prefill_frac,
+        diurnal=diurnal,
+    )
+
+
+def serving_trace(
+    horizon_s: float,
+    req_rate: float,
+    seed: int = 0,
+    diurnal: float = 0.0,
+    period_s: float = 86400.0,
+    t0: float = 0.0,
+) -> np.ndarray:
+    """Request arrival times on ``[t0, t0 + horizon_s)``.
+
+    Inhomogeneous Poisson process with rate ``req_rate · (1 + diurnal ·
+    sin(2π(t − t0)/period_s))`` generated by Lewis–Shedler thinning
+    against the peak rate, so the stream is exact and deterministic given
+    the seed.  ``diurnal = 0`` reduces to a plain Poisson process.
+
+    >>> a = serving_trace(100.0, 5.0, seed=1)
+    >>> bool((np.diff(a) > 0).all() and a[0] >= 0.0 and a[-1] < 100.0)
+    True
+    """
+    if not 0.0 <= diurnal < 1.0:
+        raise ValueError("diurnal amplitude must be in [0, 1)")
+    if req_rate <= 0 or horizon_s <= 0:
+        return np.empty(0)
+    rng = np.random.default_rng(seed)
+    peak = req_rate * (1.0 + diurnal)
+    # homogeneous candidates at the peak rate, thinned in vectorized
+    # chunks; the cap bounds transient memory on day-long horizons
+    chunk = max(64, min(1_000_000, int(peak * horizon_s) + 1))
+    out: List[np.ndarray] = []
+    t = 0.0
+    while t < horizon_s:
+        cand = t + np.cumsum(rng.exponential(1.0 / peak, size=chunk))
+        t = float(cand[-1])
+        u = rng.random(cand.size)
+        lam = req_rate * (1.0 + diurnal * np.sin(2 * np.pi * cand / period_s))
+        out.append(cand[(u * peak < lam) & (cand < horizon_s)])
+    arrivals = np.concatenate(out)
+    return arrivals + t0
+
+
+def request_work_s(
+    model,
+    kv_tokens: int,
+    links: int = 1,
+    ab: Optional[AlphaBeta] = None,
+) -> float:
+    """Bandwidth-seconds to stream one request's KV at φ = 1.
+
+    ``kv_tokens · kv_bytes_per_token(model) · β_cross / links`` — the
+    bandwidth term of the alpha–beta p2p transfer, striped over the
+    ``links`` spine circuits provisioned on the prefill→decode pair.  The
+    circuit latency term (:data:`KV_ALPHA_S`) is added by
+    :func:`request_latencies`, because latency does not stretch with φ
+    (the circuit exists, it is just thinner than requested).
+    """
+    ab = ab if ab is not None else AlphaBeta()
+    return (
+        kv_tokens * kv_bytes_per_token(model) * ab.beta_cross_pod
+        / max(1, links)
+    )
+
+
+def request_latencies(
+    arrivals: np.ndarray,
+    work_s: float,
+    timeline: Sequence[Tuple[float, float]],
+    alpha_s: float = KV_ALPHA_S,
+) -> np.ndarray:
+    """KV-transfer completion latency of each request (TTFT proxy).
+
+    ``timeline`` is the piecewise-constant realized-bandwidth-fraction
+    record the scheduler keeps per serving job: ``(t, φ)`` breakpoints,
+    each φ holding until the next breakpoint and the last extending to
+    the horizon.  A request arriving at ``a`` finishes at the first ``f``
+    with ``∫_a^f φ(t) dt = work_s``; its latency is ``f − a + alpha_s``.
+    Before the first breakpoint (job still queued) and inside dark
+    windows φ = 0, so those requests *wait* — queueing and
+    reconfiguration downtime surface here as tail latency.  Requests the
+    timeline can never finish (φ stuck at 0) get ``inf``.
+
+    >>> lat = request_latencies(
+    ...     np.array([0.0, 1.0]), 1.0, [(0.0, 1.0), (2.0, 0.5)], alpha_s=0.0)
+    >>> [round(float(x), 3) for x in lat]
+    [1.0, 1.0]
+    """
+    arrivals = np.asarray(arrivals, dtype=np.float64)
+    if arrivals.size == 0:
+        return np.empty(0)
+    if not timeline:
+        return np.full(arrivals.shape, math.inf)
+    ts = np.array([t for t, _ in timeline], dtype=np.float64)
+    phis = np.array([p for _, p in timeline], dtype=np.float64)
+    # cumulative ∫φ at each breakpoint (piecewise constant segments)
+    seg = np.diff(ts) * phis[:-1]
+    I = np.concatenate([[0.0], np.cumsum(seg)])  # I[i] = ∫ up to ts[i]
+    # integral at each arrival (arrivals before ts[0] accrue nothing)
+    idx = np.searchsorted(ts, arrivals, side="right") - 1
+    inside = idx >= 0
+    I_a = np.zeros_like(arrivals)
+    I_a[inside] = I[idx[inside]] + (
+        arrivals[inside] - ts[idx[inside]]
+    ) * phis[idx[inside]]
+    target = I_a + work_s
+    # first breakpoint whose cumulative integral reaches the target
+    j = np.searchsorted(I, target, side="left")
+    finish = np.empty_like(arrivals)
+    open_end = j >= len(ts)  # target lands beyond the last breakpoint
+    inner = ~open_end
+    ji = j[inner]
+    # interpolate inside segment [ts[j-1], ts[j]] (φ > 0 there, else the
+    # cumulative integral could not have increased past the target)
+    prev = np.maximum(ji - 1, 0)
+    phi_seg = phis[prev]
+    finish[inner] = np.where(
+        phi_seg > 0,
+        ts[prev] + (target[inner] - I[prev]) / np.where(phi_seg > 0, phi_seg, 1.0),
+        ts[ji],
+    )
+    if open_end.any():
+        tail_phi = phis[-1]
+        if tail_phi > 0:
+            finish[open_end] = ts[-1] + (target[open_end] - I[-1]) / tail_phi
+        else:
+            finish[open_end] = math.inf
+    return finish - arrivals + alpha_s
+
+
+def autoscale_events(
+    job: Job,
+    horizon_s: float,
+    period_s: float = 86400.0,
+    pods: int = 1,
+    cycles: Optional[int] = None,
+) -> List[ScaleEvent]:
+    """Scripted diurnal autoscale schedule for one serving job.
+
+    Capacity follows load: ``pods`` decode replicas join at each daily
+    peak (quarter period after the job starts, where the diurnal sine
+    crests) and drain at each trough (three quarters).  Scripted rather
+    than reactive — like :class:`~repro.fault.model.ExpandEvent`,
+    capacity change is an operator policy, and a deterministic schedule
+    keeps simulations reproducible.  Returns an empty list for flat
+    (``diurnal = 0``) jobs.
+    """
+    if job.kind != "serve" or job.diurnal <= 0.0:
+        return []
+    out: List[ScaleEvent] = []
+    n = 0
+    t_up = job.arrival + 0.25 * period_s
+    while t_up < job.arrival + horizon_s and (cycles is None or n < cycles):
+        out.append(ScaleEvent(t_up, job.job_id, pods))
+        t_down = t_up + 0.5 * period_s
+        if t_down < job.arrival + horizon_s:
+            out.append(ScaleEvent(t_down, job.job_id, -pods))
+        t_up += period_s
+        n += 1
+    return out
+
+
+def pool_quantile(
+    latencies: np.ndarray, q: float, strict: bool = False
+) -> float:
+    """Quantile over request latencies, inf-aware.  ``strict`` (tail
+    quantiles): any never-finishing request (φ stuck at zero) poisons the
+    estimate to inf; otherwise unfinished requests are dropped (median of
+    what finished).  The single implementation behind both the per-job
+    rows (:func:`summarize_requests`) and the pooled summary
+    (:meth:`~repro.sim.scheduler.Simulator.serving_summary`)."""
+    lat = np.asarray(latencies, dtype=np.float64)
+    if lat.size == 0:
+        return math.nan
+    finite = lat[np.isfinite(lat)]
+    if finite.size == 0 or (strict and finite.size < lat.size):
+        return math.inf
+    return float(np.quantile(finite, q))
+
+
+def summarize_requests(
+    latencies: np.ndarray, slo_s: float
+) -> Dict[str, float]:
+    """p50/p99/goodput summary of one serving job's request latencies.
+
+    *Goodput* is the share of requests whose KV transfer completed within
+    ``slo_s`` (requests that never finish — φ stuck at zero — count
+    against it).
+    """
+    lat = np.asarray(latencies, dtype=np.float64)
+    if lat.size == 0:
+        return {
+            "requests": 0.0, "p50_s": math.nan, "p99_s": math.nan,
+            "max_s": math.nan, "goodput": math.nan,
+        }
+    finite = lat[np.isfinite(lat)]
+    served = finite[finite <= slo_s]
+    return {
+        "requests": float(lat.size),
+        "p50_s": pool_quantile(lat, 0.5),
+        "p99_s": pool_quantile(lat, 0.99, strict=True),
+        "max_s": pool_quantile(lat, 1.0, strict=True),
+        "goodput": float(served.size / lat.size),
+    }

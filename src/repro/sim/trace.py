@@ -68,14 +68,39 @@ def arrival_rate_for(workload_level: float, num_gpus: int) -> float:
     return workload_level * num_gpus / expected_gpu_seconds()
 
 
+# serving-fleet archetypes mixed into a trace (model, kv prompt tokens,
+# requests/s per 64 fleet GPUs): a dense 13B chat tier and a GQA MoE tier
+SERVING_MIX: Tuple[Tuple[str, int, float], ...] = (
+    ("llama2-13b", 2048, 16.0),
+    ("mixtral-8x7b", 4096, 48.0),
+)
+
+
 def generate_trace(
     num_jobs: int,
     num_gpus: int,
     workload_level: float = 0.801,
     seed: int = 0,
     max_job_gpus: Optional[int] = None,
+    serving_jobs: int = 0,
+    serving_gpus: int = 128,
+    serving_diurnal: float = 0.0,
+    serving_load: float = 1.0,
 ) -> List[Job]:
-    """Poisson arrivals, mixed sizes, log-normal service times."""
+    """Poisson arrivals, mixed sizes, log-normal service times.
+
+    ``serving_jobs > 0`` appends that many long-lived inference-serving
+    fleets (:func:`repro.sim.serving.serving_job`) of ``serving_gpus``
+    GPUs each, cycling through :data:`SERVING_MIX` with request rates
+    scaled by ``serving_load`` and fleet size.  Serving fleets arrive
+    jittered inside the first training inter-arrival so they are placed
+    before the queue builds up.  The training stream is drawn first from
+    its own generator state, so a mixed trace's training jobs are
+    *byte-identical* to the ``serving_jobs=0`` trace with the same seed
+    (determinism pinned in ``tests/test_serving.py``).
+    """
+    from .serving import serving_job  # local: avoid import cycle at load
+
     rng = np.random.default_rng(seed)
     lam = arrival_rate_for(workload_level, num_gpus)
     sizes = np.array([k for k, _, _ in JOB_MIX])
@@ -111,4 +136,23 @@ def generate_trace(
                 pp=pp,
             )
         )
+    if serving_jobs > 0:
+        # separate generator: the training stream above stays identical
+        srng = np.random.default_rng([seed, 0x5E27E])
+        first_t = jobs[0].arrival if jobs else 0.0
+        for k in range(serving_jobs):
+            model, kv_tokens, rate64 = SERVING_MIX[k % len(SERVING_MIX)]
+            jobs.append(
+                serving_job(
+                    job_id=num_jobs + k,
+                    num_gpus=serving_gpus,
+                    arrival=float(srng.uniform(0.0, max(first_t, 1e-3))),
+                    model=model,
+                    req_rate=rate64 * serving_load * serving_gpus / 64.0,
+                    kv_tokens=kv_tokens,
+                    diurnal=serving_diurnal,
+                )
+            )
+        # keep list position == job_id (the scheduler indexes jobs by id);
+        # the event heap orders arrivals regardless of list order
     return jobs

@@ -1,0 +1,69 @@
+"""Documentation gate (CI `docs` job).
+
+Three checks keep the documentation tree honest as the code grows:
+
+* every doctest-style example embedded in the public entry points'
+  docstrings executes cleanly (``doctest.testmod`` on the modules the
+  docstring pass covers — all numpy-only, so this stays cheap),
+* every package under ``src/repro`` is mentioned in README.md's package
+  map (a new subsystem cannot land undocumented),
+* the top-level docs tree exists (README + docs/*.md).
+"""
+import doctest
+import importlib
+import os
+import re
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# modules whose docstrings carry executable examples (the PR 5 docstring
+# pass); extend as examples are added elsewhere
+DOCTEST_MODULES = [
+    "repro.core.incremental",
+    "repro.dist.demand",
+    "repro.fault.masks",
+    "repro.sim.scheduler",
+    "repro.sim.serving",
+]
+
+REQUIRED_DOCS = [
+    "README.md",
+    os.path.join("docs", "architecture.md"),
+    os.path.join("docs", "simulation.md"),
+    os.path.join("docs", "serving.md"),
+]
+
+
+@pytest.mark.parametrize("mod", DOCTEST_MODULES)
+def test_docstring_examples_execute(mod):
+    results = doctest.testmod(importlib.import_module(mod), verbose=False)
+    assert results.attempted > 0, f"{mod}: docstring examples disappeared"
+    assert results.failed == 0, f"{mod}: {results.failed} doctest failures"
+
+
+@pytest.mark.parametrize("path", REQUIRED_DOCS)
+def test_docs_exist(path):
+    assert os.path.exists(os.path.join(REPO, path)), f"{path} missing"
+
+
+def test_readme_package_map_complete():
+    """Every repro.* package must appear in README's package map."""
+    with open(os.path.join(REPO, "README.md")) as fh:
+        readme = fh.read()
+    pkg_root = os.path.join(REPO, "src", "repro")
+    packages = sorted(
+        d for d in os.listdir(pkg_root)
+        if os.path.isdir(os.path.join(pkg_root, d))
+        and not d.startswith("__")
+    )
+    assert packages, "src/repro packages not found"
+    missing = [
+        p for p in packages
+        if not re.search(rf"`(repro[./])?{re.escape(p)}[/`]", readme)
+    ]
+    assert not missing, (
+        f"README.md package map is missing packages: {missing} — "
+        "add a row for each new subsystem"
+    )

@@ -1,0 +1,308 @@
+"""Serving archetype: KV sizing vs the real engine, mixed-trace
+determinism, autoscale on the incremental control-plane path, and the
+closed-form differential guarantee for static serving scenarios."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.dist.collectives import AlphaBeta, MODEL_PROFILES
+from repro.dist.demand import kv_bytes_per_token, kv_flow, serving_edges
+from repro.sim import (
+    SimConfig,
+    Simulator,
+    autoscale_events,
+    generate_trace,
+    serving_job,
+    serving_trace,
+)
+from repro.sim.serving import ScaleEvent, request_latencies, request_work_s
+
+
+# ---------------------------------------------------------------------------
+# KV-flow byte sizing vs the serving engine's measured comm profile
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "qwen2.5-14b", "deepseek-v3-671b"])
+def test_kv_bytes_match_engine_comm_profile(arch):
+    """The analytic per-token KV size must equal what the real engine
+    allocates per cache slot (GQA tensors, MLA compressed latents)."""
+    from repro.models import get_api, smoke_config
+    from repro.serve.engine import ServeEngine
+
+    cfg = smoke_config(arch)
+    api = get_api(cfg)
+    # comm_profile only sizes cache pytrees: no params needed
+    eng = ServeEngine(api, params=None, batch=2, s_max=32)
+    prof = eng.comm_profile()
+    assert prof["kv_bytes_per_token"] == pytest.approx(
+        kv_bytes_per_token(cfg), rel=0, abs=0
+    )
+    assert prof["kv_bytes_per_token"] > 0
+
+
+def test_profile_kv_bytes_formula():
+    """Trace-model profiles carry 2·layers·kv_heads·head_dim·dtype bytes."""
+    assert kv_bytes_per_token("mixtral-8x7b") == 2 * 32 * 8 * 128 * 2
+    assert kv_bytes_per_token("llama2-70b") == 2 * 80 * 8 * 128 * 2
+    assert kv_bytes_per_token("unknown-model") == 0.0
+
+
+def test_kv_flow_scales_with_load():
+    """Offered load is reflected in the edge demand until the per-pair
+    port budget caps it; pools sharing a pod stay off the OCS."""
+    lo = kv_flow("llama2-13b", [0], [1, 2], 8, req_rate=4.0, kv_tokens=2048)
+    hi = kv_flow("llama2-13b", [0], [1, 2], 8, req_rate=64.0, kv_tokens=2048)
+    assert set(lo) == {(0, 1), (0, 2)}
+    assert all(hi[e] > lo[e] for e in lo)
+    assert max(hi.values()) <= 8
+    assert kv_flow("llama2-13b", [0], [0], 8, 4.0, 2048) == {}
+
+
+def test_serving_edges_moe_decode_mesh():
+    """Pod-spilling MoE fleets add the decode-pool EP all-to-all clique;
+    dense fleets stay bipartite."""
+    dense = serving_edges("llama2-13b", [0], [1, 2, 3], 8, 16.0, 2048)
+    assert all(0 in e for e in dense)
+    moe = serving_edges("mixtral-8x7b", [0], [1, 2, 3], 8, 16.0, 2048)
+    for a, b in [(1, 2), (1, 3), (2, 3)]:
+        assert (a, b) in moe
+
+
+# ---------------------------------------------------------------------------
+# arrival process + mixed-trace determinism
+# ---------------------------------------------------------------------------
+
+def test_serving_trace_deterministic_and_rate():
+    a1 = serving_trace(2000.0, 5.0, seed=3, diurnal=0.4, period_s=500.0)
+    a2 = serving_trace(2000.0, 5.0, seed=3, diurnal=0.4, period_s=500.0)
+    np.testing.assert_array_equal(a1, a2)
+    assert (np.diff(a1) >= 0).all()
+    assert a1[0] >= 0.0 and a1[-1] < 2000.0
+    # mean rate within 10% of nominal over a long window
+    assert a1.size == pytest.approx(2000.0 * 5.0, rel=0.1)
+    with pytest.raises(ValueError):
+        serving_trace(100.0, 5.0, diurnal=1.5)
+
+
+def test_mixed_trace_deterministic_and_train_invariant():
+    base = generate_trace(12, num_gpus=512, seed=5)
+    m1 = generate_trace(12, num_gpus=512, seed=5, serving_jobs=2)
+    m2 = generate_trace(12, num_gpus=512, seed=5, serving_jobs=2)
+    assert m1 == m2  # dataclass equality: byte-identical mixed trace
+    # the training stream is unchanged by mixing serving fleets in
+    assert m1[:12] == base
+    serve = [j for j in m1 if j.kind == "serve"]
+    assert len(serve) == 2
+    assert all(
+        j.service_time == math.inf and j.req_rate > 0 for j in serve
+    )
+    # list position must stay == job_id (the scheduler indexes jobs by id)
+    assert all(j.job_id == i for i, j in enumerate(m1))
+
+
+# ---------------------------------------------------------------------------
+# request-latency integration
+# ---------------------------------------------------------------------------
+
+def test_request_latencies_piecewise():
+    # φ = 1 for 2 s, dark (φ = 0) for 1 s, then φ = 0.5
+    tl = [(0.0, 1.0), (2.0, 0.0), (3.0, 0.5)]
+    lat = request_latencies(
+        np.array([0.0, 1.5, 2.5]), 1.0, tl, alpha_s=0.0
+    )
+    assert lat[0] == pytest.approx(1.0)  # finished before the window
+    # arrived 1.5: 0.5 work done by t=2, stalls to 3, 0.5/0.5=1 s more
+    assert lat[1] == pytest.approx(4.0 - 1.5)
+    # arrived dark: waits to t=3, then 1.0/0.5 = 2 s
+    assert lat[2] == pytest.approx(5.0 - 2.5)
+    # empty timeline / never-finishing tail → inf
+    assert math.isinf(request_latencies(np.array([0.0]), 1.0, [])[0])
+    assert math.isinf(
+        request_latencies(np.array([5.0]), 1.0, [(0.0, 1.0), (4.0, 0.0)])[0]
+    )
+
+
+def test_request_latencies_before_start_queue():
+    """Requests arriving before the fleet starts wait for the timeline."""
+    lat = request_latencies(np.array([0.0]), 1.0, [(10.0, 1.0)], alpha_s=0.0)
+    assert lat[0] == pytest.approx(11.0)
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration
+# ---------------------------------------------------------------------------
+
+def _cfg(**kw):
+    kw.setdefault("engine", "fluid")
+    return SimConfig(
+        "cross_wiring", "mdmcf", num_pods=8, k_spine=8, k_leaf=8, **kw
+    )
+
+
+def test_static_serving_matches_closed_form():
+    """Differential guarantee: one serving fleet, static configuration →
+    every request's latency equals the alpha–beta transfer time within
+    1e-6 relative."""
+    for engine in ("analytic", "fluid"):
+        cfg = _cfg(engine=engine)
+        job = serving_job(0, 256, model="llama2-13b", req_rate=20.0,
+                          kv_tokens=2048)
+        sim = Simulator(cfg, [job], seed=0)
+        sim.run(until=300.0)
+        s = sim.serving_summary()
+        work, alpha_s = sim._serving_work[0]
+        r = sim.running[0]
+        stripe = max(r.edges.values())
+        ab = AlphaBeta()
+        closed = (
+            2048 * MODEL_PROFILES["llama2-13b"].kv_bytes_per_token
+            * ab.beta_cross_pod / stripe + ab.alpha_cross_pod
+        )
+        assert work + alpha_s == pytest.approx(closed, rel=1e-12)
+        row = s["jobs"][0]
+        assert row["p50_s"] == pytest.approx(closed, rel=1e-6)
+        assert row["p99_s"] == pytest.approx(closed, rel=1e-6)
+        assert row["max_s"] == pytest.approx(closed, rel=1e-6)
+        assert row["goodput"] == 1.0
+
+
+def test_autoscale_served_by_incremental_delta():
+    """Happy path: ScaleEvents reshape a running fleet's demand without a
+    mask change — every post-start reconfiguration must be served by
+    mdmcf_delta (no cold solve)."""
+    cfg = _cfg()
+    job = serving_job(0, 128, model="mixtral-8x7b", req_rate=48.0,
+                      kv_tokens=2048, diurnal=0.3)
+    evs = [ScaleEvent(50.0, 0, 1), ScaleEvent(100.0, 0, 1),
+           ScaleEvent(150.0, 0, -1)]
+    sim = Simulator(cfg, [job], seed=0, fault_events=evs)
+    sim.run(until=200.0)
+    s = sim.serving_summary()
+    assert s["autoscale_applied"] == 3.0
+    # 1 cold solve at fleet start; every scale event rides mdmcf_delta
+    assert sim.reconfig_calls == 4
+    assert sim.delta_calls == 3
+    r = sim.running[0]
+    # net +1 decode pod survives the up/up/down cycle
+    assert len(r.decode_pods) == len(_pods_of(sim, 0)) - len(r.prefill_pods)
+
+
+def _pods_of(sim, jid):
+    return sim.running[jid].pods
+
+
+def test_autoscale_events_schedule():
+    job = serving_job(3, 128, req_rate=8.0, diurnal=0.5, arrival=100.0)
+    evs = autoscale_events(job, 2400.0, period_s=1200.0)
+    assert [(e.time, e.pods) for e in evs] == [
+        (400.0, 1), (1000.0, -1), (1600.0, 1), (2200.0, -1)
+    ]
+    assert all(e.job_id == 3 for e in evs)
+    # flat load → no autoscaling
+    flat = serving_job(4, 128, req_rate=8.0, diurnal=0.0)
+    assert autoscale_events(flat, 2400.0, period_s=1200.0) == []
+
+
+def test_mixed_trace_runs_and_serving_summary():
+    """Train + serve coexist: training jobs finish, serving fleets report
+    request latencies, and the pooled summary is well-formed."""
+    jobs = generate_trace(
+        6, num_gpus=512, seed=2, max_job_gpus=64,
+        serving_jobs=1, serving_gpus=128, serving_diurnal=0.2,
+    )
+    cfg = _cfg(reconfig_delay_s=0.01, serving_period_s=600.0)
+    sim = Simulator(cfg, jobs, seed=0)
+    sim.run(until=1500.0)
+    s = sim.serving_summary()
+    assert s["requests"] > 0
+    assert math.isfinite(s["p99_s"]) and s["p99_s"] >= s["p50_s"]
+    assert 0.0 <= s["goodput"] <= 1.0
+    # determinism of the whole pipeline
+    sim2 = Simulator(cfg, jobs, seed=0)
+    sim2.run(until=1500.0)
+    assert sim2.serving_summary() == s
+
+
+def test_serving_survives_pod_failure():
+    """A pod failure shrinks the fleet's pools instead of restarting it."""
+    from repro.fault import FailureEvent
+
+    cfg = _cfg()
+    job = serving_job(0, 256, model="llama2-13b", req_rate=20.0,
+                      kv_tokens=2048)
+    sim = Simulator(cfg, [job], seed=0)
+    sim.run(until=400.0)
+    victim = sim.running[0].decode_pods[0]
+    sim2 = Simulator(
+        cfg, [job], seed=0,
+        fault_events=[FailureEvent(200.0, "pod", pod=victim)],
+    )
+    sim2.run(until=400.0)
+    r = sim2.running[0]
+    assert victim not in r.pods
+    assert r.record.shrinks == 1 and r.record.restarts == 0
+    assert r.prefill_pods and r.decode_pods
+
+
+def test_serving_decode_pool_wipe_reseeds():
+    """Losing the entire decode pool must re-seed it from prefill (and
+    rebuild the KV flows), not report a perfect φ=1 fleet with no decode
+    capacity."""
+    from repro.fault import FailureEvent
+
+    cfg = _cfg()
+    # prefill_frac=0.6 over 3 pods → prefill=[p0,p1], decode=[p2]
+    job = serving_job(0, 192, model="llama2-13b", req_rate=20.0,
+                      kv_tokens=2048, prefill_frac=0.6)
+    sim = Simulator(cfg, [job], seed=0)
+    sim.run(until=400.0)
+    victim = sim.running[0].decode_pods[0]
+    assert len(sim.running[0].prefill_pods) == 2
+    sim2 = Simulator(
+        cfg, [job], seed=0,
+        fault_events=[FailureEvent(200.0, "pod", pod=victim)],
+    )
+    sim2.run(until=400.0)
+    r = sim2.running[0]
+    assert r.prefill_pods and r.decode_pods  # decode re-seeded
+    assert victim not in r.pods
+    assert r.edges  # KV flows rebuilt over the surviving split
+
+
+def test_unprofiled_serving_model_rejected():
+    """A serving fleet with no KV profile would produce zero-byte
+    transfers and meaningless latency metrics — refuse it early."""
+    from repro.core.logical import Job
+
+    with pytest.raises(ValueError, match="kv_bytes_per_token"):
+        serving_job(0, 128, model="my-custom-13b")
+    # hand-built Jobs that bypass serving_job are caught at placement
+    raw = Job(0, 128, arrival=0.0, service_time=math.inf,
+              model="my-custom-13b", kind="serve", req_rate=10.0,
+              kv_tokens=2048)
+    sim = Simulator(_cfg(), [raw], seed=0)
+    with pytest.raises(ValueError, match="no KV payload"):
+        sim.run(until=100.0)
+
+
+def test_fluid_latency_sensitive_history():
+    """Standalone FluidSim records φ timelines for latency-sensitive
+    flows, and a static flow's timeline prices requests exactly."""
+    from repro.core.reconfig import mdmcf_reconfigure
+    from repro.core.topology import ClusterSpec
+    from repro.dist.demand import edges_to_matrix
+    from repro.sim.fluid import Flow, FluidSim
+
+    spec = ClusterSpec(num_pods=4, k_spine=4, k_leaf=4)
+    edges = {(0, 1): 2, (0, 2): 2}
+    C = edges_to_matrix(edges, 4, spec.num_ocs_groups)
+    config = mdmcf_reconfigure(spec, C).config
+    flow = Flow(0, dict(edges), 1.0, work=math.inf,
+                latency_sensitive=True)
+    sim = FluidSim(spec, "cross_wiring", config, [flow])
+    sim.run(until=50.0)
+    tl = sim.phi_history[0]
+    assert tl and all(p == 1.0 for _, p in tl)
+    lat = request_latencies(np.array([1.0, 20.0]), 0.5, tl, alpha_s=0.0)
+    np.testing.assert_allclose(lat, 0.5, rtol=1e-9)
