@@ -20,10 +20,13 @@ Three parts exercising ``repro.sim.fluid`` end to end:
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
 
+from repro import obs
 from repro.core.logical import Job
 from repro.core.reconfig import mdmcf_cold
 from repro.core.topology import ClusterSpec
@@ -31,14 +34,14 @@ from repro.dist import demand as dist_demand
 from repro.sim import SimConfig, Simulator, generate_trace, summarize
 from repro.sim import flowsim, fluid
 
-from .common import save
+from .common import ART_DIR, save
 
 
 # ---------------------------------------------------------------------------
 # Part A — standalone engine throughput
 # ---------------------------------------------------------------------------
 
-def _events_per_sec(P=128, k=8, n_flows=2000, seed=0):
+def _events_per_sec(P=128, k=8, n_flows=2000, seed=0, tracer=None):
     spec = ClusterSpec(num_pods=P, k_spine=k, k_leaf=k)
     rng = np.random.default_rng(seed)
     # a realized config carrying a full-degree ring over all pods — plenty
@@ -73,7 +76,8 @@ def _events_per_sec(P=128, k=8, n_flows=2000, seed=0):
         for tc in np.arange(60.0, horizon, 120.0)
     ]
     sim = fluid.FluidSim(
-        spec, "cross_wiring", config, flows=flows, capacity_events=cap_events
+        spec, "cross_wiring", config, flows=flows, capacity_events=cap_events,
+        tracer=tracer,
     )
     t0 = time.perf_counter()
     recs = sim.run()
@@ -195,7 +199,19 @@ def _downtime_sweep(P=16, k=8, n_jobs=60, delays=(0.0, 0.01, 0.1), seed=2):
 
 
 def run(quick: bool = True) -> dict:
-    ev = _events_per_sec(n_flows=1200 if quick else 5000)
+    n_flows = 1200 if quick else 5000
+    _events_per_sec(n_flows=min(n_flows, 600))  # warmup (JIT-free, but cache-warm)
+    ev = _events_per_sec(n_flows=n_flows)
+    # same trace with the flight recorder attached: the no-op-when-disabled
+    # discipline means tracing must cost < 5% events/sec (CI gate via
+    # check_regression.py --tracing-overhead)
+    tracer = obs.Tracer()
+    ev_traced = _events_per_sec(n_flows=n_flows, tracer=tracer)
+    trace_path = os.path.join(ART_DIR, "fluid_trace.json")
+    os.makedirs(ART_DIR, exist_ok=True)
+    tracer.export_json(trace_path)
+    with open(trace_path) as fh:
+        trace_problems = obs.validate_trace(json.load(fh))
     fidelity = _fidelity(n_jobs=50 if quick else 150)
     sweep = _downtime_sweep(n_jobs=50 if quick else 150)
 
@@ -207,16 +223,27 @@ def run(quick: bool = True) -> dict:
         for d, m in by_delay.items()
         if d > 0
     )
+    overhead = ev_traced["events_per_sec"] / max(ev["events_per_sec"], 1e-9)
     checks = {
         "events_per_sec_ge_1k": ev["events_per_sec"] >= 1000.0,
         "fidelity_gap_at_zero_delay_small": fidelity[0]["rel_gap_mean"] < 1e-3,
         "incremental_strictly_cheaper_than_cold": incr_strictly_cheaper,
+        "tracing_overhead_ok": overhead >= 0.95,
+        "trace_valid": not trace_problems,
         "downtime_by_delay": {
             str(d): m for d, m in sorted(by_delay.items())
         },
     }
     payload = {
         "throughput": ev,
+        "throughput_traced": ev_traced,
+        "tracing": {
+            "throughput_ratio": overhead,
+            "trace_events": len(tracer.events()),
+            "trace_categories": sorted(tracer.categories()),
+            "trace_path": trace_path,
+            "trace_problems": trace_problems,
+        },
         "rows": fidelity + sweep,
         "checks": checks,
     }
@@ -231,6 +258,11 @@ def main():
         f"fluid,events,P={t['num_pods']},flows={t['flows']},"
         f"events={t['events']},eps={t['events_per_sec']:.0f}/s,"
         f"wall={t['wall_s']:.2f}s"
+    )
+    tr = p["tracing"]
+    print(
+        f"fluid,tracing,ratio={tr['throughput_ratio']:.3f},"
+        f"events={tr['trace_events']},cats={','.join(tr['trace_categories'])}"
     )
     for r in p["rows"]:
         if r["kind"] == "fidelity":

@@ -11,6 +11,20 @@ accidentally re-quadratic hot loop on any runner class.  Absolute
 incremental events/sec below baseline/N is reported as a warning only —
 CI runners are not the machine the baseline was recorded on, so an
 absolute floor would flake on hardware differences alone.
+
+Artifacts are accepted in either format: a legacy raw payload or the
+uniform ``repro-bench/1`` block (``BENCH_*.json``) every benchmark now
+emits — both carry the ``rows`` list.
+
+A second, self-contained gate for the observability substrate:
+
+    python benchmarks/check_regression.py --tracing-overhead \
+        artifacts/bench/BENCH_fluid.json --min-ratio 0.95
+
+reads the fluid benchmark's traced-vs-untraced events/sec ratio and
+fails when attaching the tracer costs more than (1 − min-ratio) of
+engine throughput — the no-op-when-disabled discipline is a measured
+property, not a comment.
 """
 from __future__ import annotations
 
@@ -19,17 +33,69 @@ import json
 import sys
 
 
+def _load(path: str) -> dict:
+    """Accept both a legacy payload and a repro-bench/1 block."""
+    with open(path) as f:
+        return json.load(f)
+
+
+def _metrics(doc: dict) -> dict:
+    """Flat scalar metrics from either artifact format."""
+    if doc.get("schema") == "repro-bench/1":
+        return doc["metrics"]
+
+    def flat(v, prefix=""):
+        out = {}
+        if isinstance(v, dict):
+            for k in v:
+                out.update(flat(v[k], f"{prefix}{k}."))
+        elif isinstance(v, (int, float, str, bool)) or v is None:
+            out[prefix[:-1]] = v
+        return out
+
+    return flat(doc)
+
+
+def check_tracing_overhead(path: str, min_ratio: float) -> int:
+    m = _metrics(_load(path))
+    ratio = m.get("tracing.throughput_ratio")
+    if ratio is None:
+        print(f"check_regression,tracing: no tracing.throughput_ratio in {path}",
+              file=sys.stderr)
+        return 1
+    traced = m.get("throughput_traced.events_per_sec", float("nan"))
+    plain = m.get("throughput.events_per_sec", float("nan"))
+    print(
+        f"check_regression,tracing,ratio={ratio:.3f}"
+        f"(floor {min_ratio:g}),traced={traced:.0f}eps,untraced={plain:.0f}eps"
+    )
+    if ratio < min_ratio:
+        print(
+            f"TRACING OVERHEAD: traced/untraced events/sec {ratio:.3f} "
+            f"< {min_ratio:g} — tracer hooks are on the hot path",
+            file=sys.stderr,
+        )
+        return 1
+    print("check_regression,tracing,ok")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current")
-    ap.add_argument("baseline")
+    ap.add_argument("baseline", nargs="?")
     ap.add_argument("--max-regression", type=float, default=3.0)
+    ap.add_argument("--tracing-overhead", action="store_true")
+    ap.add_argument("--min-ratio", type=float, default=0.95)
     args = ap.parse_args()
 
-    with open(args.current) as f:
-        cur = {(r["pods"], r["k_spine"]): r for r in json.load(f)["rows"]}
-    with open(args.baseline) as f:
-        base = {(r["pods"], r["k_spine"]): r for r in json.load(f)["rows"]}
+    if args.tracing_overhead:
+        return check_tracing_overhead(args.current, args.min_ratio)
+    if args.baseline is None:
+        ap.error("baseline is required unless --tracing-overhead")
+
+    cur = {(r["pods"], r["k_spine"]): r for r in _load(args.current)["rows"]}
+    base = {(r["pods"], r["k_spine"]): r for r in _load(args.baseline)["rows"]}
 
     failures = []
     for key, b in base.items():

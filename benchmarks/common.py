@@ -14,6 +14,12 @@ def save(name: str, payload: Dict[str, Any]) -> str:
     path = os.path.join(ART_DIR, f"{name}.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=float)
+    # every benchmark also exports the uniform repro-bench/1 block
+    # (flattened scalar metrics + checks + rows) next to its legacy
+    # artifact, so gates and dashboards need one parser
+    from repro.obs.report import write_bench_block
+
+    write_bench_block(name, payload, ART_DIR)
     return path
 
 

@@ -175,6 +175,12 @@ def _summarize(name: str, payload: dict) -> None:
             f"fluid,events,P={t['num_pods']},events={t['events']},"
             f"eps={t['events_per_sec']:.0f}/s"
         )
+        tr = payload["tracing"]
+        print(
+            f"fluid,tracing,ratio={tr['throughput_ratio']:.3f},"
+            f"events={tr['trace_events']},"
+            f"cats={','.join(tr['trace_categories'])}"
+        )
         for r in payload["rows"]:
             if r["kind"] == "fidelity":
                 print(

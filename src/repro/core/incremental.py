@@ -47,6 +47,7 @@ import numpy as np
 from .decomposition import assign_unit
 from .reconfig import ReconfigResult, linear_sum_assignment
 from .topology import ClusterSpec, OCSConfig, demand_feasible
+from ..obs.trace import ambient as _trace_ambient
 
 __all__ = [
     "ColoringState",
@@ -439,4 +440,7 @@ def mdmcf_delta(
     res = ReconfigResult(cfg, C_new, time.perf_counter() - t0)
     cfg.preseed_pair_capacity(C_new)  # exact by invariant: realized == C_new
     res.rewired = rewired
+    tr = _trace_ambient()
+    if tr is not None and tr.enabled:
+        tr.instant("solve", "delta.patch", rewired=rewired)
     return res

@@ -43,6 +43,7 @@ except ImportError:  # pragma: no cover - scipy ships in the container
 
 from .decomposition import edge_color_bipartite, symmetric_split
 from .topology import ClusterSpec, CrossWiring, OCSConfig, Uniform, demand_feasible
+from ..obs.trace import ambient as _trace_ambient
 
 __all__ = [
     "mdmcf_reconfigure",
@@ -164,6 +165,13 @@ def mdmcf_reconfigure(
     cfg.validate(mask)
     res = ReconfigResult(cfg, C, time.perf_counter() - t0)
     cfg.preseed_pair_capacity(C)  # Thm 4.1: realized == C, skip the reduction
+    tr = _trace_ambient()
+    if tr is not None and tr.enabled:
+        tr.instant(
+            "solve", "cold_solve",
+            warm=old is not None, slot_match=bool(slot_match),
+            degraded=mask is not None, groups=int(H),
+        )
     return res
 
 

@@ -51,6 +51,7 @@ import numpy as np
 from ..core.logical import shave_to_budget
 from ..core.reconfig import linear_sum_assignment
 from ..dist.collectives import MODEL_PROFILES
+from ..obs.trace import ambient as _trace_ambient
 from .masks import PortMask
 
 __all__ = [
@@ -219,7 +220,14 @@ def mdmcf_degraded(spec, C: np.ndarray, old=None, mask: Optional[PortMask] = Non
                 if not placed:
                     break  # no healthy slot anywhere for this link
     cfg.validate(mask)
-    return ReconfigResult(cfg, C, _time.perf_counter() - t0)
+    res = ReconfigResult(cfg, C, _time.perf_counter() - t0)
+    tr = _trace_ambient()
+    if tr is not None and tr.enabled:
+        tr.instant(
+            "solve", "degraded_solve",
+            warm=old is not None, groups=int(H), ltrr=round(res.ltrr, 9),
+        )
+    return res
 
 
 def checkpoint_bytes(model: str) -> float:

@@ -1,0 +1,63 @@
+"""Cluster flight recorder: unified tracing + metrics substrate.
+
+Every headline claim in this repo is a *time-series* claim — logical
+topology compatibility over a trace, dark-window cost per
+reconfiguration, tail latency under shifting demand.  ``repro.obs``
+makes those series first-class instead of scattered ad-hoc state:
+
+* :mod:`.trace` — a span/event tracer keyed on **simulated** time with
+  deterministic Chrome-trace-event export (open in Perfetto), plus an
+  *ambient* handle deep layers (``core``, ``fault``) emit through;
+* :mod:`.metrics` — counters / gauges / quantile sketches / keyed
+  timelines behind one registry (the φ bookkeeping both engines share);
+* :mod:`.recorder` — a bounded flight buffer dumped as JSON when a run
+  dies, so postmortems start with the last N events instead of nothing;
+* :mod:`.report` — timeline/summary rendering and the uniform
+  ``BENCH_*`` metrics block every benchmark exports.
+
+Everything is disabled-by-default and zero-dependency: a simulation
+without a tracer pays one attribute read per would-be event, and golden
+traces are byte-identical with tracing on or off
+(``tests/test_obs.py``).
+"""
+from .metrics import (
+    Counter,
+    Gauge,
+    MetricsRegistry,
+    QuantileSketch,
+    Series,
+    Timeline,
+)
+from .recorder import dump_flight, flight_guard
+from .report import (
+    BENCH_SCHEMA,
+    bench_block,
+    flatten_scalars,
+    render_summary,
+    render_timeline,
+    write_bench_block,
+)
+from .trace import NULL, NullTracer, Tracer, ambient, set_ambient, validate_trace
+
+__all__ = [
+    "BENCH_SCHEMA",
+    "Counter",
+    "Gauge",
+    "MetricsRegistry",
+    "NULL",
+    "NullTracer",
+    "QuantileSketch",
+    "Series",
+    "Timeline",
+    "Tracer",
+    "ambient",
+    "bench_block",
+    "dump_flight",
+    "flatten_scalars",
+    "flight_guard",
+    "render_summary",
+    "render_timeline",
+    "set_ambient",
+    "validate_trace",
+    "write_bench_block",
+]

@@ -1,0 +1,327 @@
+"""Lightweight metrics registry: counters, gauges, quantile sketches,
+timelines.
+
+One registry replaces the simulator's parallel ad-hoc stores (bare
+``self.restarts += 1`` ints, ``phi_timeline`` dicts,
+``policy_decisions`` lists): every number a summary reports is an
+instrument with a name, so it can be snapshotted, exported into the
+uniform ``BENCH_*`` block (:mod:`repro.obs.report`), and cross-checked —
+while the public accessors (``fault_summary()``, ``serving_summary()``,
+``Simulator.restarts``, …) keep their exact shapes as thin views.
+
+Instruments
+-----------
+* :class:`Counter` — monotonically accumulating value (``inc``); stays an
+  ``int`` while fed ints, so golden JSON comparisons keep exact types.
+* :class:`Gauge` — last-write-wins value.
+* :class:`Series` — append-only sample log (e.g. per-solve LTRR); list
+  view via ``.data``.
+* :class:`QuantileSketch` — fixed-bin streaming quantiles with bounded
+  *relative* error (geometric bins), for p50/p99 over unbounded streams
+  without keeping samples.
+* :class:`Timeline` — keyed piecewise-constant ``(t, value)`` breakpoint
+  series with a Mapping read API.  This is the *one* φ-per-flow
+  bookkeeping implementation: ``Simulator.phi_timeline`` and
+  ``FluidSim.phi_history`` are both instances (previously two hand-rolled
+  dict-of-lists twins).
+
+Everything is plain Python; the hot-path cost of an instrument update is
+one attribute add.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "MetricsRegistry",
+    "QuantileSketch",
+    "Series",
+    "Timeline",
+]
+
+
+class Counter:
+    """Accumulating value.  Integer-fed counters stay integers.
+
+    >>> c = Counter("restarts")
+    >>> c.inc(); c.inc(2); c.value
+    3
+    """
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+
+    def inc(self, n=1) -> None:
+        self.value += n
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {self.name: self.value}
+
+
+class Gauge:
+    """Last-write-wins value."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = math.nan
+
+    def set(self, v) -> None:
+        self.value = v
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {self.name: self.value}
+
+
+class Series:
+    """Append-only sample log (list view: ``.data``)."""
+
+    __slots__ = ("name", "data")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.data: List[Any] = []
+
+    def append(self, v) -> None:
+        self.data.append(v)
+
+    def __len__(self) -> int:
+        return len(self.data)
+
+    def __iter__(self):
+        return iter(self.data)
+
+    def snapshot(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {f"{self.name}.count": len(self.data)}
+        nums = [v for v in self.data if isinstance(v, (int, float))]
+        if nums:
+            out[f"{self.name}.min"] = float(min(nums))
+            out[f"{self.name}.max"] = float(max(nums))
+            out[f"{self.name}.mean"] = float(sum(nums) / len(nums))
+        return out
+
+
+class QuantileSketch:
+    """Fixed-bin streaming quantile sketch with bounded relative error.
+
+    Values are counted into geometric bins spanning ``[lo, hi]``; a
+    quantile query returns the geometric midpoint of the bin holding the
+    target rank, so the relative error of any quantile of values inside
+    ``[lo, hi]`` is at most ``rel_error()`` (half the bin growth factor).
+    Values below ``lo`` (including 0) land in an underflow bin reported
+    as ``lo``; values above ``hi`` clamp to ``hi`` — pick generous bounds
+    (default covers 1 µs … 10⁵ s, plenty for latencies) rather than tight
+    ones.  ``tests/test_obs.py`` checks the bound against numpy
+    percentiles on random streams.
+
+    >>> s = QuantileSketch("lat_s", lo=1e-3, hi=1e3, bins=512)
+    >>> for v in [0.01, 0.02, 0.03, 0.04, 100.0]: s.observe(v)
+    >>> abs(s.quantile(0.5) / 0.03 - 1.0) <= s.rel_error()
+    True
+    """
+
+    __slots__ = ("name", "lo", "hi", "bins", "_counts", "_ratio", "count", "total")
+
+    def __init__(
+        self, name: str, lo: float = 1e-6, hi: float = 1e5, bins: int = 512
+    ):
+        if not (0 < lo < hi) or bins < 2:
+            raise ValueError("need 0 < lo < hi and bins >= 2")
+        self.name = name
+        self.lo = float(lo)
+        self.hi = float(hi)
+        self.bins = int(bins)
+        self._counts = np.zeros(bins + 2, dtype=np.int64)  # [under, bins…, over]
+        self._ratio = (self.hi / self.lo) ** (1.0 / bins)
+        self.count = 0
+        self.total = 0.0
+
+    def rel_error(self) -> float:
+        """Max relative quantile error for in-range values: the bin
+        midpoint is within a half-bin of the true value."""
+        return math.sqrt(self._ratio) - 1.0
+
+    def _bin(self, v: float) -> int:
+        if v < self.lo:
+            return 0
+        if v >= self.hi:
+            return self.bins + 1
+        return 1 + int(math.log(v / self.lo) / math.log(self._ratio))
+
+    def observe(self, v: float) -> None:
+        self.count += 1
+        self.total += v
+        self._counts[min(self._bin(v), self.bins + 1)] += 1
+
+    def quantile(self, q: float) -> float:
+        """Streaming quantile estimate (nan while empty)."""
+        if self.count == 0:
+            return math.nan
+        rank = q * (self.count - 1)
+        cum = np.cumsum(self._counts)
+        b = int(np.searchsorted(cum, rank + 1))
+        if b == 0:
+            return self.lo
+        if b >= self.bins + 1:
+            return self.hi
+        lo_edge = self.lo * self._ratio ** (b - 1)
+        return lo_edge * math.sqrt(self._ratio)  # geometric bin midpoint
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else math.nan
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {
+            f"{self.name}.count": self.count,
+            f"{self.name}.mean": self.mean,
+            f"{self.name}.p50": self.quantile(0.5),
+            f"{self.name}.p99": self.quantile(0.99),
+        }
+
+
+class Timeline:
+    """Keyed piecewise-constant breakpoint series: key → [(t, value), …].
+
+    The single φ-bookkeeping implementation shared by the scheduler
+    (``Simulator.phi_timeline``) and the fluid engine
+    (``FluidSim.phi_history``).  Reads look like the dict-of-lists they
+    replaced (``tl[key]``, ``tl.get(key, ())``, iteration); writes go
+    through :meth:`point`, which monotonizes timestamps — a start refresh
+    can run slightly ahead of the event clock (reconfiguration
+    computation time), so a point earlier than the key's last breakpoint
+    is clamped to it.
+
+    >>> tl = Timeline("phi")
+    >>> tl.point(7, 0.0, 1.0); tl.point(7, 5.0, 0.25); tl.point(7, 4.0, 0.5)
+    >>> tl[7]
+    [(0.0, 1.0), (5.0, 0.25), (5.0, 0.5)]
+    """
+
+    __slots__ = ("name", "series")
+
+    def __init__(self, name: str = "timeline"):
+        self.name = name
+        self.series: Dict[Any, List[Tuple[float, float]]] = {}
+
+    def point(self, key, t: float, value: float) -> None:
+        tl = self.series.setdefault(key, [])
+        if tl and t < tl[-1][0]:
+            t = tl[-1][0]
+        tl.append((t, value))
+
+    # ---- Mapping-style read API -----------------------------------------
+    def __getitem__(self, key) -> List[Tuple[float, float]]:
+        return self.series[key]
+
+    def get(self, key, default=None):
+        return self.series.get(key, default)
+
+    def __contains__(self, key) -> bool:
+        return key in self.series
+
+    def __iter__(self) -> Iterator:
+        return iter(self.series)
+
+    def __len__(self) -> int:
+        return len(self.series)
+
+    def __bool__(self) -> bool:
+        return bool(self.series)
+
+    def keys(self):
+        return self.series.keys()
+
+    def items(self):
+        return self.series.items()
+
+    def values(self):
+        return self.series.values()
+
+    def integrate(self, key, t0: float, t1: float) -> float:
+        """∫ value dt over ``[t0, t1]`` for ``key`` (piecewise constant,
+        last value extends to ``t1``; 0 before the first breakpoint)."""
+        tl = self.series.get(key)
+        if not tl or t1 <= t0:
+            return 0.0
+        total = 0.0
+        for n, (t, v) in enumerate(tl):
+            seg_end = tl[n + 1][0] if n + 1 < len(tl) else t1
+            a, b = max(t, t0), min(seg_end, t1)
+            if b > a:
+                total += (b - a) * v
+        return total
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {
+            f"{self.name}.keys": len(self.series),
+            f"{self.name}.points": sum(len(v) for v in self.series.values()),
+        }
+
+
+class MetricsRegistry:
+    """Name → instrument registry with get-or-create accessors.
+
+    >>> reg = MetricsRegistry()
+    >>> reg.counter("restarts").inc()
+    >>> reg.counter("restarts").value
+    1
+    >>> sorted(reg.snapshot())
+    ['restarts']
+    """
+
+    def __init__(self):
+        self._instruments: Dict[str, Any] = {}
+
+    def _get(self, name: str, cls, *args, **kw):
+        inst = self._instruments.get(name)
+        if inst is None:
+            inst = cls(name, *args, **kw)
+            self._instruments[name] = inst
+        elif not isinstance(inst, cls):
+            raise TypeError(
+                f"metric {name!r} already registered as {type(inst).__name__}"
+            )
+        return inst
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def series(self, name: str) -> Series:
+        return self._get(name, Series)
+
+    def histogram(
+        self, name: str, lo: float = 1e-6, hi: float = 1e5, bins: int = 512
+    ) -> QuantileSketch:
+        return self._get(name, QuantileSketch, lo, hi, bins)
+
+    def timeline(self, name: str) -> Timeline:
+        return self._get(name, Timeline)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._instruments
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._instruments)
+
+    def get(self, name: str) -> Optional[Any]:
+        return self._instruments.get(name)
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Flat scalar view of every instrument (stable key order)."""
+        out: Dict[str, Any] = {}
+        for name in sorted(self._instruments):
+            out.update(self._instruments[name].snapshot())
+        return out

@@ -1,0 +1,78 @@
+"""Bounded flight recorder: dump the last N trace events on failure.
+
+A long simulation that dies on an assertion loses exactly the context a
+postmortem needs — what the control plane and fault stream were doing in
+the seconds before.  The :class:`~repro.obs.trace.Tracer` already keeps a
+bounded ring buffer of the most recent events (``flight_size``); this
+module turns that tail into an artifact:
+
+* :func:`dump_flight` writes the ring buffer (plus the exception, when
+  one is in flight) as a small JSON document;
+* :func:`flight_guard` wraps a block of simulation code — on *any*
+  exception it writes the dump and re-raises, untouched, so behaviour is
+  identical except that a ``*.flightrec.json`` file now exists.
+
+``Simulator.run`` guards its event loop automatically whenever its
+tracer carries a ``flight_dump`` path (opt-in: library code never writes
+files unless asked to).
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import traceback
+from typing import Any, Dict, Iterator, Optional
+
+from .trace import NullTracer
+
+__all__ = ["dump_flight", "flight_guard"]
+
+SCHEMA = "repro-flightrec/1"
+
+
+def dump_flight(
+    tracer: NullTracer,
+    path: str,
+    error: Optional[BaseException] = None,
+) -> str:
+    """Write the tracer's bounded event tail to ``path``; returns the
+    path.  ``error`` (when given) is recorded as type/message/traceback
+    strings so the dump is self-contained."""
+    doc: Dict[str, Any] = {
+        "schema": SCHEMA,
+        "events": tracer.flight_events(),
+    }
+    if error is not None:
+        doc["error"] = {
+            "type": type(error).__name__,
+            "message": str(error),
+            "traceback": traceback.format_exception(
+                type(error), error, error.__traceback__
+            ),
+        }
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True, default=str)
+        fh.write("\n")
+    return path
+
+
+@contextlib.contextmanager
+def flight_guard(tracer: NullTracer, path: Optional[str] = None) -> Iterator[None]:
+    """Dump the flight buffer to ``path`` if the guarded block raises.
+
+    ``path=None`` reads the tracer's ``flight_dump`` attribute; when both
+    are unset (or the tracer is disabled) the guard is a no-op
+    passthrough.  The exception always propagates unchanged.
+    """
+    target = path if path is not None else getattr(tracer, "flight_dump", None)
+    if not tracer.enabled or target is None:
+        yield
+        return
+    try:
+        yield
+    except BaseException as err:
+        try:
+            dump_flight(tracer, target, error=err)
+        except OSError:
+            pass  # a failing dump must never mask the original error
+        raise

@@ -1,0 +1,162 @@
+"""Rendering and export: trace timelines, metric summaries, BENCH blocks.
+
+Three consumers share this module:
+
+* humans — :func:`render_timeline` (per-category event density over the
+  simulated horizon, ASCII) and :func:`render_summary` (a metrics
+  snapshot as aligned ``key = value`` lines) for quick terminal reads of
+  a traced run;
+* the benchmark driver — :func:`bench_block` /
+  :func:`write_bench_block` wrap any benchmark payload in the uniform
+  ``BENCH_*`` schema (``repro-bench/1``): flattened scalar ``metrics``,
+  the ``checks`` dict, and the raw rows.  ``benchmarks/common.save``
+  emits one next to every legacy artifact, so *all* registered
+  benchmarks — not just the hand-rolled ones — export the same shape;
+* CI — ``benchmarks/check_regression.py`` reads the shared schema for
+  both its control-plane gate and the tracing-overhead gate.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from .metrics import MetricsRegistry
+from .trace import NullTracer
+
+__all__ = [
+    "BENCH_SCHEMA",
+    "bench_block",
+    "flatten_scalars",
+    "render_summary",
+    "render_timeline",
+    "write_bench_block",
+]
+
+BENCH_SCHEMA = "repro-bench/1"
+
+
+# ---- metric flattening ------------------------------------------------------
+
+def flatten_scalars(payload: Any, prefix: str = "") -> Dict[str, Any]:
+    """Flatten nested dicts/lists of a benchmark payload into dotted
+    scalar keys (non-scalar leaves are dropped).
+
+    >>> flatten_scalars({"throughput": {"events_per_sec": 2500.0},
+    ...                  "rows": [{"phi": 1.0}]})
+    {'throughput.events_per_sec': 2500.0, 'rows.0.phi': 1.0}
+    """
+    out: Dict[str, Any] = {}
+    if isinstance(payload, dict):
+        for k in payload:
+            out.update(flatten_scalars(payload[k], f"{prefix}{k}."))
+    elif isinstance(payload, (list, tuple)):
+        for n, v in enumerate(payload):
+            out.update(flatten_scalars(v, f"{prefix}{n}."))
+    elif isinstance(payload, np.generic):  # numpy ints/bools aren't int/bool
+        out[prefix[:-1]] = payload.item()
+    elif isinstance(payload, (int, float, str, bool)) or payload is None:
+        out[prefix[:-1]] = payload
+    return out
+
+
+# ---- uniform benchmark block ------------------------------------------------
+
+def bench_block(name: str, payload: Dict[str, Any]) -> Dict[str, Any]:
+    """Wrap one benchmark's payload in the uniform ``repro-bench/1``
+    schema: every bench exports the same top-level shape regardless of
+    its internal row structure, so gates and dashboards need one parser.
+    """
+    return {
+        "schema": BENCH_SCHEMA,
+        "bench": name,
+        "metrics": flatten_scalars(payload),
+        "checks": payload.get("checks", {}),
+        "rows": payload.get("rows", []),
+    }
+
+
+def write_bench_block(
+    name: str, payload: Dict[str, Any], art_dir: str
+) -> str:
+    """Write ``BENCH_<name>.json`` under ``art_dir``; returns the path."""
+    os.makedirs(art_dir, exist_ok=True)
+    path = os.path.join(art_dir, f"BENCH_{name}.json")
+    with open(path, "w") as fh:
+        json.dump(bench_block(name, payload), fh, indent=1, default=float)
+        fh.write("\n")
+    return path
+
+
+def load_bench_metrics(path: str) -> Dict[str, Any]:
+    """Read a benchmark artifact in either format: a ``repro-bench/1``
+    block (returns its ``metrics``) or a legacy raw payload (flattened on
+    the fly)."""
+    with open(path) as fh:
+        doc = json.load(fh)
+    if isinstance(doc, dict) and doc.get("schema") == BENCH_SCHEMA:
+        return doc["metrics"]
+    return flatten_scalars(doc)
+
+
+def load_bench_rows(path: str) -> List[Dict[str, Any]]:
+    """Read the row list from either artifact format."""
+    with open(path) as fh:
+        doc = json.load(fh)
+    if isinstance(doc, dict):
+        return doc.get("rows", [])
+    return doc if isinstance(doc, list) else []
+
+
+# ---- human rendering --------------------------------------------------------
+
+def render_summary(metrics: MetricsRegistry, title: str = "metrics") -> str:
+    """A metrics snapshot as aligned ``key = value`` lines."""
+    snap = metrics.snapshot()
+    if not snap:
+        return f"{title}: (empty)"
+    width = max(len(k) for k in snap)
+    lines = [f"== {title} =="]
+    for k, v in snap.items():
+        if isinstance(v, float):
+            lines.append(f"{k:<{width}} = {v:.6g}")
+        else:
+            lines.append(f"{k:<{width}} = {v}")
+    return "\n".join(lines)
+
+
+def render_timeline(
+    tracer: NullTracer, width: int = 64, title: str = "trace"
+) -> str:
+    """Per-category event density over the traced horizon, one ASCII row
+    per category (darker glyph = more events in that time bucket)."""
+    events = [e for e in tracer.flight_events() or [] if "ts" in e]
+    # prefer the full event list when the tracer exposes it
+    full = getattr(tracer, "events", None)
+    if callable(full):
+        events = [e for e in full() if "ts" in e and e.get("ph") != "M"]
+    if not events:
+        return f"{title}: (no events)"
+    t0 = min(e["ts"] for e in events)
+    t1 = max(e["ts"] + e.get("dur", 0.0) for e in events)
+    span = max(t1 - t0, 1e-9)
+    cats: Dict[str, List[int]] = {}
+    for e in events:
+        row = cats.setdefault(e.get("cat", "?"), [0] * width)
+        b = min(width - 1, int((e["ts"] - t0) / span * width))
+        row[b] += 1
+    glyphs = " .:-=+*#%@"
+    peak = max(max(r) for r in cats.values()) or 1
+    lines = [
+        f"== {title} ==  [{t0 / 1e6:.1f}s .. {t1 / 1e6:.1f}s simulated]"
+    ]
+    cwidth = max(len(c) for c in cats)
+    for cat in sorted(cats):
+        row = "".join(
+            glyphs[min(len(glyphs) - 1, (n * (len(glyphs) - 1) + peak - 1) // peak)]
+            for n in cats[cat]
+        )
+        lines.append(f"{cat:<{cwidth}} |{row}| {sum(cats[cat])} events")
+    return "\n".join(lines)

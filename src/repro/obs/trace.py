@@ -1,0 +1,302 @@
+"""Simulation-time span/event tracer with Chrome trace-event export.
+
+The cluster's headline claims — logical-topology compatibility, dark-window
+cost, polynomial-solvable TE — are all *time-series* claims, so evidence
+has to be an inspectable timeline, not a scatter of ad-hoc dicts.  This
+module is the recording half of the flight recorder
+(:mod:`repro.obs.recorder` is the postmortem half):
+
+* :class:`Tracer` collects **complete spans** (``ph="X"``: TE solves,
+  dark windows, serving requests, job lifetimes) and **instant events**
+  (``ph="i"``: faults, repairs, autoscale, policy decisions) keyed on
+  *simulated* time — never wall-clock — so a seeded run exports a
+  byte-identical trace every time (``tests/test_obs.py`` pins this).
+* :func:`Tracer.export_json` emits Chrome trace-event JSON (the format
+  Perfetto / ``chrome://tracing`` load directly): ``ts``/``dur`` in
+  microseconds, one synthetic thread per event category, thread-name
+  metadata records so the Perfetto track labels read ``solve``,
+  ``dark_window``, ``fault``, ``policy``, ``request``, …
+* :func:`validate_trace` checks an exported object against the trace-event
+  schema Perfetto requires (used by the test suite and the CI obs smoke
+  job, so exported artifacts are loadable by construction).
+* :func:`ambient` / :func:`set_ambient` give deep library layers
+  (``core/incremental.py``, ``core/reconfig.py``, ``fault/recover.py``)
+  a zero-setup handle: the scheduler installs its tracer around each
+  solve; un-instrumented callers see :data:`NULL` and pay one attribute
+  read.
+
+Disabled cost: every emit site guards on ``tracer.enabled`` before
+building the args dict, so the hot path with tracing off pays a single
+attribute load per event (``benchmarks/check_regression.py
+--tracing-overhead`` gates the enabled-mode cost too).
+"""
+from __future__ import annotations
+
+import collections
+import json
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+__all__ = [
+    "NULL",
+    "NullTracer",
+    "Tracer",
+    "ambient",
+    "set_ambient",
+    "validate_trace",
+]
+
+# stable synthetic-thread ids per category: the exported trace groups one
+# Perfetto track per category, in this order
+CATEGORY_TIDS = {
+    "solve": 1,
+    "dark_window": 2,
+    "fault": 3,
+    "policy": 4,
+    "request": 5,
+    "job": 6,
+    "flow": 7,
+    "serving": 8,
+}
+_PID = 1  # one synthetic process: "cluster"
+
+
+class NullTracer:
+    """Disabled tracer: every emit is a no-op.
+
+    ``enabled`` is False so instrumentation sites can skip building args
+    dicts entirely — the pattern is::
+
+        tr = self.trace
+        if tr.enabled:
+            tr.instant("fault", "pod_failure", ts=now, pod=3)
+    """
+
+    enabled = False
+    sim_now = 0.0
+
+    def span(self, cat: str, name: str, ts: float, dur: float, **args) -> None:
+        pass
+
+    def instant(self, cat: str, name: str, ts: Optional[float] = None, **args) -> None:
+        pass
+
+    def export_json(self, path: Optional[str] = None) -> str:
+        return json.dumps({"traceEvents": []})
+
+    def flight_events(self) -> List[Dict[str, Any]]:
+        return []
+
+
+NULL = NullTracer()
+
+
+class Tracer(NullTracer):
+    """Deterministic simulation-time tracer (see module docstring).
+
+    ``flight_size`` bounds the postmortem ring buffer (the last N events
+    kept for :mod:`repro.obs.recorder` dumps); ``max_events`` optionally
+    caps the full event list on very long runs (drops are counted in
+    ``dropped``, never silent); ``request_cap`` bounds how many serving
+    *request* spans are traced per job (request volume dwarfs every other
+    category; the cap is reported via ``dropped`` too).
+
+    >>> tr = Tracer()
+    >>> tr.span("solve", "mdmcf_delta", ts=1.5, dur=0.01, rewired=4)
+    >>> tr.instant("fault", "pod_failure", ts=2.0, pod=3)
+    >>> sorted(tr.categories())
+    ['fault', 'solve']
+    >>> validate_trace(json.loads(tr.export_json()))
+    []
+    """
+
+    enabled = True
+
+    def __init__(
+        self,
+        flight_size: int = 256,
+        max_events: Optional[int] = None,
+        request_cap: int = 512,
+        flight_dump: Optional[str] = None,
+    ):
+        self._events: List[Dict[str, Any]] = []
+        self._flight: Deque[Dict[str, Any]] = collections.deque(maxlen=flight_size)
+        self.max_events = max_events
+        self.request_cap = request_cap
+        self.flight_dump = flight_dump  # recorder.flight_guard dump target
+        self.dropped = 0
+        self.sim_now = 0.0  # ambient clock, set by the host before solves
+        self._tids = dict(CATEGORY_TIDS)
+
+    # ---- emit --------------------------------------------------------------
+
+    def _tid(self, cat: str) -> int:
+        tid = self._tids.get(cat)
+        if tid is None:
+            tid = len(self._tids) + 1
+            self._tids[cat] = tid
+        return tid
+
+    def _push(self, ev: Dict[str, Any]) -> None:
+        self._flight.append(ev)
+        if self.max_events is not None and len(self._events) >= self.max_events:
+            self.dropped += 1
+            return
+        self._events.append(ev)
+
+    def span(self, cat: str, name: str, ts: float, dur: float, **args) -> None:
+        """A complete span (``ph="X"``) of ``dur`` simulated seconds."""
+        ev: Dict[str, Any] = {
+            "name": name,
+            "cat": cat,
+            "ph": "X",
+            "ts": round(ts * 1e6, 3),
+            "dur": round(max(0.0, dur) * 1e6, 3),
+            "pid": _PID,
+            "tid": self._tid(cat),
+        }
+        if args:
+            ev["args"] = args
+        self._push(ev)
+
+    def instant(self, cat: str, name: str, ts: Optional[float] = None, **args) -> None:
+        """An instant event (``ph="i"``); ``ts=None`` reads the ambient
+        simulated clock (``sim_now``), which hosts update before handing
+        the tracer to deeper layers."""
+        ev: Dict[str, Any] = {
+            "name": name,
+            "cat": cat,
+            "ph": "i",
+            "s": "p",  # process-scoped instant
+            "ts": round((self.sim_now if ts is None else ts) * 1e6, 3),
+            "pid": _PID,
+            "tid": self._tid(cat),
+        }
+        if args:
+            ev["args"] = args
+        self._push(ev)
+
+    # ---- introspection -----------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+    def events(self, cat: Optional[str] = None) -> List[Dict[str, Any]]:
+        if cat is None:
+            return list(self._events)
+        return [e for e in self._events if e.get("cat") == cat]
+
+    def categories(self) -> set:
+        return {e["cat"] for e in self._events if "cat" in e}
+
+    def flight_events(self) -> List[Dict[str, Any]]:
+        """The bounded tail kept for postmortem dumps (oldest first)."""
+        return list(self._flight)
+
+    # ---- export ------------------------------------------------------------
+
+    def chrome_trace(self) -> Dict[str, Any]:
+        """The trace as a Chrome trace-event object (Perfetto-loadable)."""
+        meta: List[Dict[str, Any]] = [
+            {
+                "name": "process_name",
+                "ph": "M",
+                "pid": _PID,
+                "tid": 0,
+                "args": {"name": "cluster"},
+            }
+        ]
+        for cat, tid in sorted(self._tids.items(), key=lambda kv: kv[1]):
+            meta.append(
+                {
+                    "name": "thread_name",
+                    "ph": "M",
+                    "pid": _PID,
+                    "tid": tid,
+                    "args": {"name": cat},
+                }
+            )
+        # stable sort by timestamp keeps emission order within a tick —
+        # deterministic given a seeded simulation
+        body = sorted(self._events, key=lambda e: e["ts"])
+        return {
+            "traceEvents": meta + body,
+            "displayTimeUnit": "ms",
+            "otherData": {"dropped": self.dropped},
+        }
+
+    def export_json(self, path: Optional[str] = None) -> str:
+        """Serialize deterministically (sorted keys, fixed separators);
+        write to ``path`` when given.  Same seed ⇒ byte-identical JSON."""
+        text = json.dumps(
+            self.chrome_trace(), sort_keys=True, separators=(",", ":")
+        )
+        if path is not None:
+            with open(path, "w") as fh:
+                fh.write(text)
+                fh.write("\n")
+        return text
+
+
+# ---- ambient tracer (deep-layer hook) --------------------------------------
+
+_ambient: NullTracer = NULL
+
+
+def ambient() -> NullTracer:
+    """The tracer installed by the current host (``NULL`` when none)."""
+    return _ambient
+
+
+def set_ambient(tracer: Optional[NullTracer]) -> NullTracer:
+    """Install ``tracer`` as the ambient handle; returns the previous one
+    so hosts can restore it (``prev = set_ambient(tr); ...;
+    set_ambient(prev)``)."""
+    global _ambient
+    prev = _ambient
+    _ambient = NULL if tracer is None else tracer
+    return prev
+
+
+# ---- schema validation -----------------------------------------------------
+
+_PHASES = {"X", "i", "M", "C"}
+
+
+def validate_trace(obj: Any) -> List[str]:
+    """Validate ``obj`` against the Chrome trace-event schema Perfetto's
+    JSON importer requires.  Returns a list of problems (empty = valid);
+    the test suite and the CI obs smoke job assert it is empty.
+    """
+    problems: List[str] = []
+    if not isinstance(obj, dict) or "traceEvents" not in obj:
+        return ["top level must be an object with a 'traceEvents' list"]
+    events = obj["traceEvents"]
+    if not isinstance(events, list):
+        return ["'traceEvents' must be a list"]
+    for n, ev in enumerate(events):
+        where = f"traceEvents[{n}]"
+        if not isinstance(ev, dict):
+            problems.append(f"{where}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in _PHASES:
+            problems.append(f"{where}: ph {ph!r} not in {sorted(_PHASES)}")
+            continue
+        for key in ("name", "pid", "tid"):
+            if key not in ev:
+                problems.append(f"{where}: missing {key!r}")
+        if not isinstance(ev.get("name", ""), str):
+            problems.append(f"{where}: name must be a string")
+        if ph != "M":
+            ts = ev.get("ts")
+            if not isinstance(ts, (int, float)):
+                problems.append(f"{where}: ts must be a number")
+            if "cat" in ev and not isinstance(ev["cat"], str):
+                problems.append(f"{where}: cat must be a string")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                problems.append(f"{where}: X event needs dur >= 0")
+        if "args" in ev and not isinstance(ev["args"], dict):
+            problems.append(f"{where}: args must be an object")
+    return problems

@@ -38,6 +38,8 @@ from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.topology import ClusterSpec, OCSConfig
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from . import flowsim
 
 __all__ = [
@@ -250,6 +252,7 @@ class FluidSim:
         flows: Sequence[Flow] = (),
         capacity_events: Sequence[CapacityEvent] = (),
         slowdown_cap: object = _SPEC_CAP,
+        tracer: Optional[obs_trace.NullTracer] = None,
     ):
         self.spec = spec
         self.architecture = architecture
@@ -268,9 +271,12 @@ class FluidSim:
         self.downtime_circuit_s = 0.0  # Σ downtime · rewired (time-priced)
         self._active: Dict[int, _Active] = {}
         self._dark = DarkWindows()
+        self.trace = tracer if tracer is not None else obs_trace.NULL
         # (t, φ) breakpoints per latency-sensitive flow, piecewise
-        # constant — the serving latency integration consumes these
-        self.phi_history: Dict[int, List[Tuple[float, float]]] = {}
+        # constant — the serving latency integration consumes these.
+        # Same Timeline instrument as ``Simulator.phi_timeline``: the two
+        # engines share one φ-bookkeeping implementation.
+        self.phi_history = obs_metrics.Timeline("fluid.phi")
 
     def add_flow(self, flow: Flow) -> None:
         self.flows.append(flow)
@@ -321,9 +327,7 @@ class FluidSim:
             if p < a.record.min_phi:
                 a.record.min_phi = p
             if a.flow.latency_sensitive:
-                self.phi_history.setdefault(a.flow.flow_id, []).append(
-                    (now, p)
-                )
+                self.phi_history.point(a.flow.flow_id, now, p)
         # rate = 1/(1 + α(1/φ − 1)); φ = 0 → stall (rate 0) unless α = 0
         rate = np.empty(F)
         live = phi > 0.0
@@ -387,6 +391,14 @@ class FluidSim:
                 finish_version.pop(payload, None)
                 a.record.finish = t
                 a.remaining = 0.0
+                if self.trace.enabled:
+                    self.trace.span(
+                        "flow", f"flow{payload}",
+                        ts=a.record.arrival, dur=t - a.record.arrival,
+                        flow_id=payload,
+                        min_phi=round(a.record.min_phi, 9),
+                        stalled_s=round(a.record.stalled_s, 9),
+                    )
                 refresh(t)
             elif kind == ARRIVE:
                 self.events += 1
@@ -404,6 +416,13 @@ class FluidSim:
                 ev = self.capacity_events[payload]
                 if ev.config is not None:
                     self.config = ev.config
+                if self.trace.enabled:
+                    self.trace.instant(
+                        "fault", "capacity", ts=t,
+                        reconfig=ev.config is not None,
+                        dark=len(ev.dark_pairs),
+                        rewired=ev.rewired,
+                    )
                 if ev.downtime_s > 0 and ev.dark_pairs:
                     self._dark.add(ev.dark_pairs, t, t + ev.downtime_s)
                     rewired = (
@@ -413,6 +432,12 @@ class FluidSim:
                     self.downtime_events += 1
                     self.downtime_s += ev.downtime_s
                     self.downtime_circuit_s += ev.downtime_s * rewired
+                    if self.trace.enabled:
+                        for i, j in sorted(ev.dark_pairs):
+                            self.trace.span(
+                                "dark_window", f"{i}-{j}",
+                                ts=t, dur=ev.downtime_s, pair=[i, j],
+                            )
                     heapq.heappush(heap, (t + ev.downtime_s, DARK_END, seq, 0))
                     seq += 1
                 refresh(t)

@@ -74,6 +74,9 @@ from ..fault import (
     rollback_loss,
 )
 from ..fault.recover import RESTART_FIXED_S
+from ..obs import metrics as obs_metrics
+from ..obs import recorder as obs_recorder
+from ..obs import trace as obs_trace
 from . import flowsim
 from . import fluid as fluid_engine
 from . import serving as serving_mod
@@ -159,6 +162,11 @@ class SimConfig:
     # latency stays within serving_slo × the ideal (φ=1) transfer time
     serving_period_s: float = 86400.0  # diurnal period of serving load
     # (shared by request arrivals and scripted autoscale schedules)
+    # ---- observability (repro.obs) ---------------------------------------
+    tracer: Optional[obs_trace.NullTracer] = dataclasses.field(
+        default=None, compare=False, repr=False
+    )  # span/event tracer on simulated time (None = tracing off; the
+    # tracer is passive, so traces/goldens are byte-identical either way)
 
     def __post_init__(self) -> None:
         if self.recovery_policy not in POLICIES:
@@ -338,14 +346,38 @@ class Simulator:
         self.queue: List[Job] = []
         self.records: Dict[int, JobRecord] = {j.job_id: JobRecord(j) for j in jobs}
         self.old_config: Optional[OCSConfig] = None
-        self.reconfig_calls = 0
-        self.reconfig_wall = 0.0
-        self.ltrr_samples: List[float] = []
         self.events = 0  # heap events processed (bench_control_plane metric)
+        # ---- observability (repro.obs): the tracer handle is a no-op
+        # NullTracer when disabled (one attribute read per would-be event);
+        # every counter/series the summaries report lives on one metrics
+        # registry instead of parallel ad-hoc stores, with thin property
+        # views (reconfig_calls, policy_decisions, …) keeping the public
+        # shapes unchanged
+        self.trace = cfg.tracer if cfg.tracer is not None else obs_trace.NULL
+        m = self.metrics = obs_metrics.MetricsRegistry()
+        self._c_reconfigs = m.counter("control.reconfigs")
+        self._c_delta = m.counter("control.delta_calls")
+        self._c_wall = m.counter("control.solver_wall_s")
+        self._h_wall = m.histogram("control.solver_wall", lo=1e-7, hi=1e3)
+        self._s_ltrr = m.series("control.ltrr")
+        self._c_fail = m.counter("faults.failures")
+        self._c_repair = m.counter("faults.repairs")
+        self._c_expand = m.counter("faults.expands")
+        self._c_restarts = m.counter("faults.restarts")
+        self._c_shrinks = m.counter("faults.shrinks")
+        self._c_lost = m.counter("faults.lost_gpu_s")
+        self._s_policy = m.series("policy.decisions")
+        self._c_scale_ok = m.counter("serving.autoscale_applied")
+        self._c_scale_skip = m.counter("serving.autoscale_skipped")
+        self._c_dt_events = m.counter("downtime.events")
+        self._c_dt_s = m.counter("downtime.s")
+        self._c_dt_circ = m.counter("downtime.circuit_s")
+        self._phi = m.timeline("serving.phi")
+        self._requests_traced: set = set()  # job ids with request spans out
         # ---- incremental control plane (repro.core.incremental) ----------
         self._coloring_state: Optional[ColoringState] = None
-        self.delta_calls = 0  # reconfigurations served by mdmcf_delta
         self._last_incremental = False
+        self._last_fallback: Optional[str] = None  # delta-path exception name
         self._last_rewired: Optional[int] = None  # Σ|Δx| of the last solve
         # ---- resilience state (repro.fault) ------------------------------
         self.mask = PortMask(cfg.num_pods, cfg.k_spine, cfg.sim_groups)
@@ -356,29 +388,86 @@ class Simulator:
             fault_events or [], key=lambda e: e.time
         )
         self.carry_progress: Dict[int, float] = {}  # jid → progress kept
-        self.fault_counts = {"failures": 0, "repairs": 0, "expands": 0}
-        self.restarts = 0
-        self.shrinks = 0
-        self.lost_gpu_s = 0.0  # GPU-seconds of work destroyed by rollbacks
-        self.policy_decisions: List[Dict[str, object]] = []  # cheapest-policy log
         # ---- serving state (repro.sim.serving) ---------------------------
-        self.phi_timeline: Dict[int, List[Tuple[float, float]]] = {}
         self._serving_work: Dict[int, Tuple[float, float]] = {}  # jid →
         # (work_s at φ=1, alpha_s), frozen at first start for the latency
         # integration (pool reshapes show up through φ, not the stripe)
-        self.autoscale_applied = 0
-        self.autoscale_skipped = 0  # no free pod / job not running
         # ---- fluid engine state (repro.sim.fluid) ------------------------
         self._dark = fluid_engine.DarkWindows()  # circuits retuning now
-        self.downtime_events = 0
-        self.downtime_s = 0.0  # wall seconds of dark windows opened
-        self.downtime_circuit_s = 0.0  # time-priced: Σ delay · Σ|Δx|
         self._pod_down_since: Dict[int, float] = {}
         self._gpu_down_s = 0.0  # GPU-seconds pods spent failed
         self._cap_t = 0.0  # capacity integral (expansion-aware)
         self._cap_gpus = int(self.mask.active.sum()) * self.spec.gpus_per_pod
         self._cap_gpu_s = 0.0
         self._end_time = 0.0
+
+    # ---- registry views (public shapes preserved; storage = repro.obs) ----
+
+    @property
+    def reconfig_calls(self) -> int:
+        return self._c_reconfigs.value
+
+    @property
+    def reconfig_wall(self) -> float:
+        return self._c_wall.value
+
+    @property
+    def delta_calls(self) -> int:
+        return self._c_delta.value
+
+    @property
+    def ltrr_samples(self) -> List[float]:
+        return self._s_ltrr.data
+
+    @property
+    def fault_counts(self) -> Dict[str, int]:
+        return {
+            "failures": self._c_fail.value,
+            "repairs": self._c_repair.value,
+            "expands": self._c_expand.value,
+        }
+
+    @property
+    def restarts(self) -> int:
+        return self._c_restarts.value
+
+    @property
+    def shrinks(self) -> int:
+        return self._c_shrinks.value
+
+    @property
+    def lost_gpu_s(self) -> float:
+        return self._c_lost.value
+
+    @property
+    def policy_decisions(self) -> List[Dict[str, object]]:
+        return self._s_policy.data
+
+    @property
+    def autoscale_applied(self) -> int:
+        return self._c_scale_ok.value
+
+    @property
+    def autoscale_skipped(self) -> int:
+        return self._c_scale_skip.value
+
+    @property
+    def downtime_events(self) -> int:
+        return self._c_dt_events.value
+
+    @property
+    def downtime_s(self) -> float:
+        return self._c_dt_s.value
+
+    @property
+    def downtime_circuit_s(self) -> float:
+        return self._c_dt_circ.value
+
+    @property
+    def phi_timeline(self) -> obs_metrics.Timeline:
+        """Per-serving-job realized-φ breakpoints — a
+        :class:`repro.obs.metrics.Timeline` (dict-of-lists read API)."""
+        return self._phi
 
     def _mask_arg(self) -> Optional[PortMask]:
         """The mask handed to strategies: None while fully healthy, so the
@@ -465,9 +554,15 @@ class Simulator:
                     check_feasible=mask is not None,
                 )
                 self._last_incremental = True
-                self.delta_calls += 1
+                self._c_delta.inc()
                 return res
-            except (StaleStateError, DeltaInfeasible):
+            except (StaleStateError, DeltaInfeasible) as err:
+                # delta path lost its state: record the reason — the
+                # incremental-fallback rate is a first-class health metric
+                self._last_fallback = type(err).__name__
+                self.metrics.counter(
+                    f"control.fallback.{self._last_fallback}"
+                ).inc()
                 self._coloring_state = None
         if mask is not None and not demand_feasible(C, self.spec, mask=mask):
             # beyond the clean-pair budget: graceful degradation, no state
@@ -478,7 +573,7 @@ class Simulator:
         )
         return res
 
-    def _reconfigure(self) -> Tuple[Optional[OCSConfig], float]:
+    def _reconfigure(self, now: float = 0.0) -> Tuple[Optional[OCSConfig], float]:
         """Run the strategy; returns (config, computation seconds)."""
         st = self.cfg.strategy
         if st == "none":
@@ -487,28 +582,43 @@ class Simulator:
         spec, H_full = self.spec, self.spec.num_ocs_groups
         scale = H_full / self.cfg.sim_groups
         mask = self._mask_arg()
+        tr = self.trace
+        self._last_fallback = None
+        ambient_set = False
+        if tr.enabled:
+            # deep layers (core/incremental, core/reconfig, fault/recover)
+            # emit through the ambient handle during this solve
+            tr.sim_now = now
+            obs_trace.set_ambient(tr)
+            ambient_set = True
         t0 = time.perf_counter()
-        if st in ("mdmcf", "itv_ilp"):
-            res = self._solve_mdmcf(C, mask)
-        elif st == "mcf":
-            if mask is None:
-                res = mdmcf_cold(spec, C)
+        try:
+            if st in ("mdmcf", "itv_ilp"):
+                res = self._solve_mdmcf(C, mask)
+            elif st == "mcf":
+                if mask is None:
+                    res = mdmcf_cold(spec, C)
+                else:
+                    res = mdmcf_degraded(spec, C, old=None, mask=mask)
+            elif st == "greedy":
+                res = uniform_greedy(spec, C, mask=mask)
+            elif st == "uniform_ilp":
+                res = uniform_best_effort(spec, C, mask=mask)
+            elif st == "helios":
+                res = helios_matching(spec, C, mask=mask)
             else:
-                res = mdmcf_degraded(spec, C, old=None, mask=mask)
-        elif st == "greedy":
-            res = uniform_greedy(spec, C, mask=mask)
-        elif st == "uniform_ilp":
-            res = uniform_best_effort(spec, C, mask=mask)
-        elif st == "helios":
-            res = helios_matching(spec, C, mask=mask)
-        else:
-            raise ValueError(f"unknown strategy {st!r}")
+                raise ValueError(f"unknown strategy {st!r}")
+        finally:
+            if ambient_set:
+                obs_trace.set_ambient(None)
         measured = (time.perf_counter() - t0) * scale
-        self.reconfig_calls += 1
-        self.reconfig_wall += measured
+        self._c_reconfigs.inc()
+        self._c_wall.inc(measured)
+        self._h_wall.observe(measured)
         # mdmcf_delta already knows its Σ|Δx|; saves an O(H·K·P²) compare
         self._last_rewired = getattr(res, "rewired", None)
-        self.ltrr_samples.append(res.ltrr)
+        lt = res.ltrr
+        self._s_ltrr.append(lt)
         if st in ("itv_ilp", "uniform_ilp"):
             comp = ilp_time_model(self.cfg.num_gpus)
         elif self.cfg.timing == "measured":
@@ -516,6 +626,22 @@ class Simulator:
         else:
             comp = poly_time_model(
                 self.cfg.num_gpus, incremental=self._last_incremental
+            )
+        if tr.enabled:
+            # span dur is the *modeled* computation time — simulated, so
+            # the trace stays deterministic under timing='modeled'
+            tr.span(
+                "solve",
+                "mdmcf_delta" if self._last_incremental else st,
+                ts=now,
+                dur=comp,
+                strategy=st,
+                incremental=self._last_incremental,
+                rewired=self._last_rewired,
+                ltrr=round(lt, 9),
+                fallback=self._last_fallback,
+                degraded=mask is not None,
+                jobs=len(self.running),
             )
         return res.config, comp
 
@@ -560,14 +686,12 @@ class Simulator:
 
     def _phi_point(self, t: float, jid: int, phi: float) -> None:
         """Append a (t, φ) breakpoint to a serving job's realized-bandwidth
-        timeline (``serving.request_latencies`` integrates it; standalone
-        ``FluidSim.phi_history`` is the engine-level twin feeding the same
-        integrator).  A start refresh can run slightly ahead of the event
-        clock (reconfig computation time), so timestamps are monotonized."""
-        tl = self.phi_timeline.setdefault(jid, [])
-        if tl and t < tl[-1][0]:
-            t = tl[-1][0]
-        tl.append((t, phi))
+        timeline (``serving.request_latencies`` integrates it).  Storage is
+        one :class:`repro.obs.metrics.Timeline` — the same class backing
+        the standalone engine's ``FluidSim.phi_history``, so the two views
+        cannot diverge; monotonization (a start refresh can run slightly
+        ahead of the event clock) lives in :meth:`Timeline.point`."""
+        self._phi.point(jid, t, phi)
 
     # ---- serving fleets (repro.sim.serving) ------------------------------
 
@@ -646,7 +770,7 @@ class Simulator:
         delta — served by ``mdmcf_delta``, not a cold solve."""
         r = self.running.get(ev.job_id)
         if r is None or r.job.kind != "serve":
-            self.autoscale_skipped += 1
+            self._c_scale_skip.inc()
             return
         changed = 0
         if ev.pods > 0:
@@ -675,8 +799,13 @@ class Simulator:
                 r.cur_gpus -= n
                 changed += 1
         want = abs(ev.pods)
-        self.autoscale_applied += changed
-        self.autoscale_skipped += want - changed
+        self._c_scale_ok.inc(changed)
+        self._c_scale_skip.inc(want - changed)
+        if self.trace.enabled:
+            self.trace.instant(
+                "fault", "autoscale", ts=now,
+                job_id=ev.job_id, pods=ev.pods, applied=changed,
+            )
         if changed == 0:
             return
         r.edges = self._kv_edges(r, now)
@@ -707,7 +836,7 @@ class Simulator:
             return
         r.edges = self._kv_edges(r, now)
         r.record.shrinks += 1
-        self.shrinks += 1
+        self._c_shrinks.inc()
 
     # ---- fault handling --------------------------------------------------
 
@@ -731,8 +860,8 @@ class Simulator:
         self.carry_progress[jid] = r.progress - lost
         r.record.restarts += 1
         r.record.lost_s += lost
-        self.restarts += 1
-        self.lost_gpu_s += lost * r.job.num_gpus
+        self._c_restarts.inc()
+        self._c_lost.inc(lost * r.job.num_gpus)
         return now + cost
 
     def _replan_without_pod(self, job: Job, pods: Dict[int, int]):
@@ -761,7 +890,7 @@ class Simulator:
         )
         r.placement = Placement(r.job.job_id, r.placement.pods, ring_order=order)
         r.record.shrinks += 1
-        self.shrinks += 1
+        self._c_shrinks.inc()
 
     def _choose_policy(self, now: float, r: _Running, pod: int) -> str:
         """Pick the cheapest recovery policy for one victim of a pod
@@ -800,10 +929,16 @@ class Simulator:
             slowdown_cap=self.spec.slowdown_cap,
         )
         chosen = min(sorted(costs), key=lambda p: costs[p])
-        self.policy_decisions.append(
+        self._s_policy.append(
             {"t": now, "job_id": float(r.job.job_id),
              "phi_shrunk": phi_shrunk, "policy": chosen, **costs}
         )
+        if self.trace.enabled:
+            self.trace.instant(
+                "policy", chosen, ts=now,
+                job_id=r.job.job_id, phi_shrunk=round(phi_shrunk, 9),
+                **{k: round(costs[k], 6) for k in sorted(costs)},
+            )
         return chosen
 
     def _apply_fault(self, now: float, ev: FaultEvent) -> List[Tuple[float, int]]:
@@ -814,7 +949,11 @@ class Simulator:
         was_active = self.mask.active.copy()
         apply_event(self.mask, ev)
         if isinstance(ev, ExpandEvent):
-            self.fault_counts["expands"] += 1
+            self._c_expand.inc()
+            if self.trace.enabled:
+                self.trace.instant(
+                    "fault", "expand", ts=now, pods=sorted(ev.pods)
+                )
             self._cap_gpu_s += self._cap_gpus * (now - self._cap_t)
             self._cap_t = now
             self._cap_gpus = int(self.mask.active.sum()) * self.spec.gpus_per_pod
@@ -823,7 +962,12 @@ class Simulator:
                     self.free[p] = self.spec.gpus_per_pod
             return requeue
         if isinstance(ev, FailureEvent):
-            self.fault_counts["failures"] += 1
+            self._c_fail.inc()
+            if self.trace.enabled:
+                self.trace.instant(
+                    "fault", f"fail_{ev.scope}", ts=now,
+                    scope=ev.scope, h=ev.h, k=ev.k, pod=ev.pod,
+                )
             if ev.scope == "pod" and pod_was_up[ev.pod]:
                 self._pod_down_since[ev.pod] = now
                 policy = self.cfg.recovery_policy
@@ -848,7 +992,12 @@ class Simulator:
                         ready = self._restart_job(now, r, from_scratch=scratch)
                         requeue.append((ready, r.job.job_id))
         elif isinstance(ev, RepairEvent):
-            self.fault_counts["repairs"] += 1
+            self._c_repair.inc()
+            if self.trace.enabled:
+                self.trace.instant(
+                    "fault", f"repair_{ev.scope}", ts=now,
+                    scope=ev.scope, h=ev.h, k=ev.k, pod=ev.pod,
+                )
             if ev.scope == "pod":
                 t0 = self._pod_down_since.pop(ev.pod, None)
                 if t0 is not None:
@@ -905,7 +1054,7 @@ class Simulator:
             configuration, so the window is anchored at ``now + comp_s``
             (the same instant the starting job's slowdown refresh runs)."""
             nonlocal seq
-            config, comp_s = self._reconfigure()
+            config, comp_s = self._reconfigure(now)
             if self.old_config is not None and config is not None:
                 changed = (
                     self._last_rewired
@@ -918,9 +1067,15 @@ class Simulator:
                         pairs = config.changed_pairs(self.old_config)
                         start = now + comp_s
                         self._dark.add(pairs, start, start + delay)
-                        self.downtime_events += 1
-                        self.downtime_s += delay
-                        self.downtime_circuit_s += delay * changed
+                        self._c_dt_events.inc()
+                        self._c_dt_s.inc(delay)
+                        self._c_dt_circ.inc(delay * changed)
+                        if self.trace.enabled:
+                            for i, j in sorted(pairs):
+                                self.trace.span(
+                                    "dark_window", f"{i}-{j}",
+                                    ts=start, dur=delay, pair=[i, j],
+                                )
                         heapq.heappush(
                             ev, (start + delay, DARK_END, seq, 0)
                         )
@@ -985,58 +1140,67 @@ class Simulator:
             return True
 
         last_t = 0.0
-        while ev:
-            t, kind, sq, jid = heapq.heappop(ev)
-            if until is not None and t > until:
-                last_t = until
-                break
-            last_t = t
-            self.events += 1
-            if kind == FINISH:
-                if finish_version.get(jid) != sq or jid not in self.running:
-                    continue  # stale event
-                r = self.running.pop(jid)
-                r.advance(t)
-                r.record.finish = t
-                for p, n in r.pods.items():
-                    self.free[p] += n
-                self._refresh_slowdowns(t, self.old_config)
-                reschedule_all(t)
-                while try_start(t):
-                    pass
-            elif kind == FAULT:
-                for r in self.running.values():
+        with obs_recorder.flight_guard(self.trace):
+            while ev:
+                t, kind, sq, jid = heapq.heappop(ev)
+                if until is not None and t > until:
+                    last_t = until
+                    break
+                last_t = t
+                self.events += 1
+                if kind == FINISH:
+                    if finish_version.get(jid) != sq or jid not in self.running:
+                        continue  # stale event
+                    r = self.running.pop(jid)
                     r.advance(t)
-                fe = self.fault_events[jid]
-                if isinstance(fe, serving_mod.ScaleEvent):
-                    # autoscale rides the fault stream but never touches
-                    # the PortMask: the re-solve below is a pure demand
-                    # delta (incremental path, no cold solve)
-                    self._apply_scale(t, fe)
-                else:
-                    requeue = self._apply_fault(t, fe)
-                    for ready, rq_jid in requeue:
-                        heapq.heappush(ev, (ready, REQUEUE, seq, rq_jid))
-                        seq += 1
-                # re-solve around the new mask; surviving jobs absorb the
-                # capacity change through the flow model
-                reconfigure_now(t)
-                self._refresh_slowdowns(t, self.old_config)
-                reschedule_all(t)
-                while try_start(t):
-                    pass
-            elif kind == DARK_END:
-                if not self._dark.prune(t):
-                    continue  # stale: this pair's window was merged/extended
-                self._refresh_slowdowns(t, self.old_config)
-                reschedule_all(t)
-            elif kind == REFRESH:  # a dark window just opened
-                self._refresh_slowdowns(t, self.old_config)
-                reschedule_all(t)
-            else:  # ARRIVE / REQUEUE
-                self.queue.append(self.jobs[jid])
-                while try_start(t):
-                    pass
+                    r.record.finish = t
+                    if self.trace.enabled and math.isfinite(r.record.start):
+                        self.trace.span(
+                            "job", f"job{jid}:{r.job.kind}",
+                            ts=r.record.start, dur=t - r.record.start,
+                            job_id=jid, kind=r.job.kind,
+                            gpus=r.job.num_gpus,
+                            restarts=r.record.restarts,
+                        )
+                    for p, n in r.pods.items():
+                        self.free[p] += n
+                    self._refresh_slowdowns(t, self.old_config)
+                    reschedule_all(t)
+                    while try_start(t):
+                        pass
+                elif kind == FAULT:
+                    for r in self.running.values():
+                        r.advance(t)
+                    fe = self.fault_events[jid]
+                    if isinstance(fe, serving_mod.ScaleEvent):
+                        # autoscale rides the fault stream but never touches
+                        # the PortMask: the re-solve below is a pure demand
+                        # delta (incremental path, no cold solve)
+                        self._apply_scale(t, fe)
+                    else:
+                        requeue = self._apply_fault(t, fe)
+                        for ready, rq_jid in requeue:
+                            heapq.heappush(ev, (ready, REQUEUE, seq, rq_jid))
+                            seq += 1
+                    # re-solve around the new mask; surviving jobs absorb the
+                    # capacity change through the flow model
+                    reconfigure_now(t)
+                    self._refresh_slowdowns(t, self.old_config)
+                    reschedule_all(t)
+                    while try_start(t):
+                        pass
+                elif kind == DARK_END:
+                    if not self._dark.prune(t):
+                        continue  # stale: window was merged/extended
+                    self._refresh_slowdowns(t, self.old_config)
+                    reschedule_all(t)
+                elif kind == REFRESH:  # a dark window just opened
+                    self._refresh_slowdowns(t, self.old_config)
+                    reschedule_all(t)
+                else:  # ARRIVE / REQUEUE
+                    self.queue.append(self.jobs[jid])
+                    while try_start(t):
+                        pass
         if until is not None:
             # the heap may drain before the requested horizon; accounting
             # (capacity integral, downtime) still covers the full window
@@ -1126,6 +1290,36 @@ class Simulator:
             row["ideal_s"] = work + alpha_s
             row["slo_s"] = slo
             rows[j.job_id] = row
+            if j.job_id not in self._requests_traced:
+                # summaries may be recomputed; record each fleet once
+                self._requests_traced.add(j.job_id)
+                hist = self.metrics.histogram("serving.latency_s")
+                for v in lat:
+                    if math.isfinite(v):
+                        hist.observe(float(v))
+                tr = self.trace
+                if tr.enabled:
+                    tl = self.phi_timeline.get(j.job_id, ())
+                    cap = min(len(arrivals), tr.request_cap)
+                    tr.dropped += len(arrivals) - cap
+                    for n in range(cap):
+                        a, l = float(arrivals[n]), float(lat[n])
+                        if not math.isfinite(l):
+                            tr.instant(
+                                "request", "stalled", ts=a,
+                                job_id=j.job_id, req=n,
+                            )
+                            continue
+                        q, x, d = serving_mod.request_phases(
+                            a, l, tl, alpha_s=alpha_s
+                        )
+                        tr.span(
+                            "request", f"req{n}", ts=a, dur=l,
+                            job_id=j.job_id, req=n,
+                            queue_s=round(q, 9),
+                            transfer_s=round(x, 9),
+                            decode_s=round(d, 9),
+                        )
             pooled.append(lat)
             requests += row["requests"]
             served += row["goodput"] * row["requests"] if row["requests"] else 0

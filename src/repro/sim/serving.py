@@ -52,6 +52,7 @@ __all__ = [
     "autoscale_events",
     "pool_quantile",
     "request_latencies",
+    "request_phases",
     "request_work_s",
     "serving_job",
     "serving_trace",
@@ -259,6 +260,37 @@ def request_latencies(
         else:
             finish[open_end] = math.inf
     return finish - arrivals + alpha_s
+
+
+def request_phases(
+    arrival: float,
+    latency: float,
+    timeline: Sequence[Tuple[float, float]],
+    alpha_s: float = KV_ALPHA_S,
+) -> Tuple[float, float, float]:
+    """Decompose one request's latency into ``(queue_s, transfer_s,
+    decode_s)`` phases for tracing.
+
+    ``queue_s`` is the portion of the KV-transfer window spent with
+    φ = 0 (job still queued, or a reconfiguration dark window),
+    ``transfer_s`` the portion with bandwidth actually flowing, and
+    ``decode_s`` the fixed ``alpha_s`` term.  The three always sum to
+    ``latency`` (``queue_s`` is ``inf`` for requests that never finish).
+
+    >>> request_phases(0.5, 1.5, [(1.0, 1.0)], alpha_s=0.0)
+    (0.5, 1.0, 0.0)
+    """
+    if not math.isfinite(latency):
+        return math.inf, 0.0, alpha_s
+    finish = arrival + latency - alpha_s
+    busy = 0.0  # time with φ > 0 inside [arrival, finish]
+    for n, (t, phi) in enumerate(timeline):
+        seg_end = timeline[n + 1][0] if n + 1 < len(timeline) else finish
+        a, b = max(t, arrival), min(seg_end, finish)
+        if b > a and phi > 0:
+            busy += b - a
+    transfer = min(busy, finish - arrival)
+    return (finish - arrival) - transfer, transfer, alpha_s
 
 
 def autoscale_events(

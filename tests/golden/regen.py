@@ -35,8 +35,12 @@ SCENARIO = {
 }
 
 
-def run_scenario():
-    """Run the pinned scenario; returns (records, simulator)."""
+def run_scenario(tracer=None):
+    """Run the pinned scenario; returns (records, simulator).
+
+    ``tracer`` (a :class:`repro.obs.Tracer`) attaches the flight
+    recorder; it must never change the table (tracing is passive —
+    ``tests/test_obs.py`` pins byte-identity with it on or off)."""
     from repro.fault import FailureEvent, RepairEvent
     from repro.sim import SimConfig, Simulator, generate_trace
 
@@ -57,6 +61,7 @@ def run_scenario():
             architecture=s["architecture"], strategy=s["strategy"],
             num_pods=s["num_pods"], k_spine=s["k_spine"], k_leaf=s["k_leaf"],
             engine=s["engine"], reconfig_delay_s=s["reconfig_delay_s"],
+            tracer=tracer,
         ),
         jobs,
         fault_events=events,
@@ -65,8 +70,8 @@ def run_scenario():
     return records, sim
 
 
-def build_table():
-    records, sim = run_scenario()
+def build_table(tracer=None):
+    records, sim = run_scenario(tracer)
     jct = {
         str(r.job.job_id): (r.jct if math.isfinite(r.finish) else None)
         for r in records

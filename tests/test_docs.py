@@ -24,6 +24,9 @@ DOCTEST_MODULES = [
     "repro.core.incremental",
     "repro.dist.demand",
     "repro.fault.masks",
+    "repro.obs.metrics",
+    "repro.obs.report",
+    "repro.obs.trace",
     "repro.sim.scheduler",
     "repro.sim.serving",
 ]
@@ -33,6 +36,7 @@ REQUIRED_DOCS = [
     os.path.join("docs", "architecture.md"),
     os.path.join("docs", "simulation.md"),
     os.path.join("docs", "serving.md"),
+    os.path.join("docs", "observability.md"),
 ]
 
 

@@ -1,0 +1,331 @@
+"""Tests for the repro.obs flight-recorder substrate (tracing + metrics).
+
+Covers the four acceptance properties of the observability PR:
+
+* **determinism** — two identical seeded runs export byte-identical
+  Chrome trace JSON (spans are keyed on *simulated* time only; measured
+  wall-clock never enters the trace);
+* **passivity** — the golden fluid trace (tests/golden/fluid_trace.json)
+  is byte-identical with the tracer attached or not;
+* **schema** — a mixed train+serve fluid run with a pod failure under
+  the ``cheapest`` recovery policy produces a Perfetto-loadable trace
+  covering all five required categories (solve, dark_window, fault,
+  policy, request);
+* **postmortem** — the bounded flight recorder dumps the last N events
+  as JSON when a guarded block raises, and re-raises unchanged.
+
+Plus accuracy/shape unit tests for the metrics registry (quantile
+sketch vs numpy percentiles, int-preserving counters, the shared
+φ Timeline).
+"""
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.fault import FailureEvent, RepairEvent
+from repro.sim import SimConfig, Simulator, generate_trace
+from tests.golden import regen
+
+P, K = 12, 8
+GPUS = P * K * K
+
+
+def _mixed_cfg(tracer=None):
+    return SimConfig(
+        architecture="cross_wiring", strategy="mdmcf",
+        num_pods=P, k_spine=K, k_leaf=K, engine="fluid",
+        reconfig_delay_s=0.01, recovery_policy="cheapest",
+        tracer=tracer,
+    )
+
+
+def _mixed_jobs():
+    return generate_trace(
+        14, num_gpus=GPUS, workload_level=0.9, seed=3,
+        max_job_gpus=GPUS // 4, serving_jobs=2, serving_gpus=128,
+    )
+
+
+def _run_mixed(tracer):
+    """Mixed train+serve fluid run: pod failure on a pod hosting a
+    *training* job (so recovery-policy decisions fire), nonzero
+    reconfiguration delay (dark windows), serving fleets (requests)."""
+    jobs = _mixed_jobs()
+    t_fail = jobs[7].arrival + 5.0
+    # probe run: find a pod hosting training work at the fault instant
+    probe = Simulator(_mixed_cfg(), _mixed_jobs())
+    probe.run(until=t_fail)
+    train_pods = sorted({
+        p for r in probe.running.values() if r.job.kind == "train"
+        for p in r.pods
+    })
+    assert train_pods, "scenario drifted: no training job running at t_fail"
+    pod = train_pods[0]
+    evs = [
+        FailureEvent(t_fail, "pod", pod=pod),
+        RepairEvent(t_fail + 3600.0, "pod", pod=pod),
+    ]
+    sim = Simulator(_mixed_cfg(tracer), jobs, fault_events=evs)
+    sim.run()
+    sim.serving_summary()
+    return sim
+
+
+@pytest.fixture(scope="module")
+def mixed(tmp_path_factory):
+    """One traced mixed run + a second identical run's export bytes."""
+    d = tmp_path_factory.mktemp("obs")
+    tr1, tr2 = obs.Tracer(), obs.Tracer()
+    sim = _run_mixed(tr1)
+    _run_mixed(tr2)
+    p1, p2 = str(d / "a.json"), str(d / "b.json")
+    tr1.export_json(p1)
+    tr2.export_json(p2)
+    with open(p1, "rb") as fh:
+        b1 = fh.read()
+    with open(p2, "rb") as fh:
+        b2 = fh.read()
+    return sim, tr1, b1, b2
+
+
+# ---- determinism ----------------------------------------------------------
+
+def test_trace_export_deterministic(mixed):
+    _, _, b1, b2 = mixed
+    assert b1 == b2, "same seed must export byte-identical trace JSON"
+
+
+def test_golden_table_byte_identical_with_tracer():
+    """Tracing is passive: the golden fluid table regenerated with a
+    tracer attached serializes byte-for-byte like the committed file."""
+    with open(regen.GOLDEN_PATH) as fh:
+        committed = fh.read()
+    table = regen.build_table(tracer=obs.Tracer())
+    regenerated = json.dumps(table, indent=1, sort_keys=True) + "\n"
+    assert regenerated == committed
+
+
+# ---- Perfetto / Chrome trace-event schema ---------------------------------
+
+def test_trace_validates_and_covers_required_categories(mixed):
+    sim, tr, b1, _ = mixed
+    doc = json.loads(b1)
+    assert obs.validate_trace(doc) == []
+    cats = {e.get("cat") for e in doc["traceEvents"] if e.get("ph") != "M"}
+    required = {"solve", "dark_window", "fault", "policy", "request"}
+    assert required <= cats, f"missing categories: {required - cats}"
+    # thread-name metadata makes Perfetto group rows by category
+    meta = [e for e in doc["traceEvents"] if e.get("ph") == "M"]
+    named = {
+        e["args"]["name"] for e in meta if e["name"] == "thread_name"
+    }
+    assert required <= named
+    # simulated-time µs timestamps, non-decreasing body order
+    body = [e for e in doc["traceEvents"] if e.get("ph") != "M"]
+    ts = [e["ts"] for e in body]
+    assert ts == sorted(ts) and all(t >= 0 for t in ts)
+    assert all(e["dur"] >= 0 for e in body if e["ph"] == "X")
+
+
+def test_solve_spans_carry_control_plane_args(mixed):
+    sim, tr, _, _ = mixed
+    spans = [e for e in tr.events("solve") if e["ph"] == "X"]
+    assert spans and len(spans) == sim.reconfig_calls
+    incremental = [e for e in spans if e["args"]["incremental"]]
+    assert incremental, "mixed run must hit the mdmcf_delta path"
+    assert all("rewired" in e["args"] and "ltrr" in e["args"] for e in spans)
+    assert sum(1 for e in incremental) == sim.delta_calls
+
+
+def test_dark_window_and_downtime_agree(mixed):
+    sim, tr, _, _ = mixed
+    assert sim.downtime_events > 0
+    windows = [e for e in tr.events("dark_window") if e["ph"] == "X"]
+    assert windows
+    # every window prices the configured delay (10 ms → µs)
+    assert all(abs(e["dur"] - 0.01 * 1e6) < 1e-6 for e in windows)
+
+
+def test_policy_and_request_events(mixed):
+    sim, tr, _, _ = mixed
+    decisions = [e for e in tr.events("policy")]
+    assert len(decisions) == len(sim.policy_decisions) > 0
+    reqs = tr.events("request")
+    assert reqs
+    for e in reqs:
+        if e["ph"] != "X":
+            continue
+        a = e["args"]
+        total = a["queue_s"] + a["transfer_s"] + a["decode_s"]
+        assert abs(total - e["dur"] / 1e6) < 1e-6
+
+
+# ---- flight recorder ------------------------------------------------------
+
+def test_flight_recorder_dumps_on_exception(tmp_path):
+    dump = str(tmp_path / "crash.flightrec.json")
+    tr = obs.Tracer(flight_size=8, flight_dump=dump)
+    for n in range(20):
+        tr.instant("fault", f"ev{n}", ts=float(n))
+    with pytest.raises(ValueError, match="boom"):
+        with obs.flight_guard(tr):
+            raise ValueError("boom")
+    with open(dump) as fh:
+        doc = json.load(fh)
+    assert doc["schema"] == "repro-flightrec/1"
+    assert doc["error"]["type"] == "ValueError"
+    assert "boom" in doc["error"]["message"]
+    # bounded: only the last flight_size events survive
+    assert len(doc["events"]) == 8
+    assert doc["events"][-1]["name"] == "ev19"
+
+
+def test_flight_guard_noop_without_target(tmp_path):
+    tr = obs.Tracer()  # enabled, but no flight_dump path
+    with pytest.raises(RuntimeError):
+        with obs.flight_guard(tr):
+            raise RuntimeError("x")
+    with pytest.raises(RuntimeError):
+        with obs.flight_guard(obs.NULL, str(tmp_path / "never.json")):
+            raise RuntimeError("y")
+    assert not os.path.exists(str(tmp_path / "never.json"))
+
+
+def test_simulator_run_dumps_flight_on_crash(tmp_path, monkeypatch):
+    dump = str(tmp_path / "sim.flightrec.json")
+    tr = obs.Tracer(flight_dump=dump)
+    jobs = _mixed_jobs()
+    sim = Simulator(_mixed_cfg(tr), jobs)
+    monkeypatch.setattr(
+        sim, "_refresh_slowdowns",
+        lambda *a, **kw: (_ for _ in ()).throw(RuntimeError("mid-run")),
+    )
+    with pytest.raises(RuntimeError, match="mid-run"):
+        sim.run()
+    assert os.path.exists(dump)
+    with open(dump) as fh:
+        assert json.load(fh)["error"]["type"] == "RuntimeError"
+
+
+# ---- null tracer / disabled cost ------------------------------------------
+
+def test_null_tracer_is_inert():
+    assert obs.NULL.enabled is False
+    assert obs.NULL.span("solve", "x", ts=0.0, dur=1.0) is None
+    assert obs.NULL.instant("fault", "y") is None
+    assert obs.NULL.flight_events() == []
+    sim = Simulator(_mixed_cfg(), _mixed_jobs())
+    assert sim.trace is obs.NULL
+
+
+# ---- metrics registry -----------------------------------------------------
+
+def test_quantile_sketch_matches_numpy_within_bound():
+    rng = np.random.default_rng(11)
+    vals = rng.lognormal(mean=-1.0, sigma=1.5, size=20_000)
+    s = obs.QuantileSketch("lat", lo=1e-6, hi=1e4, bins=512)
+    for v in vals:
+        s.observe(float(v))
+    tol = s.rel_error()
+    for q in (0.5, 0.9, 0.99):
+        truth = float(np.percentile(vals, 100 * q))
+        est = s.quantile(q)
+        assert abs(est / truth - 1.0) <= tol + 1e-12, (q, est, truth, tol)
+    assert abs(s.mean - vals.mean()) < 1e-9 * max(1.0, abs(vals.mean()))
+
+
+def test_quantile_sketch_clamps_out_of_range():
+    s = obs.QuantileSketch("x", lo=1e-3, hi=1e3, bins=64)
+    for v in (0.0, 1e-9, 1e9):
+        s.observe(v)
+    assert s.quantile(0.0) == s.lo
+    assert s.quantile(1.0) == s.hi
+    assert math.isnan(obs.QuantileSketch("empty").quantile(0.5))
+
+
+def test_counter_stays_int():
+    c = obs.Counter("n")
+    c.inc()
+    c.inc(2)
+    assert c.value == 3 and isinstance(c.value, int)
+    c.inc(0.5)
+    assert isinstance(c.value, float)
+
+
+def test_timeline_monotonizes_and_integrates():
+    tl = obs.Timeline("phi")
+    tl.point("a", 0.0, 1.0)
+    tl.point("a", 10.0, 0.0)
+    tl.point("a", 5.0, 0.5)  # behind the clock → clamped to t=10
+    assert tl["a"] == [(0.0, 1.0), (10.0, 0.0), (10.0, 0.5)]
+    assert tl.integrate("a", 0.0, 20.0) == pytest.approx(10.0 + 5.0)
+    assert tl.integrate("missing", 0.0, 1.0) == 0.0
+    assert "a" in tl and len(tl) == 1 and list(tl) == ["a"]
+
+
+def test_registry_get_or_create_and_type_guard():
+    reg = obs.MetricsRegistry()
+    assert reg.counter("x") is reg.counter("x")
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+    reg.histogram("h").observe(1.0)
+    reg.timeline("t").point("k", 0.0, 1.0)
+    snap = reg.snapshot()
+    assert snap["x"] == 0 and snap["h.count"] == 1 and snap["t.keys"] == 1
+
+
+def test_simulator_metrics_views_keep_shapes(mixed):
+    sim, _, _, _ = mixed
+    assert isinstance(sim.fault_counts, dict)
+    assert set(sim.fault_counts) == {"failures", "repairs", "expands"}
+    assert sim.fault_counts["failures"] == 1
+    assert isinstance(sim.reconfig_calls, int)
+    assert isinstance(sim.policy_decisions, list)
+    assert all(isinstance(d, dict) for d in sim.policy_decisions)
+    assert isinstance(sim.phi_timeline, obs.Timeline)
+    # serving latencies stream into the registry sketch exactly once
+    h = sim.metrics.get("serving.latency_s")
+    assert h is not None and h.count > 0
+    before = h.count
+    sim.serving_summary()  # recompute must not double-observe
+    assert h.count == before
+    snap = sim.metrics.snapshot()
+    assert snap["control.reconfigs"] == sim.reconfig_calls
+
+
+# ---- report / bench block -------------------------------------------------
+
+def test_bench_block_roundtrip(tmp_path):
+    from repro.obs.report import load_bench_metrics, load_bench_rows
+
+    payload = {
+        "throughput": {"events_per_sec": np.float64(2500.0),
+                       "events": np.int64(10)},
+        "rows": [{"pods": 16, "k_spine": 8, "speedup": 3.0}],
+        "checks": {"ok": True},
+    }
+    path = obs.write_bench_block("demo", payload, str(tmp_path))
+    assert os.path.basename(path) == "BENCH_demo.json"
+    m = load_bench_metrics(path)
+    assert m["throughput.events_per_sec"] == 2500.0
+    assert m["throughput.events"] == 10  # numpy ints survive flattening
+    assert m["checks.ok"] is True
+    assert load_bench_rows(path) == payload["rows"]
+    # legacy raw payloads read through the same loaders
+    legacy = tmp_path / "legacy.json"
+    legacy.write_text(json.dumps({"rows": payload["rows"], "a": {"b": 1}}))
+    assert load_bench_metrics(str(legacy))["a.b"] == 1
+    assert load_bench_rows(str(legacy)) == payload["rows"]
+
+
+def test_render_smoke(mixed):
+    sim, tr, _, _ = mixed
+    summary = obs.render_summary(sim.metrics)
+    assert "control.reconfigs" in summary
+    art = obs.render_timeline(tr)
+    assert "solve" in art and "request" in art
+    assert obs.render_timeline(obs.NULL) == "trace: (no events)"
