@@ -43,6 +43,8 @@ from repro.fault import (
     masked_aggregate_demand,
     mdmcf_degraded,
 )
+from repro.obs import attribute_jobs
+from repro.obs.attrib import JOB_CAUSES
 from repro.sim import SimConfig, Simulator, generate_trace, summarize
 from repro.sim import flowsim
 
@@ -173,17 +175,27 @@ def _policies(P, k, n_jobs, seed=0):
             recs = sim.run()
             fs = sim.fault_summary()
             s = summarize(recs)
-            rows.append(
-                {
-                    "policy": policy,
-                    "engine": engine,
-                    "restarts": int(fs["restarts"]),
-                    "shrinks": int(fs["shrinks"]),
-                    "lost_gpu_s": fs["lost_gpu_s"],
-                    "availability": fs["availability"],
-                    "avg_jct": s["avg_jct"],
-                }
-            )
+            # blame decomposition over finished jobs: where the JCT
+            # inflation each policy pays actually went
+            blames = attribute_jobs(sim)
+            row = {
+                "policy": policy,
+                "engine": engine,
+                "restarts": int(fs["restarts"]),
+                "shrinks": int(fs["shrinks"]),
+                "lost_gpu_s": fs["lost_gpu_s"],
+                "availability": fs["availability"],
+                "avg_jct": s["avg_jct"],
+                "blame_jobs": len(blames),
+                "blame_max_residual": max(
+                    (abs(b.residual) for b in blames.values()), default=0.0
+                ),
+            }
+            for c in JOB_CAUSES:
+                row[f"blame_{c}_s"] = sum(
+                    b.causes.get(c, 0.0) for b in blames.values()
+                )
+            rows.append(row)
     return rows
 
 
@@ -247,6 +259,9 @@ def run(quick: bool = True) -> dict:
     checks = {
         "cw_beats_uniform_at_nonzero_failure_rate": bool(cw_wins),
         "cw_win_fractions": cw_wins,
+        "policy_blame_conserved": all(
+            r["blame_max_residual"] <= 1e-6 for r in policies
+        ),
         "expansion_no_restarts": expansion["expanded"]["restarts"] == 0,
         "expansion_helps_jct": (
             expansion["expanded"]["avg_jct"]
@@ -276,11 +291,17 @@ def main():
             f"events={r['events']}"
         )
     for r in p["policies"]:
+        top = sorted(
+            ((c, r[f"blame_{c}_s"]) for c in JOB_CAUSES),
+            key=lambda kv: -kv[1],
+        )[:3]
+        blame = ",".join(f"{c}={v:.0f}s" for c, v in top if v > 0)
         print(
             f"availability,policy,{r['policy']}@{r['engine']},"
             f"restarts={r['restarts']},"
             f"shrinks={r['shrinks']},lost_gpu_s={r['lost_gpu_s']:.0f},"
             f"avg_jct={r['avg_jct']:.0f}"
+            + (f",blame[{blame}]" if blame else "")
         )
     e = p["expansion"]
     print(

@@ -12,14 +12,26 @@ deltas (`mdmcf_delta`) move few circuits, while Uniform/Helios both
 under-realize the demand and cold-solve every event, darkening more of
 the serving fleet's pairs.
 
-Invariant gate (CI): Cross Wiring's pooled p99 KV-transfer latency is
-≤ Uniform's on every load level.
+Every row also carries the blame decomposition (``repro.obs.attrib``):
+the fleet's total slowdown split into named causes (``blame_<cause>_s``)
+and the p99-tail split (``p99_<cause>_s`` — the mean breakdown of the
+slowest 1 % of requests), so the headline p99 delta arrives *explained*:
+Cross Wiring wins because its dark-window share is smaller, not merely
+because the number is smaller.
+
+Invariant gates (CI): Cross Wiring's pooled p99 KV-transfer latency is
+≤ Uniform's on every load level; blame conservation holds on every
+fleet; Cross Wiring's dark-window blame share never exceeds Uniform's
+(``check_regression.py --attribution``).
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, List
 
 from repro.fault import FaultModel, merge_events
+from repro.obs import attribute_requests
+from repro.obs.attrib import CAUSES, DARK_CAUSES
 from repro.sim import SimConfig, Simulator, autoscale_events, generate_trace
 
 from .common import save
@@ -38,6 +50,17 @@ PERIOD_S = 1200.0  # compressed "day" so autoscale fires inside the horizon
 LOAD_LEVELS = (0.5, 1.0, 2.0)  # low / mid / high serving load
 LINK_FAIL_FRACTION = 0.005  # steady-state concurrently-failed port share
 LINK_MTTR_S = 600.0
+
+
+def _pooled_dark_share(rows, arch: str, strat: str, load: float) -> float:
+    """Dark-window blame pooled over a (arch, strategy, load)'s serving
+    fleets, as a share of their total ideal service time (the same
+    request stream on every fabric, so the denominators are identical and
+    the ordering equals the absolute dark-seconds ordering)."""
+    sel = [r for r in rows
+           if (r["arch"], r["strategy"], r["load"]) == (arch, strat, load)]
+    ideal = math.fsum(r["ideal_total_s"] for r in sel)
+    return math.fsum(r["dark_s"] for r in sel) / ideal if ideal > 0 else 0.0
 
 
 def run(quick: bool = True) -> dict:
@@ -78,8 +101,12 @@ def run(quick: bool = True) -> dict:
             sim = Simulator(cfg, jobs, seed=0, fault_events=evs)
             sim.run(until=horizon)
             s = sim.serving_summary()
+            attr = attribute_requests(sim)
             for jid, jr in sorted(s["jobs"].items()):
-                rows.append({
+                ab = attr["jobs"][jid]
+                slowdown = ab["slowdown_s"]
+                dark_s = math.fsum(ab["blame"][c] for c in DARK_CAUSES)
+                row = {
                     "arch": arch,
                     "strategy": strat,
                     "load": load,
@@ -93,7 +120,25 @@ def run(quick: bool = True) -> dict:
                     "delta_calls": float(sim.delta_calls),
                     "reconfigs": float(sim.reconfig_calls),
                     "downtime_circuit_s": sim.downtime_circuit_s,
-                })
+                    # blame decomposition: the p99 delta, explained.
+                    # dark_share normalizes by the fleet's total *ideal*
+                    # service time — identical across fabrics at the same
+                    # load — so the fabrics' dark-window exposure is
+                    # directly comparable (a share of own slowdown would
+                    # reward a fabric for being slow everywhere else)
+                    "slowdown_s": slowdown,
+                    "dark_s": dark_s,
+                    "ideal_total_s": jr["requests"] * jr["ideal_s"],
+                    "dark_share": (
+                        dark_s / (jr["requests"] * jr["ideal_s"])
+                        if jr["requests"] else 0.0
+                    ),
+                    "blame_max_residual": ab["max_residual"],
+                }
+                for c in CAUSES:
+                    row[f"blame_{c}_s"] = ab["blame"][c]
+                    row[f"p99_{c}_s"] = ab["p99_blame"][c]
+                rows.append(row)
 
     by: Dict = {}
     for r in rows:
@@ -116,6 +161,17 @@ def run(quick: bool = True) -> dict:
             by[("cross_wiring", "mdmcf", lv, f)]["delta_calls"] > 0
             for lv in LOAD_LEVELS for f in fleets
         ),
+        # attribution gates: every fleet's blame sums back to its
+        # measured slowdown, and Cross Wiring's dark-window share of
+        # that slowdown (pooled over fleets) never exceeds Uniform's
+        "blame_conserved": all(
+            r["blame_max_residual"] <= 1e-6 for r in rows
+        ),
+        "cw_dark_share_le_uniform_every_level": all(
+            _pooled_dark_share(rows, "cross_wiring", "mdmcf", lv)
+            <= _pooled_dark_share(rows, "uniform", "greedy", lv) + 1e-9
+            for lv in LOAD_LEVELS
+        ),
     }
     payload = {"rows": rows, "checks": checks}
     save("serving", payload)
@@ -125,13 +181,20 @@ def run(quick: bool = True) -> dict:
 def main() -> None:
     payload = run()
     for r in payload["rows"]:
+        top = sorted(
+            ((c, r[f"blame_{c}_s"]) for c in CAUSES),
+            key=lambda kv: -kv[1],
+        )[:2]
+        blame = ",".join(f"{c}={v:.2f}s" for c, v in top if v > 0)
         print(
             f"serving,{r['arch']}/{r['strategy']},load={r['load']},"
             f"{r['fleet']},"
             f"p50={r['p50_s']*1e3:.2f}ms,p99={r['p99_s']*1e3:.2f}ms,"
             f"goodput={r['goodput']:.4f},"
             f"dark={r['downtime_circuit_s']:.1f}cs,"
-            f"delta={r['delta_calls']:.0f}/{r['reconfigs']:.0f}"
+            f"delta={r['delta_calls']:.0f}/{r['reconfigs']:.0f},"
+            f"dark_share={r['dark_share']:.3f}"
+            + (f",blame[{blame}]" if blame else "")
         )
     print(f"checks: {payload['checks']}")
     if not all(payload["checks"].values()):

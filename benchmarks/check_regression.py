@@ -25,11 +25,26 @@ reads the fluid benchmark's traced-vs-untraced events/sec ratio and
 fails when attaching the tracer costs more than (1 − min-ratio) of
 engine throughput — the no-op-when-disabled discipline is a measured
 property, not a comment.
+
+A third gate for the blame-attribution engine:
+
+    python benchmarks/check_regression.py --attribution \
+        artifacts/bench/BENCH_serving.json
+
+re-derives two invariants from the serving sweep's rows (it does not
+trust the payload's own ``checks``): every fleet's blame decomposition
+conserves — attributed seconds reconstruct the measured slowdown within
+``--tol`` (default 1e-6) — and Cross Wiring's pooled dark-window blame
+share is ≤ Uniform's at every load level.  A conservation break means
+the attribution replay no longer matches what the scheduler integrated;
+a dark-share inversion means the headline p99 win is no longer coming
+from the mechanism the paper claims (fewer, cheaper reconfigurations).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import sys
 
 
@@ -80,6 +95,51 @@ def check_tracing_overhead(path: str, min_ratio: float) -> int:
     return 0
 
 
+def check_attribution(path: str, tol: float) -> int:
+    doc = _load(path)
+    rows = doc.get("rows", [])
+    if not rows:
+        print(f"check_regression,attribution: no rows in {path}",
+              file=sys.stderr)
+        return 1
+    failures = []
+
+    worst = max(r.get("blame_max_residual", float("inf")) for r in rows)
+    if not worst <= tol:
+        failures.append(
+            f"blame conservation broken: max residual {worst:.3e} > {tol:g}"
+        )
+    print(f"check_regression,attribution,max_residual={worst:.3e}(tol {tol:g})")
+
+    def dark_share(arch, strat, load):
+        # dark blame as a share of total ideal service time: the request
+        # stream is identical across fabrics at one load level, so the
+        # denominators match and the comparison is apples-to-apples
+        sel = [r for r in rows
+               if (r["arch"], r["strategy"], r["load"]) == (arch, strat, load)]
+        ideal = math.fsum(r["ideal_total_s"] for r in sel)
+        return math.fsum(r["dark_s"] for r in sel) / ideal if ideal > 0 else 0.0
+
+    for load in sorted({r["load"] for r in rows}):
+        cw = dark_share("cross_wiring", "mdmcf", load)
+        un = dark_share("uniform", "greedy", load)
+        print(
+            f"check_regression,attribution,load={load},"
+            f"dark_share_cw={cw:.4f},dark_share_uniform={un:.4f}"
+        )
+        if cw > un + 1e-9:
+            failures.append(
+                f"load={load}: Cross Wiring dark-window share {cw:.4f} "
+                f"> Uniform {un:.4f}"
+            )
+    if failures:
+        print("ATTRIBUTION REGRESSION:", *failures, sep="\n  ",
+              file=sys.stderr)
+        return 1
+    print("check_regression,attribution,ok")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current")
@@ -87,10 +147,14 @@ def main() -> int:
     ap.add_argument("--max-regression", type=float, default=3.0)
     ap.add_argument("--tracing-overhead", action="store_true")
     ap.add_argument("--min-ratio", type=float, default=0.95)
+    ap.add_argument("--attribution", action="store_true")
+    ap.add_argument("--tol", type=float, default=1e-6)
     args = ap.parse_args()
 
     if args.tracing_overhead:
         return check_tracing_overhead(args.current, args.min_ratio)
+    if args.attribution:
+        return check_attribution(args.current, args.tol)
     if args.baseline is None:
         ap.error("baseline is required unless --tracing-overhead")
 

@@ -5,12 +5,18 @@
   PYTHONPATH=src python -m benchmarks.run --only ltrr jct
 
 Each benchmark prints ``name,…`` CSV lines and writes
-``artifacts/bench/<name>.json``.
+``artifacts/bench/<name>.json`` (plus the uniform ``repro-bench/1``
+block next to it).  The driver additionally mirrors every block to the
+repo root as ``BENCH_<name>.json`` — the committed baseline set CI
+gates diff against.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
+
+from repro.obs.report import write_bench_block
 
 from . import (
     bench_availability,
@@ -26,6 +32,8 @@ from . import (
     bench_step,
     bench_throughput,
 )
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 BENCHES = {
     "collectives": (
@@ -70,6 +78,7 @@ def main() -> None:
         t0 = time.perf_counter()
         print(f"== {name}: {desc} " + "=" * max(1, 46 - len(name) - len(desc)))
         payload = mod.run(quick=not args.full)
+        write_bench_block(name, payload, REPO_ROOT)
         _summarize(name, payload)
         print(f"-- {name} done in {time.perf_counter() - t0:.1f}s\n", flush=True)
 

@@ -229,14 +229,38 @@ class OCSConfig:
 
     def changed_pairs(self, other: "OCSConfig") -> FrozenSet[Tuple[int, int]]:
         """Pod pairs ``(i, j)`` (i ≤ j) whose circuits differ from ``other``
-        anywhere in the OCS layer — the circuits that must physically
-        retune during a reconfiguration and therefore carry zero bandwidth
-        for the switching delay (the fluid engine's dark set).  Incremental
-        deltas (:mod:`~repro.core.incremental`) move fewer circuits, so
-        their dark set — and the time-priced downtime — is smaller."""
+        anywhere in the OCS layer — every pair touched by the retune,
+        additions included.  Prefer :meth:`dark_pairs` for pricing the
+        switching window: a pair that only *gains* circuits keeps its
+        surviving capacity live while the new ports tune."""
         diff = (self.x != other.x).any(axis=(0, 1))
         diff |= diff.T
         ii, jj = np.nonzero(np.triu(diff))
+        return frozenset(zip(ii.tolist(), jj.tolist()))
+
+    def dark_pairs(self, other: "OCSConfig") -> FrozenSet[Tuple[int, int]]:
+        """Pod pairs that carry zero bandwidth while this configuration is
+        being switched in from ``other`` (the fluid engine's dark set).
+
+        The unit that retunes is the *circuit* (an OCS port), not the pod
+        pair: a circuit occupying the same slot in both configurations
+        never goes down, and keeps its pair alive through the window
+        (make-before-break at port granularity).  A pair is dark only
+        when the new configuration routes over it and **no** circuit
+        survives in place — every circuit it will carry is still tuning.
+        Pairs that merely gain extra circuits, or lose some while others
+        stay put, keep serving; so the fabric that tracks demand with
+        incremental deltas (:mod:`~repro.core.incremental`) is not
+        charged a dark window on capacity it was already serving.  Pairs
+        the new configuration abandons entirely contribute zero capacity
+        either way and are not in the set.
+        """
+        new_live = (self.x > 0).any(axis=(0, 1))
+        new_live |= new_live.T
+        survived = ((self.x > 0) & (other.x > 0)).any(axis=(0, 1))
+        survived |= survived.T
+        dark = new_live & ~survived
+        ii, jj = np.nonzero(np.triu(dark))
         return frozenset(zip(ii.tolist(), jj.tolist()))
 
 

@@ -58,6 +58,7 @@ __all__ = [
     "CKPT_STATE_FACTOR",
     "PER_GPU_RESTORE_BW",
     "POLICIES",
+    "POLICY_CAUSE",
     "RESTART_FIXED_S",
     "REWIRE_AROUND",
     "SHRINK_COLLECTIVE",
@@ -77,6 +78,16 @@ SHRINK_COLLECTIVE = "shrink_collective"
 CKPT_RESTART = "ckpt_restart"
 CHEAPEST = "cheapest"  # per-victim argmin over the fluid-priced costs
 POLICIES = (REWIRE_AROUND, SHRINK_COLLECTIVE, CKPT_RESTART, CHEAPEST)
+
+# which blame bucket (repro.obs.attrib.JOB_CAUSES) each policy's cost
+# lands under when it is chosen for a victim — the scheduler stamps
+# this on every policy decision (series row + `policy` trace instant),
+# so attribution/dashboards can pivot decisions by consequence
+POLICY_CAUSE = {
+    REWIRE_AROUND: "rollback",  # no checkpoints: the run so far is lost
+    SHRINK_COLLECTIVE: "degraded",  # keeps running at a degraded rate
+    CKPT_RESTART: "restart",  # restore cost + checkpoint-tail rollback
+}
 
 # Checkpoint state vs bf16 gradient bytes: bf16 params (1×) + fp32 master
 # params (2×) + two fp32 Adam moments (4×) = 7× — the pytree
@@ -176,14 +187,33 @@ def mdmcf_degraded(spec, C: np.ndarray, old=None, mask: Optional[PortMask] = Non
         a_odd = np.stack([mask.allowed(h, 2 * t + 1) for t in range(K2)])
         ok = a_even & np.transpose(a_odd, (0, 2, 1))
         viol = np.einsum("cij,tij->ct", cint, (~ok).astype(np.int64))
-        cost = viol * (4 * P + 1)
+        # Violation weight is slack-aware.  With spare healthy slots to
+        # absorb every circuit the mask could strand, a violation merely
+        # becomes a salvage move — the same 4 array entries as relocating
+        # any other circuit — so pricing it at ~1.5 circuit-moves makes
+        # the assignment the true Min-Rewiring optimum: a scattered link
+        # failure drops the one stranded circuit instead of swapping whole
+        # color classes (48+ circuit moves) to route around a single dead
+        # slot.  When the budget is tight (spare < strandable), a dropped
+        # circuit risks staying unrealized, so violations go back to
+        # dominating everything (realization-first, the paper's objective
+        # hierarchy).
+        units = int(cint.sum())
+        healthy_cap = int(
+            np.minimum(ok.any(axis=2).sum(axis=1), ok.any(axis=1).sum(axis=1))
+            .sum()
+        )
+        masked_cap = K2 * P - healthy_cap
+        plentiful = healthy_cap - units >= max(masked_cap, 1)
+        cost = viol * 3 if plentiful else viol * (4 * P + 1)
         if old is not None:
             old_even = old.x[h, 0::2].astype(np.int64)
             old_odd = old.x[h, 1::2].astype(np.int64)
-            cost = cost - (
+            overlap = (
                 np.einsum("cij,tij->ct", cint, old_even)
                 + np.einsum("cji,tij->ct", cint, old_odd)
             )
+            cost = cost - (overlap * 2 if plentiful else overlap)
         classes, pairs = linear_sum_assignment(cost)
         rem = np.zeros((P, P), dtype=np.int64)  # dropped bidirectional units
         row_used = np.zeros((K2, P), dtype=bool)  # even-OCS egress taken

@@ -19,7 +19,28 @@ Everything is disabled-by-default and zero-dependency: a simulation
 without a tracer pays one attribute read per would-be event, and golden
 traces are byte-identical with tracing on or off
 (``tests/test_obs.py``).
+
+On top of the substrate sit the *explanation* layers:
+
+* :mod:`.attrib` — blame attribution: replays the recorded data and
+  splits every request's and job's measured slowdown into named causes
+  (queue, dark windows, solver, degraded capacity, φ-shortfall …) with
+  an exact conservation invariant;
+* :mod:`.health` — streaming detectors running inside the event loop
+  (SLO burn rate, φ-drop, dark-window storms, reconfig churn) emitting
+  ``HealthEvent`` instants plus the ``SimConfig.on_health`` hook.
 """
+from .attrib import (
+    AttribLog,
+    Blame,
+    CAUSES,
+    DARK_CAUSES,
+    JOB_CAUSES,
+    Segmentation,
+    attribute_jobs,
+    attribute_requests,
+)
+from .health import BurnWindow, HealthEvent, HealthMonitor
 from .metrics import (
     Counter,
     Gauge,
@@ -33,6 +54,7 @@ from .report import (
     BENCH_SCHEMA,
     bench_block,
     flatten_scalars,
+    render_blame,
     render_summary,
     render_timeline,
     write_bench_block,
@@ -40,21 +62,33 @@ from .report import (
 from .trace import NULL, NullTracer, Tracer, ambient, set_ambient, validate_trace
 
 __all__ = [
+    "AttribLog",
     "BENCH_SCHEMA",
+    "Blame",
+    "BurnWindow",
+    "CAUSES",
     "Counter",
+    "DARK_CAUSES",
     "Gauge",
+    "HealthEvent",
+    "HealthMonitor",
+    "JOB_CAUSES",
     "MetricsRegistry",
     "NULL",
     "NullTracer",
     "QuantileSketch",
+    "Segmentation",
     "Series",
     "Timeline",
     "Tracer",
     "ambient",
+    "attribute_jobs",
+    "attribute_requests",
     "bench_block",
     "dump_flight",
     "flatten_scalars",
     "flight_guard",
+    "render_blame",
     "render_summary",
     "render_timeline",
     "set_ambient",

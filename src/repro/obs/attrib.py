@@ -1,0 +1,491 @@
+"""Blame attribution: decompose measured slowdown into named causes.
+
+PR 6's flight recorder *records* everything — solve spans, dark windows,
+φ timelines, request phases — but explains nothing: when a serving
+request blows its SLO or a job's JCT regresses, the cause ("a
+dark-window storm from reconfig churn", "φ oversubscription", "a
+cold-solve fallback") is implicit in the trace and must be dug out by
+hand.  This module replays the recorded data and splits the measured
+slowdown of every request and every job into a fixed cause taxonomy
+(:data:`CAUSES`), with a hard **conservation invariant**: the per-cause
+seconds sum to the measured slowdown on every run, within 1e-6
+(``tests/test_attrib.py`` property-tests this over mixed train+serve
+fluid runs with faults, like the fluid differential suite).
+
+How conservation is *exact by construction*
+-------------------------------------------
+A serving request arriving at ``a`` with ideal (φ = 1) latency
+``work + α`` finishes its transfer at ``f`` with ``∫ₐᶠ φ dt = work``, so
+its slowdown is ``(f − a) − work = ∫ₐᶠ (1 − φ) dt``.  The attribution
+partitions ``[a, f]`` at every φ breakpoint and every recorded
+cause-interval boundary (dark windows, solve spans, degraded-mask
+intervals) and assigns each sub-segment's ``(1 − φ)·dt`` weight to
+exactly **one** cause by a fixed priority — the sub-segments are
+disjoint and exhaustive, so the per-cause sums reconstruct the integral
+identically.  Training jobs use the same scheme on their recorded
+progress-rate timeline: ``JCT − service = Σ gaps + Σ ∫(1 − rate) dt +
+Σ lost work``, each term cause-tagged (see :func:`attribute_jobs`).
+
+Cause priority (first match wins per sub-segment):
+
+1. ``queue`` — before the fleet's first φ breakpoint / a job's
+   not-running gaps (minus the portions below);
+2. ``autoscale_lag`` — inside a dark window whose reconfiguration was
+   triggered by an autoscale event (capacity arrived, fabric still
+   retuning);
+3. ``dark_incremental`` / ``dark_cold`` — inside a dark window opened
+   by an incremental (``mdmcf_delta``) vs cold re-solve;
+4. ``solver`` — inside a control-plane solve span (computation time);
+5. ``degraded`` — the fault mask was non-trivial (failure-degraded
+   capacity);
+6. ``phi_shortfall`` — residual φ < 1 from plain oversubscription.
+
+Plus the job-only causes ``restart`` (kill → ready recovery cost) and
+``rollback`` (work re-done after checkpoint rollback, from-scratch
+restarts, and the analytic engine's OCS switching pauses).
+
+The recording side is :class:`AttribLog`, populated by
+``sim/scheduler.py`` during the run (solve/dark/degraded intervals,
+per-job rate breakpoints, stints, restarts, lost work); the replay side
+is :func:`attribute_requests` / :func:`attribute_jobs`.
+
+>>> log = AttribLog()
+>>> log.dark_window(2.0, 4.0, "cold", "fault")
+>>> seg = Segmentation.for_timeline([(0.0, 1.0), (1.0, 0.5)], log, hi=6.0)
+>>> b = seg.blame_window(1.0, 5.0)          # ∫(1−φ) over [1, 5] = 2.0
+>>> round(b["dark_cold"], 9), round(b["phi_shortfall"], 9)
+(1.0, 1.0)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import metrics as obs_metrics
+
+__all__ = [
+    "AttribLog",
+    "Blame",
+    "CAUSES",
+    "JOB_CAUSES",
+    "Segmentation",
+    "attribute_jobs",
+    "attribute_requests",
+]
+
+# request-level causes, in classification priority order (queue is
+# special-cased first; phi_shortfall is the residual)
+CAUSES = (
+    "queue",
+    "autoscale_lag",
+    "dark_incremental",
+    "dark_cold",
+    "solver",
+    "degraded",
+    "phi_shortfall",
+)
+# jobs additionally lose time to recovery itself
+JOB_CAUSES = CAUSES + ("restart", "rollback")
+
+DARK_CAUSES = ("autoscale_lag", "dark_incremental", "dark_cold")
+
+
+class AttribLog:
+    """The attribution record one simulated run leaves behind.
+
+    Populated by the scheduler as it runs (never read on the hot path);
+    replayed afterwards by :func:`attribute_requests` /
+    :func:`attribute_jobs`.  All times are simulated seconds.
+    """
+
+    __slots__ = (
+        "solves", "dark", "degraded", "restarts", "lost", "stints", "rate",
+        "_degraded_open",
+    )
+
+    def __init__(self) -> None:
+        self.solves: List[Tuple[float, float, str, str]] = []  # t0,t1,kind,trigger
+        self.dark: List[Tuple[float, float, str, str]] = []  # t0,t1,kind,trigger
+        self.degraded: List[Tuple[float, float]] = []  # mask non-trivial
+        self.restarts: Dict[int, List[Tuple[float, float]]] = {}  # kill→ready
+        self.lost: Dict[int, List[Tuple[float, float, str]]] = {}  # t,work,cause
+        self.stints: Dict[int, List[List[float]]] = {}  # [t0, t1] (t1 nan=open)
+        self.rate = obs_metrics.Timeline("attrib.rate")  # jid → (t, 1/slowdown)
+        self._degraded_open: Optional[float] = None
+
+    # ---- recording (scheduler-facing) -----------------------------------
+
+    def solve(self, t0: float, t1: float, kind: str, trigger: str) -> None:
+        self.solves.append((t0, t1, kind, trigger))
+
+    def dark_window(self, t0: float, t1: float, kind: str, trigger: str) -> None:
+        self.dark.append((t0, t1, kind, trigger))
+
+    def degraded_begin(self, t: float) -> None:
+        if self._degraded_open is None:
+            self._degraded_open = t
+
+    def degraded_end(self, t: float) -> None:
+        if self._degraded_open is not None:
+            self.degraded.append((self._degraded_open, t))
+            self._degraded_open = None
+
+    def stint_begin(self, jid: int, t: float) -> None:
+        self.stints.setdefault(jid, []).append([t, math.nan])
+
+    def stint_end(self, jid: int, t: float) -> None:
+        spans = self.stints.get(jid)
+        if spans and math.isnan(spans[-1][1]):
+            spans[-1][1] = t
+
+    def restart(self, jid: int, kill_t: float, ready_t: float) -> None:
+        self.restarts.setdefault(jid, []).append((kill_t, ready_t))
+
+    def lose(self, jid: int, t: float, work_s: float, cause: str) -> None:
+        if work_s > 0.0:
+            self.lost.setdefault(jid, []).append((t, work_s, cause))
+
+    def close(self, t: float) -> None:
+        """End-of-run: close the open degraded interval and stints."""
+        self.degraded_end(t)
+        for spans in self.stints.values():
+            if spans and math.isnan(spans[-1][1]):
+                spans[-1][1] = t
+
+    # ---- cause intervals --------------------------------------------------
+
+    def cause_intervals(self) -> Dict[str, List[Tuple[float, float]]]:
+        """The recorded intervals grouped by the cause they attribute to
+        (dark windows split by trigger/kind per the priority rules)."""
+        out: Dict[str, List[Tuple[float, float]]] = {
+            "autoscale_lag": [], "dark_incremental": [], "dark_cold": [],
+            "solver": [(a, b) for a, b, _, _ in self.solves],
+            "degraded": list(self.degraded),
+        }
+        for t0, t1, kind, trigger in self.dark:
+            if trigger == "autoscale":
+                out["autoscale_lag"].append((t0, t1))
+            elif kind == "incremental":
+                out["dark_incremental"].append((t0, t1))
+            else:
+                out["dark_cold"].append((t0, t1))
+        return out
+
+
+@dataclasses.dataclass
+class Blame:
+    """One attributed entity: measured slowdown + its per-cause split.
+
+    ``residual`` is the conservation gap — |residual| stays below the
+    1e-6 invariant on every run (property-tested).
+    """
+
+    key: Any
+    slowdown_s: float
+    causes: Dict[str, float]
+
+    @property
+    def residual(self) -> float:
+        return self.slowdown_s - math.fsum(self.causes.values())
+
+    def conserved(self, tol: float = 1e-6) -> bool:
+        return math.isfinite(self.slowdown_s) and abs(self.residual) <= tol
+
+
+def _coverage(edges_mid: np.ndarray, intervals: Sequence[Tuple[float, float]]):
+    """True where a midpoint falls inside ≥ 1 (possibly overlapping)
+    interval — interval stabbing via sorted start/end counts."""
+    if not intervals:
+        return np.zeros(edges_mid.shape, dtype=bool)
+    starts = np.sort(np.array([a for a, _ in intervals]))
+    ends = np.sort(np.array([b for _, b in intervals]))
+    return (
+        np.searchsorted(starts, edges_mid, side="right")
+        - np.searchsorted(ends, edges_mid, side="right")
+    ) > 0
+
+
+class Segmentation:
+    """A φ (or rate) timeline partitioned at every cause boundary.
+
+    Precomputes per-cause cumulative ``∫(1 − φ)·[cause]`` arrays over the
+    partition so :meth:`blame_window` answers any ``[a, b]`` window in
+    O(log S) — the per-request attribution over thousands of requests is
+    vectorized interpolation, not a Python loop per request.
+    """
+
+    def __init__(
+        self,
+        edges: np.ndarray,
+        phi: np.ndarray,
+        cause_idx: np.ndarray,
+        causes: Tuple[str, ...],
+    ):
+        self.edges = edges  # (S+1,) segment boundaries
+        self.phi = phi  # (S,) φ per segment
+        self.cause_idx = cause_idx  # (S,) index into causes
+        self.causes = causes
+        w = (1.0 - phi) * np.diff(edges)  # (S,) slowdown weight
+        self._cum = np.zeros((len(causes), len(edges)))
+        for c in range(len(causes)):
+            self._cum[c, 1:] = np.cumsum(np.where(cause_idx == c, w, 0.0))
+
+    @classmethod
+    def for_timeline(
+        cls,
+        timeline: Sequence[Tuple[float, float]],
+        log: AttribLog,
+        hi: float,
+        lo: float = 0.0,
+    ) -> "Segmentation":
+        """Partition ``[lo, hi]`` for one piecewise-constant ``(t, φ)``
+        timeline against ``log``'s cause intervals.  Before the first
+        breakpoint φ = 0 and the cause is ``queue`` (the fleet/job is not
+        up yet); afterwards the priority rules of the module docstring
+        classify each segment."""
+        ivals = log.cause_intervals()
+        ts = np.array([t for t, _ in timeline], dtype=np.float64)
+        vs = np.array([v for _, v in timeline], dtype=np.float64)
+        cuts = [np.array([lo, hi]), ts]
+        for spans in ivals.values():
+            for a, b in spans:
+                cuts.append(np.array([a, b]))
+        edges = np.unique(np.concatenate(cuts))
+        edges = edges[(edges >= lo) & (edges <= hi)]
+        if edges.size == 0 or edges[0] > lo:
+            edges = np.concatenate([[lo], edges])
+        if edges[-1] < hi:
+            edges = np.concatenate([edges, [hi]])
+        mid = 0.5 * (edges[:-1] + edges[1:])
+        # φ per segment: piecewise constant from the timeline, 0 before
+        # its first breakpoint
+        if ts.size:
+            idx = np.searchsorted(ts, mid, side="right") - 1
+            phi = np.where(idx >= 0, vs[np.clip(idx, 0, None)], 0.0)
+            queued = mid < ts[0]
+        else:
+            phi = np.zeros(mid.shape)
+            queued = np.ones(mid.shape, dtype=bool)
+        causes = CAUSES
+        n_short = causes.index("phi_shortfall")
+        cause_idx = np.full(mid.shape, n_short, dtype=np.int64)
+        # reverse priority order so higher-priority assignments overwrite
+        for name in ("degraded", "solver", "dark_cold", "dark_incremental",
+                     "autoscale_lag"):
+            cov = _coverage(mid, ivals[name])
+            cause_idx[cov] = causes.index(name)
+        cause_idx[queued] = causes.index("queue")
+        return cls(edges, phi, cause_idx, causes)
+
+    def _eval(self, x: np.ndarray) -> np.ndarray:
+        """Per-cause cumulative weight at each ``x`` — exact within a
+        segment because φ and cause are constant there."""
+        x = np.clip(x, self.edges[0], self.edges[-1])
+        k = np.clip(
+            np.searchsorted(self.edges, x, side="right") - 1,
+            0, len(self.phi) - 1,
+        )
+        frac = (x - self.edges[k]) * (1.0 - self.phi[k])
+        out = self._cum[:, k]
+        out[self.cause_idx[k], np.arange(len(x))] += frac
+        return out  # (C, len(x))
+
+    def blame_windows(
+        self, a: np.ndarray, b: np.ndarray
+    ) -> Dict[str, np.ndarray]:
+        """Per-cause ``∫(1 − φ) dt`` over each window ``[a_i, b_i]``."""
+        lo, hi = self._eval(np.asarray(a, dtype=np.float64)), self._eval(
+            np.asarray(b, dtype=np.float64)
+        )
+        d = hi - lo
+        return {name: d[c] for c, name in enumerate(self.causes)}
+
+    def blame_window(self, a: float, b: float) -> Dict[str, float]:
+        per = self.blame_windows(np.array([a]), np.array([b]))
+        return {name: float(v[0]) for name, v in per.items()}
+
+
+# ---- serving requests -------------------------------------------------------
+
+def attribute_requests(sim, tol: float = 1e-6) -> Dict[str, Any]:
+    """Per-request blame decomposition of every serving fleet in ``sim``
+    (a finished :class:`~repro.sim.scheduler.Simulator`).
+
+    Regenerates each fleet's deterministic request stream exactly as
+    ``serving_summary`` does, prices each request against the recorded φ
+    timeline, and splits its slowdown (latency − ideal) across
+    :data:`CAUSES`.  Returns per-fleet rows (total per-cause seconds,
+    mean per request, the p99-tail breakdown — the mean split of the
+    slowest 1 % of requests) plus pooled totals and the conservation
+    check (``max_residual`` over every finite request must stay ≤
+    ``tol``).  Requests that never finish (φ stuck at 0) are excluded
+    and counted in ``stalled``.
+    """
+    from ..sim import serving as serving_mod  # lazy: obs sits below sim
+
+    log: AttribLog = sim.attrib
+    horizon = sim._end_time
+    rows: Dict[int, Dict[str, Any]] = {}
+    totals = {c: 0.0 for c in CAUSES}
+    pooled_blame: List[np.ndarray] = []  # (C, N) per fleet
+    pooled_lat: List[np.ndarray] = []
+    requests = finite = 0
+    max_residual = 0.0
+    for j in sim.jobs:
+        if j.kind != "serve":
+            continue
+        span = horizon - j.arrival
+        arrivals = (
+            serving_mod.serving_trace(
+                span, j.req_rate, seed=(sim.seed, j.job_id),
+                diurnal=j.diurnal, period_s=sim.cfg.serving_period_s,
+                t0=j.arrival,
+            )
+            if span > 0 and j.req_rate > 0 else np.empty(0)
+        )
+        work, alpha_s = sim._serving_work.get(j.job_id, (0.0, 0.0))
+        tl = sim.phi_timeline.get(j.job_id, ())
+        lat = serving_mod.request_latencies(arrivals, work, tl, alpha_s=alpha_s)
+        ok = np.isfinite(lat)
+        slow = serving_mod.request_slowdowns(lat[ok], work, alpha_s=alpha_s)
+        finish = arrivals[ok] + lat[ok] - alpha_s
+        hi = max(horizon, float(finish.max()) + 1.0 if finish.size else horizon)
+        seg = Segmentation.for_timeline(tl, log, hi=hi, lo=min(j.arrival, hi))
+        per = seg.blame_windows(arrivals[ok], finish)
+        mat = np.stack([per[c] for c in CAUSES]) if ok.any() else np.zeros(
+            (len(CAUSES), 0)
+        )
+        resid = (
+            float(np.abs(mat.sum(axis=0) - slow).max()) if slow.size else 0.0
+        )
+        max_residual = max(max_residual, resid)
+        blame = {c: float(per[c].sum()) for c in CAUSES}
+        row: Dict[str, Any] = {
+            "requests": int(lat.size),
+            "stalled": int(lat.size - ok.sum()),
+            "slowdown_s": float(slow.sum()),
+            "blame": blame,
+            "max_residual": resid,
+            "p99_blame": _tail_blame(lat[ok], mat),
+        }
+        rows[j.job_id] = row
+        for c in CAUSES:
+            totals[c] += blame[c]
+        pooled_blame.append(mat)
+        pooled_lat.append(lat[ok])
+        requests += int(lat.size)
+        finite += int(ok.sum())
+    all_mat = (
+        np.concatenate(pooled_blame, axis=1)
+        if pooled_blame else np.zeros((len(CAUSES), 0))
+    )
+    all_lat = np.concatenate(pooled_lat) if pooled_lat else np.empty(0)
+    return {
+        "jobs": rows,
+        "totals": totals,
+        "slowdown_s": float(math.fsum(totals.values())),
+        "requests": requests,
+        "finite": finite,
+        "stalled": requests - finite,
+        "max_residual": max_residual,
+        "conserved": max_residual <= tol,
+        "p99_blame": _tail_blame(all_lat, all_mat),
+    }
+
+
+def _tail_blame(lat: np.ndarray, mat: np.ndarray) -> Dict[str, float]:
+    """Mean per-cause seconds over the slowest 1 % of requests — "of the
+    p99 request's latency, X s is dark-window, Y s is φ-shortfall"."""
+    if lat.size == 0:
+        return {c: 0.0 for c in CAUSES}
+    cut = np.quantile(lat, 0.99)
+    tail = lat >= cut
+    n = max(1, int(tail.sum()))
+    return {
+        c: float(mat[k, tail].sum() / n) for k, c in enumerate(CAUSES)
+    }
+
+
+# ---- training jobs ----------------------------------------------------------
+
+def attribute_jobs(sim, tol: float = 1e-6) -> Dict[int, Blame]:
+    """Blame decomposition of every *finished* training job's slowdown
+    (``JCT − service_time``) in a finished simulator.
+
+    The identity replayed from the :class:`AttribLog`::
+
+        JCT − service = Σ gaps  +  Σ_stints ∫(1 − rate) dt  +  Σ lost
+
+    — gaps (not running) split into ``restart`` (kill → recovery-ready),
+    ``solver`` (overlapping control-plane solve spans) and ``queue``; stint
+    deficits are cause-partitioned exactly like request slowdown (the
+    recorded rate timeline plays the role of φ); lost work carries the
+    cause it was recorded with (``rollback`` for checkpoint rollbacks and
+    from-scratch restarts, ``dark_*`` for the analytic engine's OCS
+    switching pauses).  Conservation is exact because the recorded rate
+    breakpoints are the very values the scheduler integrated progress
+    with.
+    """
+    log: AttribLog = sim.attrib
+    out: Dict[int, Blame] = {}
+    solve_ivals = [(a, b) for a, b, _, _ in log.solves]
+    for jid, rec in sim.records.items():
+        if rec.job.kind == "serve" or not math.isfinite(rec.finish):
+            continue
+        causes = {c: 0.0 for c in JOB_CAUSES}
+        stints = [s for s in log.stints.get(jid, []) if not math.isnan(s[1])]
+        tl = log.rate.get(jid, ())
+        hi = max([rec.finish] + [s[1] for s in stints]) + 1.0
+        seg = Segmentation.for_timeline(tl, log, hi=hi, lo=rec.job.arrival)
+        # running stints: ∫(1 − rate) dt, cause-partitioned
+        for t0, t1 in stints:
+            for c, v in seg.blame_window(t0, t1).items():
+                if c == "queue":
+                    # rate breakpoints exist from the stint start, so the
+                    # pre-timeline "queue" bucket can only catch the
+                    # first stint's opening instant — fold it into queue
+                    causes["queue"] += v
+                else:
+                    causes[c] += v
+        # gaps: [arrival → stint0], [stint_k end → stint_{k+1} start]
+        recovery = log.restarts.get(jid, [])
+        bounds = [rec.job.arrival] + [
+            b for s in stints for b in s
+        ]
+        gaps = [
+            (bounds[i], bounds[i + 1]) for i in range(0, len(bounds) - 1, 2)
+        ]
+        for g0, g1 in gaps:
+            if g1 <= g0:
+                continue
+            rest = _overlap(g0, g1, recovery)
+            causes["restart"] += rest
+            solv = _overlap(g0, g1, solve_ivals)
+            causes["solver"] += min(solv, (g1 - g0) - rest)
+            causes["queue"] += max(0.0, (g1 - g0) - rest - min(
+                solv, (g1 - g0) - rest
+            ))
+        for _, work_s, cause in log.lost.get(jid, []):
+            causes[cause] = causes.get(cause, 0.0) + work_s
+        out[jid] = Blame(jid, rec.jct - rec.job.service_time, causes)
+    return out
+
+
+def _overlap(
+    a: float, b: float, intervals: Sequence[Tuple[float, float]]
+) -> float:
+    """Total length of ``[a, b]`` covered by (possibly overlapping)
+    intervals — swept via sorted boundary events."""
+    pts = sorted(
+        {a, b}
+        | {t for i0, i1 in intervals for t in (i0, i1) if a < t < b}
+    )
+    mids = [(0.5 * (pts[i] + pts[i + 1]), pts[i + 1] - pts[i])
+            for i in range(len(pts) - 1)]
+    return math.fsum(
+        w for m, w in mids
+        if any(i0 <= m < i1 for i0, i1 in intervals)
+    )

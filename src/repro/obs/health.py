@@ -1,0 +1,272 @@
+"""Streaming cluster health detectors (run *inside* the event loop).
+
+The attribution engine (:mod:`.attrib`) explains a run after the fact;
+this module detects trouble *while the run is live*, so decision layers
+— the ROADMAP's topology-aware router and reconfig-hysteresis policy —
+can subscribe to signals instead of re-deriving them from raw traces.
+The scheduler feeds a :class:`HealthMonitor` from its existing emit
+sites (φ breakpoints, dark-window creation, control-plane solves); the
+monitor is **passive** — it never touches simulation state, so goldens
+are byte-identical with or without it — and deterministic, keyed on
+simulated time only.
+
+Detectors (all thresholds are constructor parameters):
+
+* ``slo_burn`` — multi-window SLO burn rate per serving fleet.  φ below
+  ``1/serving_slo`` is *burning error budget* (a request needs mean φ ≥
+  1/slo across its transfer to meet the SLO), so the monitor tracks the
+  time-weighted bad fraction over a short and a long trailing window
+  and fires when **both** exceed the rule's burn threshold — the classic
+  fast-burn/slow-burn pair: the short window gives fast detection, the
+  long window keeps one transient spike from paging.
+* ``phi_drop`` — a serving fleet's realized φ collapses in one step
+  (ratio below ``phi_drop_ratio``): the signature of a failure or a
+  reconfiguration landing on its circuits.
+* ``dark_storm`` — circuit-seconds of reconfiguration darkness in a
+  sliding window exceed ``storm_circuit_s``: many circuits retuning at
+  once, the failure mode FastReChain warns shifting demand induces.
+* ``reconfig_churn`` — ≥ ``churn_solves`` control-plane solves in the
+  churn window with a cold-solve share ≥ ``churn_cold_frac``: the
+  incremental path is thrashing and dark windows are about to pile up.
+
+Every firing appends a :class:`HealthEvent`, emits a ``health``-category
+instant into the tracer (rendered as its own Perfetto track), and calls
+the ``on_event`` subscription hook (``SimConfig.on_health``).  Detectors
+re-arm only after their condition clears, so a sustained breach fires
+once, not per sample.
+
+>>> fired = []
+>>> mon = HealthMonitor(slo=4.0, on_event=fired.append)
+>>> for t in range(10):                     # healthy: φ = 1
+...     mon.observe_phi(float(t), 7, 1.0)
+>>> mon.observe_phi(10.0, 7, 0.05)          # collapse → phi_drop fires
+>>> [e.detector for e in fired]
+['phi_drop']
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import collections
+
+from . import trace as obs_trace
+
+__all__ = [
+    "BurnWindow",
+    "HealthEvent",
+    "HealthMonitor",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthEvent:
+    """One detector firing, on simulated time.
+
+    ``key`` scopes the signal (serving job id for per-fleet detectors,
+    ``None`` for cluster-wide ones); ``value`` / ``threshold`` record
+    what was measured against what, so subscribers can act proportionally
+    (e.g. a hysteresis policy backing off harder at 2× threshold).
+    """
+
+    t: float
+    detector: str  # slo_burn | phi_drop | dark_storm | reconfig_churn
+    severity: str  # warn | page
+    key: Optional[int] = None
+    value: float = 0.0
+    threshold: float = 0.0
+    window_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class BurnWindow:
+    """One multi-window burn-rate rule: fire ``severity`` when the
+    bad-time fraction over *both* trailing windows reaches ``frac``."""
+
+    short_s: float
+    long_s: float
+    frac: float
+    severity: str
+
+
+_DEFAULT_BURN = (
+    BurnWindow(60.0, 600.0, 0.5, "page"),  # half the last minute AND half
+    # of the last 10 minutes below SLO-φ: burning budget 50× too fast
+    BurnWindow(300.0, 3600.0, 0.1, "warn"),  # slow burn: 10 % of the last
+    # 5 min and hour — sustained degradation worth a look, not a page
+)
+
+
+class _BadClock:
+    """Per-key piecewise record of "φ below threshold" time, pruned to
+    the longest window any rule needs; O(log n) trailing integrals."""
+
+    __slots__ = ("seg", "keep_s")
+
+    def __init__(self, keep_s: float):
+        self.seg: Deque[Tuple[float, float, bool]] = collections.deque()
+        self.keep_s = keep_s
+
+    def push(self, t0: float, t1: float, bad: bool) -> None:
+        if t1 > t0:
+            self.seg.append((t0, t1, bad))
+        while self.seg and self.seg[0][1] < t1 - self.keep_s:
+            self.seg.popleft()
+
+    def bad_fraction(self, now: float, window_s: float) -> float:
+        lo = now - window_s
+        bad = total = 0.0
+        for t0, t1, b in self.seg:
+            a, c = max(t0, lo), min(t1, now)
+            if c > a:
+                total += c - a
+                if b:
+                    bad += c - a
+        # unobserved time in the window (fleet not up yet) is not counted
+        # against the budget
+        return bad / total if total > 0 else 0.0
+
+
+class HealthMonitor:
+    """Streaming detectors over the scheduler's emit sites (see module
+    docstring).  ``slo`` is the serving SLO multiplier the φ threshold
+    derives from (``phi_slo = 1/slo``); pass ``on_event`` to subscribe
+    (the ``SimConfig.on_health`` hook routes here)."""
+
+    def __init__(
+        self,
+        slo: float = 4.0,
+        burn_rules: Tuple[BurnWindow, ...] = _DEFAULT_BURN,
+        phi_drop_ratio: float = 0.5,
+        storm_window_s: float = 60.0,
+        storm_circuit_s: float = 10.0,
+        churn_window_s: float = 600.0,
+        churn_solves: int = 8,
+        churn_cold_frac: float = 0.5,
+        on_event: Optional[Callable[[HealthEvent], None]] = None,
+        tracer: Optional[obs_trace.NullTracer] = None,
+    ):
+        self.phi_slo = 1.0 / slo if slo > 0 else 1.0
+        self.burn_rules = tuple(burn_rules)
+        self.phi_drop_ratio = phi_drop_ratio
+        self.storm_window_s = storm_window_s
+        self.storm_circuit_s = storm_circuit_s
+        self.churn_window_s = churn_window_s
+        self.churn_solves = churn_solves
+        self.churn_cold_frac = churn_cold_frac
+        self.on_event = on_event
+        self.trace = tracer if tracer is not None else obs_trace.NULL
+        self.events: List[HealthEvent] = []
+        keep = max((r.long_s for r in self.burn_rules), default=3600.0)
+        self._keep_s = keep
+        self._clock: Dict[int, _BadClock] = {}
+        self._last_phi: Dict[int, Tuple[float, float]] = {}  # key → (t, φ)
+        self._burn_hot: Dict[Tuple[int, int], bool] = {}  # (key, rule) armed?
+        self._dark: Deque[Tuple[float, float]] = collections.deque()
+        self._solves: Deque[Tuple[float, str]] = collections.deque()
+        self._storm_hot = False
+        self._churn_hot = False
+
+    # ---- emission --------------------------------------------------------
+
+    def _fire(self, ev: HealthEvent) -> None:
+        self.events.append(ev)
+        tr = self.trace
+        if tr.enabled:
+            tr.instant(
+                "health", ev.detector, ts=ev.t,
+                severity=ev.severity, key=ev.key,
+                value=round(ev.value, 9), threshold=ev.threshold,
+                window_s=ev.window_s,
+            )
+        if self.on_event is not None:
+            self.on_event(ev)
+
+    # ---- detectors -------------------------------------------------------
+
+    def observe_phi(self, t: float, key: int, phi: float) -> None:
+        """A serving fleet's realized φ changed (a timeline breakpoint)."""
+        prev = self._last_phi.get(key)
+        self._last_phi[key] = (t, phi)
+        if prev is None:
+            return
+        t0, phi0 = prev
+        clock = self._clock.get(key)
+        if clock is None:
+            clock = self._clock[key] = _BadClock(self._keep_s)
+        clock.push(t0, t, phi0 < self.phi_slo)
+        # phi_drop: single-step collapse
+        if phi0 > 0 and phi <= self.phi_drop_ratio * phi0:
+            self._fire(HealthEvent(
+                t, "phi_drop", "page" if phi <= 0.0 else "warn", key=key,
+                value=phi / phi0 if phi0 > 0 else 0.0,
+                threshold=self.phi_drop_ratio,
+            ))
+        # slo_burn: both windows of a rule above its burn fraction
+        for n, rule in enumerate(self.burn_rules):
+            fs = clock.bad_fraction(t, rule.short_s)
+            fl = clock.bad_fraction(t, rule.long_s)
+            hot = min(fs, fl) >= rule.frac
+            was = self._burn_hot.get((key, n), False)
+            if hot and not was:
+                self._fire(HealthEvent(
+                    t, "slo_burn", rule.severity, key=key,
+                    value=min(fs, fl), threshold=rule.frac,
+                    window_s=rule.long_s,
+                ))
+            self._burn_hot[(key, n)] = hot
+
+    def observe_dark(
+        self, t: float, delay_s: float, pairs: int, kind: str
+    ) -> None:
+        """A reconfiguration opened dark windows: ``pairs`` pod pairs go
+        dark for ``delay_s`` starting at ``t``."""
+        self._dark.append((t, delay_s * pairs))
+        lo = t - self.storm_window_s
+        while self._dark and self._dark[0][0] < lo:
+            self._dark.popleft()
+        total = math.fsum(v for _, v in self._dark)
+        hot = total >= self.storm_circuit_s
+        if hot and not self._storm_hot:
+            self._fire(HealthEvent(
+                t, "dark_storm", "page", value=total,
+                threshold=self.storm_circuit_s,
+                window_s=self.storm_window_s,
+            ))
+        self._storm_hot = hot
+
+    def observe_solve(self, t: float, kind: str) -> None:
+        """The control plane solved (``kind`` = incremental | cold)."""
+        self._solves.append((t, kind))
+        lo = t - self.churn_window_s
+        while self._solves and self._solves[0][0] < lo:
+            self._solves.popleft()
+        n = len(self._solves)
+        cold = sum(1 for _, k in self._solves if k != "incremental")
+        hot = n >= self.churn_solves and cold / n >= self.churn_cold_frac
+        if hot and not self._churn_hot:
+            self._fire(HealthEvent(
+                t, "reconfig_churn", "warn", value=cold / n,
+                threshold=self.churn_cold_frac,
+                window_s=self.churn_window_s,
+            ))
+        self._churn_hot = hot
+
+    def finalize(self, t: float) -> None:
+        """End of run: flush each fleet's trailing φ segment so burn
+        fractions cover the full horizon (no event fires here — there is
+        no one left to page)."""
+        for key, (t0, phi) in self._last_phi.items():
+            clock = self._clock.get(key)
+            if clock is None:
+                clock = self._clock[key] = _BadClock(self._keep_s)
+            clock.push(t0, t, phi < self.phi_slo)
+            self._last_phi[key] = (t, phi)
+
+    # ---- introspection ---------------------------------------------------
+
+    def bad_fraction(self, key: int, now: float, window_s: float) -> float:
+        """Trailing bad-time fraction for one fleet (test/debug hook)."""
+        clock = self._clock.get(key)
+        return clock.bad_fraction(now, window_s) if clock else 0.0

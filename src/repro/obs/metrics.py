@@ -150,6 +150,42 @@ class QuantileSketch:
         midpoint is within a half-bin of the true value."""
         return math.sqrt(self._ratio) - 1.0
 
+    def compatible(self, other: "QuantileSketch") -> bool:
+        """True when ``other`` shares this sketch's bin layout (a
+        prerequisite for exact :meth:`merge`)."""
+        return (
+            isinstance(other, QuantileSketch)
+            and other.lo == self.lo
+            and other.hi == self.hi
+            and other.bins == self.bins
+        )
+
+    def merge(self, other: "QuantileSketch") -> "QuantileSketch":
+        """Fold ``other``'s observations into this sketch, in place.
+
+        Bin counts add exactly, so per-fleet sketches aggregate into
+        cluster-level percentiles without re-streaming the samples — the
+        merged quantile is identical to observing both streams into one
+        sketch.  Requires an identical bin layout (``lo``/``hi``/``bins``).
+
+        >>> a, b = QuantileSketch("a"), QuantileSketch("b")
+        >>> for v in (0.1, 0.2): a.observe(v)
+        >>> for v in (0.3, 0.4): b.observe(v)
+        >>> c = QuantileSketch("c")
+        >>> for v in (0.1, 0.2, 0.3, 0.4): c.observe(v)
+        >>> a.merge(b).quantile(0.5) == c.quantile(0.5)
+        True
+        """
+        if not self.compatible(other):
+            raise ValueError(
+                f"cannot merge sketch {other.name!r} into {self.name!r}: "
+                "bin layouts (lo/hi/bins) differ"
+            )
+        self._counts += other._counts
+        self.count += other.count
+        self.total += other.total
+        return self
+
     def _bin(self, v: float) -> int:
         if v < self.lo:
             return 0
@@ -249,12 +285,29 @@ class Timeline:
 
     def integrate(self, key, t0: float, t1: float) -> float:
         """∫ value dt over ``[t0, t1]`` for ``key`` (piecewise constant,
-        last value extends to ``t1``; 0 before the first breakpoint)."""
+        last value extends to ``t1``; 0 before the first breakpoint).
+
+        Exact on the edge cases the blame-attribution replay depends on
+        (:mod:`repro.obs.attrib`): a zero-width window (``t1 == t0``) is
+        exactly 0, zero-width segments (monotonized same-``t``
+        breakpoints) contribute exactly 0, and an *open-ended* final
+        segment integrates against ``t1 = inf`` without producing
+        ``inf · 0 = nan`` when the tail value is 0.
+
+        >>> tl = Timeline("phi"); tl.point("a", 0.0, 1.0)
+        >>> tl.point("a", 2.0, 0.0)  # tail goes dark
+        >>> tl.integrate("a", 0.0, math.inf)  # open-ended, not nan
+        2.0
+        >>> tl.integrate("a", 1.5, 1.5)  # zero-width window
+        0.0
+        """
         tl = self.series.get(key)
         if not tl or t1 <= t0:
             return 0.0
         total = 0.0
         for n, (t, v) in enumerate(tl):
+            if v == 0.0:
+                continue  # exact 0 even over an infinite tail segment
             seg_end = tl[n + 1][0] if n + 1 < len(tl) else t1
             a, b = max(t, t0), min(seg_end, t1)
             if b > a:

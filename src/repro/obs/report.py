@@ -18,6 +18,7 @@ Three consumers share this module:
 from __future__ import annotations
 
 import json
+import math
 import os
 from typing import Any, Dict, List, Optional
 
@@ -30,6 +31,7 @@ __all__ = [
     "BENCH_SCHEMA",
     "bench_block",
     "flatten_scalars",
+    "render_blame",
     "render_summary",
     "render_timeline",
     "write_bench_block",
@@ -111,6 +113,51 @@ def load_bench_rows(path: str) -> List[Dict[str, Any]]:
 
 
 # ---- human rendering --------------------------------------------------------
+
+def render_blame(
+    causes: Dict[str, float],
+    slowdown_s: Optional[float] = None,
+    title: str = "blame",
+    width: int = 32,
+) -> str:
+    """A blame decomposition (``repro.obs.attrib``) as an ASCII table:
+    one bar per cause, seconds and share of the total, largest first.
+
+    ``slowdown_s`` (the measured total) adds a conservation footer — the
+    residual versus the attributed sum, which the attribution engine
+    guarantees stays within 1e-6.
+
+    >>> print(render_blame({"queue": 3.0, "dark_cold": 1.0},
+    ...                    slowdown_s=4.0, width=8))
+    == blame ==
+    queue           3.000000 s  75.0% ######
+    dark_cold       1.000000 s  25.0% ##
+    total           4.000000 s  (residual +0.000e+00)
+    """
+    total = math.fsum(causes.values())
+    lines = [f"== {title} =="]
+    if not causes:
+        return lines[0] + "\n(no causes)"
+    cwidth = max(len(c) for c in causes)
+    order = sorted(causes, key=lambda c: (-causes[c], c))
+    denom = total if total > 0 else 1.0
+    for c in order:
+        v = causes[c]
+        share = v / denom
+        bar = "#" * max(0, int(round(share * width)))
+        if v > 0 and not bar:
+            bar = "#"  # a nonzero cause always shows at least one tick
+        lines.append(
+            f"{c:<{cwidth}} {v:>14.6f} s  {share:>5.1%} {bar}"
+        )
+    if slowdown_s is not None:
+        resid = slowdown_s - total
+        lines.append(
+            f"{'total':<{cwidth}} {slowdown_s:>14.6f} s  "
+            f"(residual {resid:+.3e})"
+        )
+    return "\n".join(lines)
+
 
 def render_summary(metrics: MetricsRegistry, title: str = "metrics") -> str:
     """A metrics snapshot as aligned ``key = value`` lines."""

@@ -56,8 +56,13 @@ CATEGORY_TIDS = {
     "job": 6,
     "flow": 7,
     "serving": 8,
+    "health": 9,
 }
 _PID = 1  # one synthetic process: "cluster"
+# export-time lane tids: category c's overflow lanes start here so they
+# never collide with another category's base tid
+_LANE_STRIDE = 100
+_OVERLAP_EPS = 1e-6  # µs slack absorbing the 3-decimal ts/dur rounding
 
 
 class NullTracer:
@@ -194,8 +199,62 @@ class Tracer(NullTracer):
 
     # ---- export ------------------------------------------------------------
 
+    def _assign_lanes(
+        self, body: List[Dict[str, Any]]
+    ) -> Tuple[List[Dict[str, Any]], Dict[int, str]]:
+        """Spread each category's spans over overlap-free sub-tracks.
+
+        Concurrent spans (overlapping requests, per-pair dark windows,
+        parallel jobs) cannot share a Chrome trace tid unless properly
+        nested — Perfetto renders partial overlap as garbage.  Walking
+        the ts-sorted body, each span goes to the first lane of its
+        category where it is either disjoint from every open span or
+        fully nested inside the innermost one; otherwise a new lane
+        opens.  Lane 0 keeps the category's base tid and bare name;
+        overflow lanes get ``base·100 + k`` and ``cat/k+1``.  The walk is
+        deterministic, so exports stay byte-identical across runs — and
+        :func:`validate_trace(..., strict=True)` passes by construction.
+        """
+        lanes: Dict[str, List[List[float]]] = {}  # cat → per-lane open-end stacks
+        names: Dict[int, str] = {}
+        out: List[Dict[str, Any]] = []
+        for ev in body:
+            cat = ev.get("cat", "?")
+            base = self._tid(cat)
+            if ev.get("ph") != "X":
+                names.setdefault(base, cat)
+                out.append(ev)
+                continue
+            ts, end = ev["ts"], ev["ts"] + ev.get("dur", 0.0)
+            stacks = lanes.setdefault(cat, [])
+            lane = None
+            for k, stack in enumerate(stacks):
+                while stack and stack[-1] <= ts + _OVERLAP_EPS:
+                    stack.pop()
+                if not stack or end <= stack[-1] + _OVERLAP_EPS:
+                    lane = k
+                    break
+            if lane is None:
+                lane = len(stacks)
+                stacks.append([])
+            stacks[lane].append(end)
+            tid = base if lane == 0 else base * _LANE_STRIDE + lane
+            names.setdefault(tid, cat if lane == 0 else f"{cat}/{lane + 1}")
+            if tid != ev["tid"]:
+                ev = {**ev, "tid": tid}
+            out.append(ev)
+        return out, names
+
     def chrome_trace(self) -> Dict[str, Any]:
         """The trace as a Chrome trace-event object (Perfetto-loadable)."""
+        # stable sort by timestamp keeps emission order within a tick —
+        # deterministic given a seeded simulation
+        body = sorted(self._events, key=lambda e: e["ts"])
+        body, lane_names = self._assign_lanes(body)
+        names = {
+            tid: cat for cat, tid in self._tids.items()
+        }  # categories seen only as instants still get their track named
+        names.update(lane_names)
         meta: List[Dict[str, Any]] = [
             {
                 "name": "process_name",
@@ -205,19 +264,16 @@ class Tracer(NullTracer):
                 "args": {"name": "cluster"},
             }
         ]
-        for cat, tid in sorted(self._tids.items(), key=lambda kv: kv[1]):
+        for tid in sorted(names):
             meta.append(
                 {
                     "name": "thread_name",
                     "ph": "M",
                     "pid": _PID,
                     "tid": tid,
-                    "args": {"name": cat},
+                    "args": {"name": names[tid]},
                 }
             )
-        # stable sort by timestamp keeps emission order within a tick —
-        # deterministic given a seeded simulation
-        body = sorted(self._events, key=lambda e: e["ts"])
         return {
             "traceEvents": meta + body,
             "displayTimeUnit": "ms",
@@ -262,10 +318,19 @@ def set_ambient(tracer: Optional[NullTracer]) -> NullTracer:
 _PHASES = {"X", "i", "M", "C"}
 
 
-def validate_trace(obj: Any) -> List[str]:
+def validate_trace(obj: Any, strict: bool = False) -> List[str]:
     """Validate ``obj`` against the Chrome trace-event schema Perfetto's
     JSON importer requires.  Returns a list of problems (empty = valid);
     the test suite and the CI obs smoke job assert it is empty.
+
+    ``strict=True`` additionally enforces what Perfetto needs to *render
+    sanely* rather than merely load: timestamps within each ``(pid,
+    tid)`` track must be non-decreasing, and ``X`` spans on one track may
+    nest (containment) but never partially overlap — partial overlap
+    draws as garbage.  :meth:`Tracer.chrome_trace` passes strict
+    validation by construction (it lane-splits concurrent spans), so a
+    strict failure means an emission bug, e.g. a ``HealthEvent`` stamped
+    with a stale or wall-clock timestamp.
     """
     problems: List[str] = []
     if not isinstance(obj, dict) or "traceEvents" not in obj:
@@ -273,6 +338,8 @@ def validate_trace(obj: Any) -> List[str]:
     events = obj["traceEvents"]
     if not isinstance(events, list):
         return ["'traceEvents' must be a list"]
+    last_ts: Dict[Tuple[Any, Any], float] = {}
+    open_spans: Dict[Tuple[Any, Any], List[Tuple[float, int]]] = {}
     for n, ev in enumerate(events):
         where = f"traceEvents[{n}]"
         if not isinstance(ev, dict):
@@ -299,4 +366,31 @@ def validate_trace(obj: Any) -> List[str]:
                 problems.append(f"{where}: X event needs dur >= 0")
         if "args" in ev and not isinstance(ev["args"], dict):
             problems.append(f"{where}: args must be an object")
+        if not strict or ph == "M":
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)):
+            continue
+        track = (ev.get("pid"), ev.get("tid"))
+        prev = last_ts.get(track)
+        if prev is not None and ts < prev - _OVERLAP_EPS:
+            problems.append(
+                f"{where}: ts {ts} out of order on track pid={track[0]} "
+                f"tid={track[1]} (previous ts {prev})"
+            )
+        last_ts[track] = max(ts, prev) if prev is not None else ts
+        if ph == "X" and isinstance(ev.get("dur"), (int, float)):
+            end = ts + ev["dur"]
+            stack = open_spans.setdefault(track, [])
+            while stack and stack[-1][0] <= ts + _OVERLAP_EPS:
+                stack.pop()
+            if stack and end > stack[-1][0] + _OVERLAP_EPS:
+                problems.append(
+                    f"{where}: X span [{ts}, {end}] partially overlaps "
+                    f"open span ending at {stack[-1][0]} "
+                    f"(traceEvents[{stack[-1][1]}]) on track "
+                    f"pid={track[0]} tid={track[1]}"
+                )
+                continue
+            stack.append((end, n))
     return problems

@@ -253,6 +253,7 @@ class FluidSim:
         capacity_events: Sequence[CapacityEvent] = (),
         slowdown_cap: object = _SPEC_CAP,
         tracer: Optional[obs_trace.NullTracer] = None,
+        health: Optional[object] = None,
     ):
         self.spec = spec
         self.architecture = architecture
@@ -277,6 +278,10 @@ class FluidSim:
         # Same Timeline instrument as ``Simulator.phi_timeline``: the two
         # engines share one φ-bookkeeping implementation.
         self.phi_history = obs_metrics.Timeline("fluid.phi")
+        # optional repro.obs.health.HealthMonitor: streamed the same φ
+        # breakpoints and dark windows the scheduler path feeds it, so
+        # detectors behave identically when this engine runs standalone
+        self.health = health
 
     def add_flow(self, flow: Flow) -> None:
         self.flows.append(flow)
@@ -328,6 +333,8 @@ class FluidSim:
                 a.record.min_phi = p
             if a.flow.latency_sensitive:
                 self.phi_history.point(a.flow.flow_id, now, p)
+                if self.health is not None:
+                    self.health.observe_phi(now, a.flow.flow_id, p)
         # rate = 1/(1 + α(1/φ − 1)); φ = 0 → stall (rate 0) unless α = 0
         rate = np.empty(F)
         live = phi > 0.0
@@ -425,6 +432,12 @@ class FluidSim:
                     )
                 if ev.downtime_s > 0 and ev.dark_pairs:
                     self._dark.add(ev.dark_pairs, t, t + ev.downtime_s)
+                    if self.health is not None:
+                        self.health.observe_dark(
+                            t, ev.downtime_s, len(ev.dark_pairs),
+                            "incremental" if ev.rewired is not None
+                            else "cold",
+                        )
                     rewired = (
                         ev.rewired if ev.rewired is not None
                         else len(ev.dark_pairs)
@@ -450,5 +463,7 @@ class FluidSim:
         if until is not None:
             last_t = until
         advance_all(last_t)
+        if self.health is not None:
+            self.health.finalize(last_t)
         return [self.records[f.flow_id] for f in self.flows
                 if f.flow_id in self.records]

@@ -73,7 +73,9 @@ from ..fault import (
     restart_cost_s,
     rollback_loss,
 )
-from ..fault.recover import RESTART_FIXED_S
+from ..fault.recover import POLICY_CAUSE, RESTART_FIXED_S
+from ..obs import attrib as obs_attrib
+from ..obs import health as obs_health
 from ..obs import metrics as obs_metrics
 from ..obs import recorder as obs_recorder
 from ..obs import trace as obs_trace
@@ -167,6 +169,12 @@ class SimConfig:
         default=None, compare=False, repr=False
     )  # span/event tracer on simulated time (None = tracing off; the
     # tracer is passive, so traces/goldens are byte-identical either way)
+    on_health: Optional[object] = dataclasses.field(
+        default=None, compare=False, repr=False
+    )  # HealthEvent subscription hook: a callable(HealthEvent) invoked
+    # on every streaming-detector firing (repro.obs.health).  Setting it
+    # (or attaching a tracer) activates the in-loop HealthMonitor; like
+    # the tracer it is passive — simulation results never change
 
     def __post_init__(self) -> None:
         if self.recovery_policy not in POLICIES:
@@ -374,6 +382,19 @@ class Simulator:
         self._c_dt_circ = m.counter("downtime.circuit_s")
         self._phi = m.timeline("serving.phi")
         self._requests_traced: set = set()  # job ids with request spans out
+        # ---- attribution + health (repro.obs.attrib / .health) -----------
+        # the AttribLog records what blame replay needs (solve/dark/
+        # degraded intervals, per-job rate breakpoints, stints, lost
+        # work); the HealthMonitor runs streaming detectors inside the
+        # event loop — both passive, results never change
+        self.attrib = obs_attrib.AttribLog()
+        self.health: Optional[obs_health.HealthMonitor] = None
+        if cfg.on_health is not None or self.trace.enabled:
+            self.health = obs_health.HealthMonitor(
+                slo=cfg.serving_slo,
+                on_event=cfg.on_health,  # type: ignore[arg-type]
+                tracer=self.trace,
+            )
         # ---- incremental control plane (repro.core.incremental) ----------
         self._coloring_state: Optional[ColoringState] = None
         self._last_incremental = False
@@ -384,6 +405,10 @@ class Simulator:
         if cfg.active_pods is not None:
             self.mask.set_active_count(cfg.active_pods)
             self.free[cfg.active_pods:] = 0
+        if not self.mask.is_trivial():
+            # expansion scenario: capacity-limited from t = 0 — blame
+            # replay treats the whole pre-expansion era as degraded
+            self.attrib.degraded_begin(0.0)
         self.fault_events: List[FaultEvent] = sorted(
             fault_events or [], key=lambda e: e.time
         )
@@ -683,6 +708,10 @@ class Simulator:
             r.record.min_phi = min(r.record.min_phi, p)
             if r.job.kind == "serve":
                 self._phi_point(now, jid, p)
+            else:
+                # blame replay integrates exactly these breakpoints —
+                # the progress-rate twin of the serving φ timeline
+                self.attrib.rate.point(jid, now, 1.0 / r.slowdown)
 
     def _phi_point(self, t: float, jid: int, phi: float) -> None:
         """Append a (t, φ) breakpoint to a serving job's realized-bandwidth
@@ -692,6 +721,8 @@ class Simulator:
         cannot diverge; monotonization (a start refresh can run slightly
         ahead of the event clock) lives in :meth:`Timeline.point`."""
         self._phi.point(jid, t, phi)
+        if self.health is not None:
+            self.health.observe_phi(t, jid, phi)
 
     # ---- serving fleets (repro.sim.serving) ------------------------------
 
@@ -862,6 +893,13 @@ class Simulator:
         r.record.lost_s += lost
         self._c_restarts.inc()
         self._c_lost.inc(lost * r.job.num_gpus)
+        # the job's progress is integrated through r.last_t, which can sit
+        # one solve-comp_s ahead of the fault's event time when a job start
+        # at the same timestamp already advanced the runners — the stint
+        # must cover exactly what was integrated or conservation breaks
+        self.attrib.stint_end(jid, max(now, r.last_t))
+        self.attrib.restart(jid, now, now + cost)
+        self.attrib.lose(jid, now, lost, "rollback")
         return now + cost
 
     def _replan_without_pod(self, job: Job, pods: Dict[int, int]):
@@ -929,14 +967,17 @@ class Simulator:
             slowdown_cap=self.spec.slowdown_cap,
         )
         chosen = min(sorted(costs), key=lambda p: costs[p])
+        cause = POLICY_CAUSE[chosen]  # blame bucket the cost lands under
         self._s_policy.append(
             {"t": now, "job_id": float(r.job.job_id),
-             "phi_shrunk": phi_shrunk, "policy": chosen, **costs}
+             "phi_shrunk": phi_shrunk, "policy": chosen, "cause": cause,
+             **costs}
         )
         if self.trace.enabled:
             self.trace.instant(
                 "policy", chosen, ts=now,
                 job_id=r.job.job_id, phi_shrunk=round(phi_shrunk, 9),
+                cause=cause,
                 **{k: round(costs[k], 6) for k in sorted(costs)},
             )
         return chosen
@@ -947,7 +988,14 @@ class Simulator:
         requeue: List[Tuple[float, int]] = []
         pod_was_up = self.mask.pod_up()
         was_active = self.mask.active.copy()
+        was_trivial = self.mask.is_trivial()
         apply_event(self.mask, ev)
+        # degraded-capacity bookkeeping for blame replay: the interval
+        # during which the fault mask is non-trivial
+        if was_trivial and not self.mask.is_trivial():
+            self.attrib.degraded_begin(now)
+        elif not was_trivial and self.mask.is_trivial():
+            self.attrib.degraded_end(now)
         if isinstance(ev, ExpandEvent):
             self._c_expand.inc()
             if self.trace.enabled:
@@ -1033,14 +1081,26 @@ class Simulator:
                 finish_version[r.job.job_id] = -1
                 return
             finish_version[r.job.job_id] = seq
-            heapq.heappush(ev, (now + rem, FINISH, seq, r.job.job_id))
+            # progress is valued at r.last_t, so under piecewise-constant
+            # slowdown the finish is last_t + rem regardless of `now`.
+            # Anchoring at `now` is wrong when a zero-comp_s start at the
+            # same event time reschedules runners already advanced to
+            # now + comp_s by an earlier start — the finish would land one
+            # comp_s early and break the blame-conservation identity.
+            heapq.heappush(
+                ev, (max(now, r.last_t + rem), FINISH, seq, r.job.job_id)
+            )
             seq += 1
 
         def reschedule_all(now: float):
             for r in self.running.values():
                 schedule_finish(now, r)
 
-        def reconfigure_now(now: float, skip_pause_for: Optional[int] = None):
+        def reconfigure_now(
+            now: float,
+            skip_pause_for: Optional[int] = None,
+            trigger: str = "start",
+        ):
             """Re-solve the control plane and price the switching.
 
             Analytic engine: the legacy OCS switching pause rolls back a
@@ -1055,6 +1115,11 @@ class Simulator:
             (the same instant the starting job's slowdown refresh runs)."""
             nonlocal seq
             config, comp_s = self._reconfigure(now)
+            kind = "incremental" if self._last_incremental else "cold"
+            if comp_s > 0:
+                self.attrib.solve(now, now + comp_s, kind, trigger)
+            if self.health is not None and config is not None:
+                self.health.observe_solve(now, kind)
             if self.old_config is not None and config is not None:
                 changed = (
                     self._last_rewired
@@ -1064,9 +1129,16 @@ class Simulator:
                 if changed and self.cfg.engine == "fluid":
                     delay = self.cfg.reconfig_delay_s
                     if delay > 0:
-                        pairs = config.changed_pairs(self.old_config)
+                        pairs = config.dark_pairs(self.old_config)
                         start = now + comp_s
                         self._dark.add(pairs, start, start + delay)
+                        self.attrib.dark_window(
+                            start, start + delay, kind, trigger
+                        )
+                        if self.health is not None:
+                            self.health.observe_dark(
+                                start, delay, len(pairs), kind
+                            )
                         self._c_dt_events.inc()
                         self._c_dt_s.inc(delay)
                         self._c_dt_circ.inc(delay * changed)
@@ -1086,10 +1158,18 @@ class Simulator:
                         heapq.heappush(ev, (start, REFRESH, seq, 0))
                         seq += 1
                 elif changed:
+                    dark_cause = (
+                        "dark_incremental" if kind == "incremental"
+                        else "dark_cold"
+                    )
                     for other in self.running.values():
                         if other.job.job_id != skip_pause_for:
-                            other.progress = max(
-                                0.0, other.progress - OCS_SWITCH_S
+                            pause = min(OCS_SWITCH_S, other.progress)
+                            other.progress -= pause
+                            # the analytic twin of a dark window: work
+                            # rolled back by the switching pause
+                            self.attrib.lose(
+                                other.job.job_id, now, pause, dark_cause
                             )
             self.old_config = config
             return comp_s
@@ -1135,6 +1215,8 @@ class Simulator:
             if math.isnan(rec.start):
                 rec.start = start_t  # first start only: JWT is queue wait
             run.last_t = start_t
+            if job.kind != "serve":
+                self.attrib.stint_begin(job.job_id, start_t)
             self._refresh_slowdowns(max(now, start_t), self.old_config)
             reschedule_all(max(now, start_t))
             return True
@@ -1154,6 +1236,8 @@ class Simulator:
                     r = self.running.pop(jid)
                     r.advance(t)
                     r.record.finish = t
+                    if r.job.kind != "serve":
+                        self.attrib.stint_end(jid, t)
                     if self.trace.enabled and math.isfinite(r.record.start):
                         self.trace.span(
                             "job", f"job{jid}:{r.job.kind}",
@@ -1184,7 +1268,14 @@ class Simulator:
                             seq += 1
                     # re-solve around the new mask; surviving jobs absorb the
                     # capacity change through the flow model
-                    reconfigure_now(t)
+                    reconfigure_now(
+                        t,
+                        trigger=(
+                            "autoscale"
+                            if isinstance(fe, serving_mod.ScaleEvent)
+                            else "fault"
+                        ),
+                    )
                     self._refresh_slowdowns(t, self.old_config)
                     reschedule_all(t)
                     while try_start(t):
@@ -1208,6 +1299,9 @@ class Simulator:
         self._end_time = last_t
         for r in self.running.values():
             r.advance(last_t)
+        self.attrib.close(last_t)
+        if self.health is not None:
+            self.health.finalize(last_t)
         self._cap_gpu_s += self._cap_gpus * (last_t - self._cap_t)
         self._cap_t = last_t
         for p, t0 in self._pod_down_since.items():

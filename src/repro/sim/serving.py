@@ -50,9 +50,11 @@ __all__ = [
     "KV_ALPHA_S",
     "ScaleEvent",
     "autoscale_events",
+    "ideal_latency_s",
     "pool_quantile",
     "request_latencies",
     "request_phases",
+    "request_slowdowns",
     "request_work_s",
     "serving_job",
     "serving_trace",
@@ -260,6 +262,33 @@ def request_latencies(
         else:
             finish[open_end] = math.inf
     return finish - arrivals + alpha_s
+
+
+def ideal_latency_s(work_s: float, alpha_s: float = KV_ALPHA_S) -> float:
+    """A request's latency on an uncontended φ = 1 fabric — the baseline
+    the attribution engine measures slowdown against (``work + α``, the
+    same quantity ``serving_summary`` scales the SLO from).
+
+    >>> ideal_latency_s(2.0, alpha_s=0.5)
+    2.5
+    """
+    return work_s + alpha_s
+
+
+def request_slowdowns(
+    latencies: np.ndarray, work_s: float, alpha_s: float = KV_ALPHA_S
+) -> np.ndarray:
+    """Per-request slowdown: actual − ideal latency.
+
+    This is the quantity the blame decomposition conserves —
+    ``latency − (work + α) = ∫ₐᶠ (1 − φ) dt`` over the request's
+    transfer window, which :mod:`repro.obs.attrib` partitions by cause.
+
+    >>> request_slowdowns(np.array([3.0, 2.5]), 2.0, alpha_s=0.5).tolist()
+    [0.5, 0.0]
+    """
+    lat = np.asarray(latencies, dtype=np.float64)
+    return lat - ideal_latency_s(work_s, alpha_s)
 
 
 def request_phases(

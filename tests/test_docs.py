@@ -24,6 +24,8 @@ DOCTEST_MODULES = [
     "repro.core.incremental",
     "repro.dist.demand",
     "repro.fault.masks",
+    "repro.obs.attrib",
+    "repro.obs.health",
     "repro.obs.metrics",
     "repro.obs.report",
     "repro.obs.trace",

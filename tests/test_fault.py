@@ -333,3 +333,37 @@ def test_apply_event_roundtrip():
     apply_event(m, RepairEvent(2.0, "link", h=1, k=2, pod=3))
     apply_event(m, RepairEvent(3.0, "pod", pod=5))
     assert m.is_trivial()
+
+
+def test_degraded_solver_salvages_instead_of_relocating():
+    """A single failed transceiver with unchanged demand is a *salvage*
+    problem: move the one stranded circuit to a spare healthy slot, not
+    relocate whole color classes.  The slack-aware assignment keeps the
+    rewiring (and the make-before-break dark set) near the physical
+    minimum, realizes the demand exactly, and is idempotent — re-solving
+    the same degraded state moves nothing (no reconfiguration churn)."""
+    spec = _spec(p=12, k=8)
+    H, P = 2, spec.num_pods
+    C = np.zeros((H, P, P), dtype=np.int64)
+    for i in range(P):  # symmetric ring demand: neighbours at ±1, ±3
+        for d in (1, 3):
+            j = (i + d) % P
+            C[:, i, j] += 1
+            C[:, j, i] += 1
+    healthy = mdmcf_reconfigure(spec, C).config
+    m = PortMask.healthy(spec, H)
+    m.fail_link(0, 0, 0)
+    Cd = degrade_demand(C, m)
+    res = mdmcf_degraded(spec, Cd, old=healthy, mask=m)
+    check_ilp_constraints(
+        spec, Cd, res.config, topology="cross_wiring", require_exact=False,
+        mask=m,
+    )
+    assert res.ltrr >= 1.0 - 1e-9  # plenty of slack: exact realization
+    # salvage, not wholesale relocation (one circuit strands; a pre-fix
+    # class-relocating assignment moved 48 circuit-ends / 12 dark pairs)
+    assert res.config.rewiring_distance(healthy) <= 16
+    assert len(res.config.dark_pairs(healthy)) <= 4
+    res2 = mdmcf_degraded(spec, Cd, old=res.config, mask=m)
+    assert res2.config.rewiring_distance(res.config) == 0
+    assert res2.config.dark_pairs(res.config) == frozenset()

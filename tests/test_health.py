@@ -1,0 +1,194 @@
+"""Tests for the streaming cluster health monitor (repro.obs.health).
+
+Each detector is driven with a synthetic signal that crosses its
+threshold, and the firing discipline is checked: fire once on the
+breach, stay silent while the condition persists (hot latch), re-arm
+only after it clears.  Plus the wiring: ``SimConfig.on_health``
+activates the monitor inside the scheduler, firings land in the tracer
+as ``health``-category instants, and attaching the monitor never
+perturbs simulation results (passivity).
+"""
+import math
+
+import pytest
+
+from repro import obs
+from repro.obs.health import BurnWindow, HealthEvent, HealthMonitor
+from repro.sim import SimConfig, Simulator, generate_trace
+
+P, K = 12, 8
+GPUS = P * K * K
+
+
+def _monitor(**kw):
+    fired = []
+    kw.setdefault("on_event", fired.append)
+    return HealthMonitor(**kw), fired
+
+
+# ---- phi_drop --------------------------------------------------------------
+
+def test_phi_drop_fires_on_collapse_not_on_drift():
+    mon, fired = _monitor(slo=4.0, phi_drop_ratio=0.5)
+    mon.observe_phi(0.0, 7, 1.0)
+    mon.observe_phi(1.0, 7, 0.9)   # mild drift: no event
+    assert fired == []
+    mon.observe_phi(2.0, 7, 0.4)   # 0.4 <= 0.5 · 0.9 → collapse
+    assert [e.detector for e in fired] == ["phi_drop"]
+    assert fired[0].severity == "warn" and fired[0].key == 7
+    assert fired[0].value == pytest.approx(0.4 / 0.9)
+    # a further slow decay from the already-low level is not a new drop
+    mon.observe_phi(3.0, 7, 0.35)
+    assert len(fired) == 1
+
+
+def test_phi_drop_to_zero_pages():
+    mon, fired = _monitor()
+    mon.observe_phi(0.0, 1, 1.0)
+    mon.observe_phi(1.0, 1, 0.0)
+    assert [(e.detector, e.severity) for e in fired] == [("phi_drop", "page")]
+
+
+# ---- slo_burn --------------------------------------------------------------
+
+FAST = BurnWindow(short_s=60.0, long_s=600.0, frac=0.5, severity="page")
+
+
+def test_slo_burn_fires_once_and_rearms_after_recovery():
+    mon, fired = _monitor(slo=4.0, burn_rules=(FAST,), phi_drop_ratio=0.0)
+    # φ = 0.2 < 1/slo = 0.25: burning budget from t=0
+    for t in range(0, 130, 10):
+        mon.observe_phi(float(t), 3, 0.2)
+    burns = [e for e in fired if e.detector == "slo_burn"]
+    assert len(burns) == 1, "sustained breach must fire once, not per sample"
+    assert burns[0].severity == "page"
+    assert burns[0].value >= 0.5 and burns[0].threshold == 0.5
+    # recovery: healthy φ long enough to clear both windows
+    for t in range(130, 1400, 10):
+        mon.observe_phi(float(t), 3, 1.0)
+    assert len([e for e in fired if e.detector == "slo_burn"]) == 1
+    # second breach after re-arm fires again
+    for t in range(1400, 2200, 10):
+        mon.observe_phi(float(t), 3, 0.2)
+    assert len([e for e in fired if e.detector == "slo_burn"]) == 2
+
+
+def test_slo_burn_needs_both_windows():
+    """A transient spike trips the short window but not the long one —
+    the multi-window rule must stay silent."""
+    mon, fired = _monitor(slo=4.0, burn_rules=(FAST,), phi_drop_ratio=0.0)
+    for t in range(0, 550, 10):            # 550 s healthy history
+        mon.observe_phi(float(t), 3, 1.0)
+    for t in range(550, 600, 10):          # 50 s bad: short-window frac
+        mon.observe_phi(float(t), 3, 0.2)  # ≈ 0.83, long-window ≈ 0.08
+    assert [e for e in fired if e.detector == "slo_burn"] == []
+
+
+def test_bad_fraction_ignores_unobserved_time():
+    mon, _ = _monitor(phi_drop_ratio=0.0)
+    mon.observe_phi(100.0, 5, 0.0)   # fleet comes up at t=100
+    mon.observe_phi(110.0, 5, 1.0)
+    # only 10 s observed; a 600 s window must not dilute the fraction
+    assert mon.bad_fraction(5, 110.0, 600.0) == pytest.approx(1.0)
+    assert mon.bad_fraction(99, 110.0, 600.0) == 0.0  # unknown key
+
+
+def test_finalize_flushes_trailing_segment():
+    mon, _ = _monitor(phi_drop_ratio=0.0)
+    mon.observe_phi(0.0, 2, 0.1)
+    assert mon.bad_fraction(2, 50.0, 100.0) == 0.0  # nothing pushed yet
+    mon.finalize(50.0)
+    assert mon.bad_fraction(2, 50.0, 100.0) == pytest.approx(1.0)
+
+
+# ---- dark_storm ------------------------------------------------------------
+
+def test_dark_storm_latches_and_cools():
+    mon, fired = _monitor(storm_window_s=60.0, storm_circuit_s=10.0)
+    mon.observe_dark(0.0, 0.1, 50, "incremental")    # 5 circuit-s
+    assert fired == []
+    mon.observe_dark(1.0, 0.1, 60, "cold")           # total 11 → storm
+    assert [e.detector for e in fired] == ["dark_storm"]
+    assert fired[0].severity == "page"
+    assert fired[0].value == pytest.approx(11.0)
+    mon.observe_dark(2.0, 0.1, 10, "cold")           # still hot: no refire
+    assert len(fired) == 1
+    mon.observe_dark(100.0, 0.1, 10, "cold")         # window slid: cooled
+    assert len(fired) == 1
+    mon.observe_dark(101.0, 0.1, 95, "cold")         # breach again → refire
+    assert len(fired) == 2
+
+
+# ---- reconfig_churn --------------------------------------------------------
+
+def test_reconfig_churn_needs_count_and_cold_share():
+    mon, fired = _monitor(
+        churn_window_s=600.0, churn_solves=8, churn_cold_frac=0.5,
+    )
+    for n in range(8):                       # 8 solves, all incremental
+        mon.observe_solve(float(n), "incremental")
+    assert fired == []                       # count met, cold share 0
+    for n in range(8, 16):                   # now 8 cold in the window
+        mon.observe_solve(float(n), "cold")
+    churn = [e for e in fired if e.detector == "reconfig_churn"]
+    assert len(churn) == 1
+    assert churn[0].severity == "warn"
+    assert churn[0].value >= 0.5
+
+
+# ---- emission / wiring -----------------------------------------------------
+
+def test_firings_land_in_tracer_as_health_instants():
+    tr = obs.Tracer()
+    mon = HealthMonitor(tracer=tr)
+    mon.observe_phi(0.0, 9, 1.0)
+    mon.observe_phi(1.0, 9, 0.0)
+    evs = tr.events("health")
+    assert len(evs) == 1 and evs[0]["ph"] == "i"
+    assert evs[0]["name"] == "phi_drop"
+    assert evs[0]["args"]["severity"] == "page"
+    assert evs[0]["args"]["key"] == 9
+    # and the event list mirrors it
+    assert [e.detector for e in mon.events] == ["phi_drop"]
+
+
+def test_health_event_fields_are_frozen():
+    ev = HealthEvent(1.0, "dark_storm", "page", value=2.0, threshold=1.0)
+    with pytest.raises(Exception):
+        ev.t = 2.0
+
+
+def _small_cfg(**kw):
+    return SimConfig(
+        architecture="cross_wiring", strategy="mdmcf",
+        num_pods=P, k_spine=K, k_leaf=K, engine="fluid",
+        reconfig_delay_s=0.01, **kw,
+    )
+
+
+def _small_jobs():
+    return generate_trace(
+        10, num_gpus=GPUS, workload_level=0.9, seed=3,
+        max_job_gpus=GPUS // 4, serving_jobs=1, serving_gpus=128,
+    )
+
+
+def test_on_health_hook_activates_monitor_and_stays_passive():
+    seen = []
+    sim = Simulator(_small_cfg(on_health=seen.append), _small_jobs())
+    assert sim.health is not None
+    assert sim.health.on_event is not None
+    recs = sim.run()
+    # every observed event also sits in the monitor's own list
+    assert seen == sim.health.events
+    # passivity: identical run without the monitor, same outcomes
+    plain = Simulator(_small_cfg(), _small_jobs())
+    assert plain.health is None
+    precs = plain.run()
+    assert [r.finish for r in recs] == [r.finish for r in precs]
+    assert [r.min_phi for r in recs] == [r.min_phi for r in precs]
+
+
+def test_tracer_alone_activates_monitor():
+    sim = Simulator(_small_cfg(tracer=obs.Tracer()), _small_jobs())
+    assert sim.health is not None and sim.health.on_event is None

@@ -329,3 +329,164 @@ def test_render_smoke(mixed):
     art = obs.render_timeline(tr)
     assert "solve" in art and "request" in art
     assert obs.render_timeline(obs.NULL) == "trace: (no events)"
+
+
+# ---- renderer golden text (exact output is the contract) -------------------
+
+def test_render_blame_golden():
+    causes = {
+        "dark_cold": 1.5,
+        "queue": 0.0,
+        "phi_shortfall": 0.5,
+        "degraded": 2.0,
+    }
+    expected = "\n".join([
+        "== blame ==",
+        "degraded            2.000000 s  50.0% ########",
+        "dark_cold           1.500000 s  37.5% ######",
+        "phi_shortfall       0.500000 s  12.5% ##",
+        "queue               0.000000 s   0.0% ",
+        "total               4.000000 s  (residual +0.000e+00)",
+    ])
+    assert obs.render_blame(causes, slowdown_s=4.0, width=16) == expected
+
+
+def test_render_blame_residual_and_tiny_share():
+    # a nonzero cause always gets ≥ one tick; the footer shows the
+    # conservation residual with its sign
+    out = obs.render_blame(
+        {"solver": 0.001, "queue": 99.999}, slowdown_s=101.0, width=8,
+    )
+    lines = out.splitlines()
+    assert lines[1] == "queue       99.999000 s  100.0% ########"
+    assert lines[2] == "solver       0.001000 s   0.0% #"
+    assert lines[3] == "total      101.000000 s  (residual +1.000e+00)"
+    assert obs.render_blame({}) == "== blame ==\n(no causes)"
+
+
+def test_render_summary_golden():
+    reg = obs.MetricsRegistry()
+    reg.counter("control.reconfigs").inc(3)
+    reg.gauge("fleet.phi").set(0.25)
+    expected = "\n".join([
+        "== metrics ==",
+        "control.reconfigs = 3",
+        "fleet.phi         = 0.25",
+    ])
+    assert obs.render_summary(reg) == expected
+    assert obs.render_summary(obs.MetricsRegistry()) == "metrics: (empty)"
+
+
+def test_render_timeline_golden():
+    tr = obs.Tracer()
+    for n in range(4):
+        tr.instant("fault", f"f{n}", ts=float(n))
+    tr.span("solve", "s", ts=0.0, dur=4.0)
+    # the tracer stamps µs (simulated seconds × 1e6): ts 0..3 s + a 4 s
+    # span give a 4-second horizon bucketed into 9 columns
+    expected = "\n".join([
+        "== trace ==  [0.0s .. 4.0s simulated]",
+        "fault |@ @ @ @  | 4 events",
+        "solve |@        | 1 events",
+    ])
+    assert obs.render_timeline(tr, width=9) == expected
+
+
+# ---- quantile-sketch merge -------------------------------------------------
+
+def test_sketch_merge_equals_combined_stream():
+    rng = np.random.default_rng(5)
+    xs = rng.lognormal(sigma=1.2, size=4000)
+    ys = rng.lognormal(mean=1.0, sigma=0.8, size=6000)
+    a = obs.QuantileSketch("a", lo=1e-4, hi=1e4, bins=256)
+    b = obs.QuantileSketch("b", lo=1e-4, hi=1e4, bins=256)
+    c = obs.QuantileSketch("c", lo=1e-4, hi=1e4, bins=256)
+    for v in xs:
+        a.observe(float(v))
+        c.observe(float(v))
+    for v in ys:
+        b.observe(float(v))
+        c.observe(float(v))
+    out = a.merge(b)
+    assert out is a  # in place, chainable
+    assert a.count == c.count == 10_000
+    assert a.total == pytest.approx(c.total)
+    for q in (0.01, 0.5, 0.9, 0.99):
+        assert a.quantile(q) == c.quantile(q), q  # bitwise: bins add
+
+
+def test_sketch_merge_rejects_layout_mismatch():
+    a = obs.QuantileSketch("a", lo=1e-3, hi=1e3, bins=64)
+    assert a.compatible(obs.QuantileSketch("x", lo=1e-3, hi=1e3, bins=64))
+    for bad in (
+        obs.QuantileSketch("lo", lo=1e-4, hi=1e3, bins=64),
+        obs.QuantileSketch("hi", lo=1e-3, hi=1e4, bins=64),
+        obs.QuantileSketch("bins", lo=1e-3, hi=1e3, bins=128),
+    ):
+        assert not a.compatible(bad)
+        with pytest.raises(ValueError, match="bin layouts"):
+            a.merge(bad)
+
+
+# ---- timeline integrate edge cases ----------------------------------------
+
+def test_timeline_integrate_edge_cases():
+    tl = obs.Timeline("phi")
+    tl.point("a", 1.0, 1.0)
+    tl.point("a", 3.0, 0.5)
+    tl.point("a", 3.0, 0.25)  # zero-width monotonized segment
+    # zero-width window and inverted bounds are exactly 0
+    assert tl.integrate("a", 2.0, 2.0) == 0.0
+    assert tl.integrate("a", 5.0, 2.0) == 0.0
+    # before the first breakpoint the value is 0
+    assert tl.integrate("a", 0.0, 1.0) == 0.0
+    # the zero-width (3.0, 0.5) segment contributes exactly 0
+    assert tl.integrate("a", 1.0, 5.0) == pytest.approx(2.0 + 0.25 * 2.0)
+    # open-ended tail: a zero tail value never yields inf · 0 = nan
+    tl.point("a", 5.0, 0.0)
+    got = tl.integrate("a", 1.0, math.inf)
+    assert got == pytest.approx(2.0 + 0.5) and not math.isnan(got)
+    # nonzero tail over an infinite window is inf, not nan
+    tl.point("b", 0.0, 1.0)
+    assert tl.integrate("b", 0.0, math.inf) == math.inf
+
+
+# ---- strict trace validation ----------------------------------------------
+
+def _ev(ts, dur=None, ph="i", pid=1, tid=1, name="e"):
+    ev = {"ph": ph, "ts": ts, "pid": pid, "tid": tid, "name": name,
+          "cat": "solve"}
+    if dur is not None:
+        ev.update(ph="X", dur=dur)
+    return ev
+
+
+def test_validate_trace_strict_rejects_out_of_order_ts():
+    doc = {"traceEvents": [_ev(5.0), _ev(1.0)]}
+    assert obs.validate_trace(doc) == []  # loadable
+    problems = obs.validate_trace(doc, strict=True)
+    assert len(problems) == 1 and "out of order" in problems[0]
+    # a different track is a different clock: no problem
+    ok = {"traceEvents": [_ev(5.0), _ev(1.0, tid=2)]}
+    assert obs.validate_trace(ok, strict=True) == []
+
+
+def test_validate_trace_strict_rejects_partial_overlap():
+    # [0, 10] then [5, 15] on one lane draws as garbage in Perfetto
+    doc = {"traceEvents": [_ev(0.0, dur=10.0), _ev(5.0, dur=10.0)]}
+    assert obs.validate_trace(doc) == []
+    problems = obs.validate_trace(doc, strict=True)
+    assert len(problems) == 1 and "partially overlaps" in problems[0]
+    # containment (nesting) is fine; so are back-to-back spans
+    nested = {"traceEvents": [
+        _ev(0.0, dur=10.0), _ev(2.0, dur=3.0), _ev(5.0, dur=5.0),
+        _ev(10.0, dur=4.0),
+    ]}
+    assert obs.validate_trace(nested, strict=True) == []
+
+
+def test_tracer_output_passes_strict_validation(mixed):
+    """chrome_trace() lane-splits concurrent spans, so the real tracer's
+    output must satisfy the strict renderability rules by construction."""
+    _, tr, b1, _ = mixed
+    assert obs.validate_trace(json.loads(b1), strict=True) == []

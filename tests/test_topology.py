@@ -92,3 +92,35 @@ def test_realized_bidirectional():
     cfg.x[0, 1, 1, 0] = 1  # now j->i exists too
     r = cfg.realized_bidirectional()
     assert r[0, 0, 1] == 1 and r[0, 1, 0] == 1
+
+
+def test_dark_pairs_is_make_before_break():
+    """The switching window darkens a pod pair only when NO circuit on
+    that pair survives in place (same group/OCS slot): a surviving
+    circuit keeps carrying traffic while its neighbours retune, and a
+    pair the new config doesn't route over has nothing to darken.
+    ``changed_pairs`` (any |Δx| on the pair) stays the conservative
+    superset used for pricing retune *work*."""
+    spec = ClusterSpec(num_pods=4, k_spine=2, k_leaf=8)
+    old = OCSConfig(spec, num_groups=1)
+    new = OCSConfig(spec, num_groups=1)
+    old.x[0, 0, 0, 1] = 1   # pair (0,1): two circuits …
+    old.x[0, 1, 0, 1] = 1
+    old.x[0, 0, 2, 3] = 1   # pair (2,3): one circuit on OCS 0
+    new.x[0, 0, 0, 1] = 1   # … one survives in place → (0,1) stays lit
+    new.x[0, 1, 0, 2] = 1   # new pair (0,2): must tune up → dark
+    new.x[0, 1, 2, 3] = 1   # (2,3) moved OCS 0 → 1: retunes → dark
+    assert new.dark_pairs(old) == frozenset({(0, 2), (2, 3)})
+    # the lost (0,1) circuit and the removals still count as retune work
+    assert new.rewiring_distance(old) == 4
+    assert (0, 1) in new.changed_pairs(old)
+    # identical configs: nothing retunes, nothing darkens
+    assert new.dark_pairs(new.copy()) == frozenset()
+    # direction is collapsed: a reverse-direction survivor keeps the
+    # undirected pair lit
+    rev = OCSConfig(spec, num_groups=1)
+    rev.x[0, 0, 1, 0] = 1
+    both = OCSConfig(spec, num_groups=1)
+    both.x[0, 0, 1, 0] = 1  # survives
+    both.x[0, 1, 0, 1] = 1  # forward circuit added on the same pair
+    assert both.dark_pairs(rev) == frozenset()
