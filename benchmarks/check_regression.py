@@ -26,6 +26,19 @@ fails when attaching the tracer costs more than (1 − min-ratio) of
 engine throughput — the no-op-when-disabled discipline is a measured
 property, not a comment.
 
+A fourth gate for the self-healing loop:
+
+    python benchmarks/check_regression.py --chaos \
+        artifacts/bench/BENCH_chaos.json
+
+re-derives the closed-loop invariants from the chaos sweep's rows (not
+the payload's ``checks``): for every scenario present on Cross Wiring,
+remediated time-based SLO availability must be ≥ passive (the engine
+never makes things worse), and every cell's blame decomposition must
+conserve within ``--tol`` — remediation actions (cordons, drains,
+pre-emptive checkpoints, solver escalations) spend seconds, and each
+one has to be attributed, not leaked into the residual.
+
 A third gate for the blame-attribution engine:
 
     python benchmarks/check_regression.py --attribution \
@@ -140,6 +153,49 @@ def check_attribution(path: str, tol: float) -> int:
     return 0
 
 
+def check_chaos(path: str, tol: float) -> int:
+    doc = _load(path)
+    rows = doc.get("rows", [])
+    if not rows:
+        print(f"check_regression,chaos: no rows in {path}", file=sys.stderr)
+        return 1
+    failures = []
+
+    worst = max(r.get("blame_max_residual", float("inf")) for r in rows)
+    if not worst <= tol:
+        failures.append(
+            f"blame conservation broken: max residual {worst:.3e} > {tol:g}"
+        )
+    print(f"check_regression,chaos,max_residual={worst:.3e}(tol {tol:g})")
+
+    cells = {(r["scenario"], r["arch"], r["mode"]): r for r in rows}
+    scenarios = sorted({r["scenario"] for r in rows})
+    for sc in scenarios:
+        p = cells.get((sc, "cross_wiring", "passive"))
+        r = cells.get((sc, "cross_wiring", "remediate"))
+        if p is None or r is None:
+            failures.append(f"{sc}: missing passive/remediate cross_wiring cell")
+            continue
+        print(
+            f"check_regression,chaos,{sc},"
+            f"avail_passive={p['availability']:.4f},"
+            f"avail_remediate={r['availability']:.4f},"
+            f"goodput_passive={p['goodput']:.4f},"
+            f"goodput_remediate={r['goodput']:.4f}"
+        )
+        if r["availability"] < p["availability"] - 1e-9:
+            failures.append(
+                f"{sc}: remediated availability {r['availability']:.4f} "
+                f"< passive {p['availability']:.4f} — the engine made "
+                f"things worse"
+            )
+    if failures:
+        print("CHAOS REGRESSION:", *failures, sep="\n  ", file=sys.stderr)
+        return 1
+    print("check_regression,chaos,ok")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current")
@@ -148,6 +204,7 @@ def main() -> int:
     ap.add_argument("--tracing-overhead", action="store_true")
     ap.add_argument("--min-ratio", type=float, default=0.95)
     ap.add_argument("--attribution", action="store_true")
+    ap.add_argument("--chaos", action="store_true")
     ap.add_argument("--tol", type=float, default=1e-6)
     args = ap.parse_args()
 
@@ -155,6 +212,8 @@ def main() -> int:
         return check_tracing_overhead(args.current, args.min_ratio)
     if args.attribution:
         return check_attribution(args.current, args.tol)
+    if args.chaos:
+        return check_chaos(args.current, args.tol)
     if args.baseline is None:
         ap.error("baseline is required unless --tracing-overhead")
 

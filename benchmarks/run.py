@@ -20,6 +20,7 @@ from repro.obs.report import write_bench_block
 
 from . import (
     bench_availability,
+    bench_chaos,
     bench_collectives,
     bench_control_plane,
     bench_fluid,
@@ -50,6 +51,10 @@ BENCHES = {
     "availability": (
         bench_availability,
         "ours: goodput under failures + live expansion",
+    ),
+    "chaos": (
+        bench_chaos,
+        "ours: self-healing vs passive under correlated/gray chaos",
     ),
     "control_plane": (
         bench_control_plane,
@@ -210,6 +215,20 @@ def _summarize(name: str, payload: dict) -> None:
                 f"{k}={v}" for k, v in checks.items()
                 if not isinstance(v, dict)
             )
+        )
+    elif name == "chaos":
+        for r in payload["rows"]:
+            print(
+                f"chaos,{r['scenario']},{r['arch']},{r['mode']},"
+                f"avail={r['availability']:.4f},goodput={r['goodput']:.4f},"
+                f"train={r['train_goodput']:.4f},dark_s={r['dark_s']:.0f},"
+                f"fallbacks={r['solver_fallbacks']}"
+            )
+        ck = payload["checks"]
+        print(
+            "chaos,checks,"
+            + ",".join(f"{k}={v}" for k, v in ck.items()
+                       if not isinstance(v, dict))
         )
     elif name == "collectives":
         for r in payload["rows"]:

@@ -125,7 +125,12 @@ def mdmcf_reconfigure(
     degraded budget (``demand_feasible(C, spec, mask)``) is still realized
     exactly in polynomial time — the healthy algorithm on a smaller slot
     set (argument spelled out in ``repro.fault.recover``).  Use
-    ``repro.fault.recover.degrade_demand`` to clip demand first.
+    ``repro.fault.recover.degrade_demand`` to clip demand first.  The
+    mask's blocked views fold *cordoned* slots (administratively excluded
+    by the remediation engine, ``repro.fault.remediate``) in with failed
+    ones, so a cordon is just a degraded solve the solver cannot tell
+    from a failure — and gray (derated) slots stay assignable here;
+    ``repro.fault.recover.mdmcf_degraded`` tie-breaks away from them.
     """
     t0 = time.perf_counter()
     C = np.asarray(C)

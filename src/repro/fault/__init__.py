@@ -1,15 +1,32 @@
 """Failure, repair & elastic-expansion resilience for the OCS cluster.
 
-``masks``   — :class:`PortMask`: which slots/OCSes/pods are usable now.
-``model``   — MTBF/MTTR renewal processes → timestamped event streams.
-``recover`` — degraded-mode demand clipping + recovery-policy cost models.
+``masks``     — :class:`PortMask`: which slots/OCSes/pods are usable now,
+plus the fractional per-link health layer gray failures derate.
+``model``     — MTBF/MTTR renewal processes → timestamped event streams.
+``chaos``     — scripted *correlated* and *gray* failure injection
+(top-of-pod bursts, SRLG cuts, flapping/derated links).
+``recover``   — degraded-mode demand clipping + recovery-policy cost models.
+``remediate`` — the closed-loop :class:`RemediationEngine` mapping health
+detections to actions (cordon, drain, pre-emptive checkpoint, solver
+escalation) with hysteresis and budgets.
 
 The degraded-mode solvers themselves live with their healthy-path twins in
 ``repro.core.reconfig`` (``mask=`` parameter); the event-driven scheduler
-(``repro.sim.scheduler``) consumes the event streams.
+(``repro.sim.scheduler``) consumes the event streams and exposes the
+actuators the remediation engine drives.
 """
+from .chaos import (
+    ChaosScenario,
+    flapping_link,
+    gray_derate,
+    scenario_events,
+    shared_risk_group,
+    standard_scenarios,
+    top_of_pod_burst,
+)
 from .masks import PortMask
 from .model import (
+    DerateEvent,
     ExpandEvent,
     FailureEvent,
     FaultEvent,
@@ -25,6 +42,7 @@ from .recover import (
     REWIRE_AROUND,
     SHRINK_COLLECTIVE,
     checkpoint_bytes,
+    ckpt_write_s,
     degrade_demand,
     masked_aggregate_demand,
     mdmcf_degraded,
@@ -32,10 +50,13 @@ from .recover import (
     restart_cost_s,
     rollback_loss,
 )
+from .remediate import RemediationEngine
 
 __all__ = [
     "CHEAPEST",
     "CKPT_RESTART",
+    "ChaosScenario",
+    "DerateEvent",
     "ExpandEvent",
     "FailureEvent",
     "FaultEvent",
@@ -43,15 +64,23 @@ __all__ = [
     "POLICIES",
     "PortMask",
     "REWIRE_AROUND",
+    "RemediationEngine",
     "RepairEvent",
     "SHRINK_COLLECTIVE",
     "apply_event",
     "checkpoint_bytes",
+    "ckpt_write_s",
     "degrade_demand",
+    "flapping_link",
+    "gray_derate",
     "masked_aggregate_demand",
     "mdmcf_degraded",
     "merge_events",
     "policy_costs",
     "restart_cost_s",
     "rollback_loss",
+    "scenario_events",
+    "shared_risk_group",
+    "standard_scenarios",
+    "top_of_pod_burst",
 ]

@@ -1,0 +1,272 @@
+"""Correlated and gray failure injection: scripted chaos scenarios.
+
+:mod:`repro.fault.model` draws *independent* renewal processes — every
+transceiver, OCS, and pod fails on its own clock.  Real optical plants
+do not fail that politely (ROADMAP item 5): a top-of-pod OCS power
+domain takes several switches of a spine group down *together*, links
+sharing a conduit are cut by the same excavator, and transceivers
+rarely die cleanly — they *flap* (bounce between up and down on a
+timescale of minutes) or run *gray* (alive, but carrying a fraction of
+nominal bandwidth).  This module scripts exactly those shapes as
+deterministic event streams over the same :class:`FailureEvent` /
+:class:`RepairEvent` / :class:`DerateEvent` vocabulary, so they compose
+with the independent background model via
+:func:`~repro.fault.model.merge_events` and drive the simulator
+unchanged.
+
+A :class:`ChaosScenario` is the declarative spec (burst size =
+correlation radius inside the spine group, flap period/duty, derate
+health, horizon); :func:`scenario_events` compiles it.  Any randomness
+(repair staggering) comes from a generator constructed from the
+scenario's own explicit seed — same hygiene as
+:meth:`~repro.fault.model.FaultModel.sample`.
+
+>>> sc = ChaosScenario(name="demo", horizon_s=100.0, burst_at_s=10.0,
+...                    burst_size=2, burst_repair_s=30.0)
+>>> evs = scenario_events(sc, k_spine=8)
+>>> [(e.time, type(e).__name__, e.k) for e in evs]
+[(10.0, 'FailureEvent', 0), (10.0, 'FailureEvent', 1), (40.0, 'RepairEvent', 0), (40.0, 'RepairEvent', 1)]
+>>> flap = ChaosScenario(name="f", horizon_s=50.0,
+...                      flap_links=((0, 2, 3),), flap_period_s=20.0)
+>>> [round(e.time, 1) for e in scenario_events(flap, k_spine=8)]
+[0.0, 10.0, 20.0, 30.0, 40.0, 50.0]
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .model import (
+    DerateEvent,
+    FailureEvent,
+    FaultEvent,
+    LINK,
+    OCS,
+    RepairEvent,
+    merge_events,
+)
+
+__all__ = [
+    "ChaosScenario",
+    "flapping_link",
+    "gray_derate",
+    "scenario_events",
+    "shared_risk_group",
+    "standard_scenarios",
+    "top_of_pod_burst",
+]
+
+Link = Tuple[int, int, int]  # (spine group h, OCS k, pod p)
+
+
+# ---- primitive generators ---------------------------------------------------
+
+def top_of_pod_burst(
+    t: float,
+    group: int,
+    first_ocs: int,
+    size: int,
+    repair_s: float,
+    k_spine: int,
+    stagger_s: float = 0.0,
+    seed: int = 0,
+) -> List[FaultEvent]:
+    """Correlated top-of-pod OCS loss: ``size`` consecutive OCSes of
+    spine group ``group`` (a shared power/cooling domain) fail at the
+    same instant ``t``.
+
+    ``size`` is the correlation radius — how far the blast extends along
+    the spine.  Repairs land after ``repair_s``, optionally staggered by
+    exponential jitter with mean ``stagger_s`` (field replacement is
+    serialized, not simultaneous) drawn from a generator seeded by
+    ``seed`` only."""
+    if not 0 < size <= k_spine:
+        raise ValueError("burst size must be in [1, k_spine]")
+    rng = np.random.default_rng(seed)
+    events: List[FaultEvent] = []
+    for n in range(size):
+        k = (first_ocs + n) % k_spine
+        jitter = float(rng.exponential(stagger_s)) if stagger_s > 0 else 0.0
+        events.append(FailureEvent(t, OCS, h=group, k=k))
+        events.append(RepairEvent(t + repair_s + jitter, OCS, h=group, k=k))
+    return merge_events(events)
+
+
+def shared_risk_group(
+    t: float, links: Tuple[Link, ...], repair_s: float
+) -> List[FaultEvent]:
+    """A shared-risk link group (SRLG) cut: every link riding the same
+    conduit/patch panel fails at ``t`` and is respliced together at
+    ``t + repair_s``."""
+    events: List[FaultEvent] = []
+    for h, k, p in links:
+        events.append(FailureEvent(t, LINK, h=h, k=k, pod=p))
+        events.append(RepairEvent(t + repair_s, LINK, h=h, k=k, pod=p))
+    return merge_events(events)
+
+
+def flapping_link(
+    link: Link,
+    t0: float,
+    until: float,
+    period_s: float,
+    duty: float = 0.5,
+) -> List[FaultEvent]:
+    """A gray *flapping* link: down for ``duty · period_s``, up for the
+    rest, repeating over ``[t0, until)``.  Every failure gets its paired
+    repair even when the last down-window crosses ``until`` (the
+    consumer can always pair them, like ``FaultModel.sample``)."""
+    if period_s <= 0:
+        raise ValueError("period_s must be > 0")
+    if not 0.0 < duty < 1.0:
+        raise ValueError("duty must be in (0, 1)")
+    h, k, p = link
+    events: List[FaultEvent] = []
+    t = t0
+    while t < until:
+        events.append(FailureEvent(t, LINK, h=h, k=k, pod=p))
+        events.append(RepairEvent(t + duty * period_s, LINK, h=h, k=k, pod=p))
+        t += period_s
+    return events
+
+
+def gray_derate(
+    link: Link, t0: float, until: float, health: float
+) -> List[FaultEvent]:
+    """A bandwidth-derated link: carries ``health`` × nominal bandwidth
+    over ``[t0, until)``, then returns to full health."""
+    h, k, p = link
+    return [
+        DerateEvent(t0, h=h, k=k, pod=p, health=health),
+        DerateEvent(until, h=h, k=k, pod=p, health=1.0),
+    ]
+
+
+# ---- declarative scenarios --------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChaosScenario:
+    """One scripted chaos scenario (compile with :func:`scenario_events`).
+
+    Components are optional and compose: a top-of-pod burst
+    (``burst_at_s`` set), a shared-risk link-group cut (``srlg_at_s``
+    set), gray flapping links (``flap_links`` non-empty), and gray
+    bandwidth-derated links (``derate_links`` non-empty).  Every field is
+    plain data so scenarios serialize into benchmark artifacts verbatim.
+    """
+
+    name: str
+    horizon_s: float
+    # correlated top-of-pod OCS burst
+    burst_at_s: Optional[float] = None
+    burst_group: int = 0
+    burst_first_ocs: int = 0
+    burst_size: int = 2  # correlation radius: OCSes darkened together
+    burst_repair_s: float = 3600.0
+    burst_stagger_s: float = 0.0  # mean repair-serialization jitter
+    # shared-risk link group
+    srlg_at_s: Optional[float] = None
+    srlg_links: Tuple[Link, ...] = ()
+    srlg_repair_s: float = 1800.0
+    # gray flapping links
+    flap_links: Tuple[Link, ...] = ()
+    flap_from_s: float = 0.0
+    flap_until_s: Optional[float] = None  # default: horizon_s
+    flap_period_s: float = 1200.0
+    flap_duty: float = 0.5
+    # gray bandwidth-derated links
+    derate_links: Tuple[Link, ...] = ()
+    derate_health: float = 0.5
+    derate_from_s: float = 0.0
+    derate_until_s: Optional[float] = None  # default: horizon_s
+
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.horizon_s <= 0:
+            raise ValueError("horizon_s must be > 0")
+
+
+def scenario_events(sc: ChaosScenario, k_spine: int) -> List[FaultEvent]:
+    """Compile ``sc`` into one time-sorted fault-event stream.
+
+    Deterministic given the scenario (randomness only through
+    ``sc.seed``); merge with a :meth:`FaultModel.sample
+    <repro.fault.model.FaultModel.sample>` background stream via
+    :func:`~repro.fault.model.merge_events` for correlated-bursts-on-
+    top-of-independent-noise runs."""
+    streams: List[List[FaultEvent]] = []
+    if sc.burst_at_s is not None:
+        streams.append(top_of_pod_burst(
+            sc.burst_at_s, sc.burst_group, sc.burst_first_ocs,
+            sc.burst_size, sc.burst_repair_s, k_spine,
+            stagger_s=sc.burst_stagger_s, seed=sc.seed,
+        ))
+    if sc.srlg_at_s is not None:
+        streams.append(shared_risk_group(
+            sc.srlg_at_s, sc.srlg_links, sc.srlg_repair_s
+        ))
+    if sc.flap_links:
+        until = sc.flap_until_s if sc.flap_until_s is not None else sc.horizon_s
+        for link in sc.flap_links:
+            streams.append(flapping_link(
+                link, sc.flap_from_s, until, sc.flap_period_s,
+                duty=sc.flap_duty,
+            ))
+    if sc.derate_links:
+        until = (
+            sc.derate_until_s if sc.derate_until_s is not None
+            else sc.horizon_s
+        )
+        for link in sc.derate_links:
+            streams.append(gray_derate(
+                link, sc.derate_from_s, until, sc.derate_health
+            ))
+    return merge_events(*streams)
+
+
+def standard_scenarios(
+    num_pods: int, k_spine: int, horizon_s: float
+) -> Tuple[ChaosScenario, ...]:
+    """The chaos-suite catalogue ``benchmarks/bench_chaos.py`` sweeps.
+
+    Three escalating regimes sized to the cluster: a correlated
+    top-of-pod burst alone, gray flapping links alone, and the
+    acceptance scenario — burst *plus* flapping plus derated links, the
+    compound failure a passive control plane handles worst (every flap
+    cycle forces a cold solve whose dark windows stall live circuits,
+    while the gray links silently derate whatever lands on them).
+
+    Scenarios use spine groups 0 and 1, so consumers need ``sim_groups
+    ≥ 2`` (the scheduler default)."""
+    flap = tuple(
+        (h, k % k_spine, p % num_pods)
+        for h, k, p in ((0, 1, 1), (0, 3, 2), (1, 2, 5), (0, 5, 7))
+    )
+    gray = tuple(
+        (h, k % k_spine, p % num_pods)
+        for h, k, p in ((1, 0, 3), (0, 2, 6))
+    )
+    return (
+        ChaosScenario(
+            name="top_of_pod_burst", horizon_s=horizon_s,
+            burst_at_s=0.2 * horizon_s, burst_size=max(2, k_spine // 4),
+            burst_repair_s=0.25 * horizon_s,
+        ),
+        ChaosScenario(
+            name="gray_flap", horizon_s=horizon_s,
+            flap_links=flap, flap_from_s=0.1 * horizon_s,
+            flap_period_s=600.0,
+        ),
+        ChaosScenario(
+            name="burst_flap", horizon_s=horizon_s,
+            burst_at_s=0.2 * horizon_s, burst_size=2,
+            burst_repair_s=0.25 * horizon_s,
+            flap_links=flap, flap_from_s=0.1 * horizon_s,
+            flap_period_s=600.0,
+            derate_links=gray, derate_health=0.4,
+            derate_from_s=0.1 * horizon_s,
+        ),
+    )

@@ -42,6 +42,16 @@ class PortMask:
       egress / ingress transceiver on OCS ``(h, k)`` dead.
     * ``drained[p]``          — pod ``p`` failed / taken out of service.
     * ``active[p]``           — pod ``p`` physically populated (expansion).
+    * ``cordoned[h, k, p]``   — pod ``p``'s slot on OCS ``(h, k)``
+      administratively removed from the TE demand (remediation of a
+      flapping link; see :mod:`repro.fault.remediate`).  Blocks both
+      directions, exactly like a dead transceiver, but is an operator
+      *decision*, not a hardware state — failures/repairs underneath a
+      cordon keep updating ``port_down_*`` independently.
+    * ``link_health[h, k, p]`` — fractional health of pod ``p``'s slot on
+      OCS ``(h, k)`` in ``(0, 1]``: a *gray* failure running bandwidth-
+      derated rather than dead.  Binary views ignore it; the flow engines
+      consume it through :meth:`effective_pair_capacity`.
 
     Mutators (``fail_*`` / ``repair_*`` / ``expand``) keep the layers
     independent; the control plane reads the combined view through
@@ -71,6 +81,8 @@ class PortMask:
         self.port_down_in = np.zeros((H, K, P), dtype=bool)
         self.drained = np.zeros(P, dtype=bool)
         self.active = np.ones(P, dtype=bool)
+        self.cordoned = np.zeros((H, K, P), dtype=bool)
+        self.link_health = np.ones((H, K, P), dtype=np.float64)
 
     @classmethod
     def healthy(cls, spec, num_groups: Optional[int] = None) -> "PortMask":
@@ -85,6 +97,8 @@ class PortMask:
         out.port_down_in = self.port_down_in.copy()
         out.drained = self.drained.copy()
         out.active = self.active.copy()
+        out.cordoned = self.cordoned.copy()
+        out.link_health = self.link_health.copy()
         return out
 
     # ---- mutators --------------------------------------------------------
@@ -120,6 +134,27 @@ class PortMask:
     def repair_pod(self, pod: int) -> None:
         self.drained[pod] = False
 
+    def cordon_link(self, h: int, k: int, pod: int) -> None:
+        """Administratively remove pod ``pod``'s slot on OCS ``(h, k)``
+        from the TE demand (both directions).  Idempotent."""
+        self.cordoned[h, k, pod] = True
+
+    def readmit_link(self, h: int, k: int, pod: int) -> None:
+        """Lift a cordon (the remediation engine's backoff expired and the
+        link stayed healthy)."""
+        self.cordoned[h, k, pod] = False
+
+    def derate_link(self, h: int, k: int, pod: int, health: float) -> None:
+        """Set the fractional health of pod ``pod``'s slot on OCS
+        ``(h, k)`` — a gray failure carrying ``health`` × its nominal
+        bandwidth.  ``health=1.0`` restores the slot to full health;
+        ``health=0`` is rejected (use :meth:`fail_link` for a dead slot,
+        so the *solver* routes around it instead of the flow model
+        discovering a zero-capacity circuit)."""
+        if not 0.0 < health <= 1.0:
+            raise ValueError("health must be in (0, 1]")
+        self.link_health[h, k, pod] = health
+
     def expand(self, pods: Iterable[int]) -> None:
         """Activate newly-populated pods (elastic expansion)."""
         for p in pods:
@@ -137,11 +172,12 @@ class PortMask:
         return self.active & ~self.drained
 
     def egress_blocked(self) -> np.ndarray:
-        """(H, K, P) bool — pod p's egress slot on OCS (h, k) unusable."""
-        return self.ocs_down[:, :, None] | self.port_down_eg
+        """(H, K, P) bool — pod p's egress slot on OCS (h, k) unusable
+        (dead hardware or an administrative cordon)."""
+        return self.ocs_down[:, :, None] | self.port_down_eg | self.cordoned
 
     def ingress_blocked(self) -> np.ndarray:
-        return self.ocs_down[:, :, None] | self.port_down_in
+        return self.ocs_down[:, :, None] | self.port_down_in | self.cordoned
 
     def clean_pairs(self, h: int) -> np.ndarray:
         """Pair indices ``t`` whose OCS pair ``(2t, 2t+1)`` in group ``h``
@@ -200,6 +236,8 @@ class PortMask:
             self.port_down_in,
             self.drained,
             self.active,
+            self.cordoned,
+            self.link_health,
         ):
             d.update(a.tobytes())
         return d.digest()
@@ -212,7 +250,34 @@ class PortMask:
             and not self.ocs_down.any()
             and not self.port_down_eg.any()
             and not self.port_down_in.any()
+            and not self.cordoned.any()
+            and not self.has_gray()
         )
+
+    def has_gray(self) -> bool:
+        """True iff any slot runs bandwidth-derated (link_health < 1)."""
+        return bool((self.link_health < 1.0).any())
+
+    def effective_pair_capacity(self, config) -> np.ndarray:
+        """(P, P) per-group-average bidirectional pair capacity of
+        ``config`` with gray slots derated.
+
+        A directed circuit i→j on OCS ``(h, k)`` carries
+        ``min(link_health[h, k, i], link_health[h, k, j])`` of its nominal
+        bandwidth (egress laser of i and ingress receiver of j share the
+        slot); the bidirectional pair capacity is the min of the two
+        directions, as in :meth:`OCSConfig.pair_capacity
+        <repro.core.topology.OCSConfig.pair_capacity>` — with all slots at
+        full health the two are identical."""
+        x = config.x  # (H', K, P, P) binary
+        Hp = x.shape[0]
+        w = np.minimum(
+            self.link_health[:Hp, :, :, None],
+            self.link_health[:Hp, :, None, :],
+        )
+        directed = (x * w).sum(axis=1)  # (H', P, P)
+        bidir = np.minimum(directed, directed.transpose(0, 2, 1))
+        return bidir.sum(axis=0) / max(1, Hp)
 
     def counts(self) -> Dict[str, int]:
         return {
@@ -220,6 +285,8 @@ class PortMask:
             "failed_ocs": int(self.ocs_down.sum()),
             "drained_pods": int(self.drained.sum()),
             "active_pods": int(self.active.sum()),
+            "cordoned_links": int(self.cordoned.sum()),
+            "derated_links": int((self.link_health < 1.0).sum()),
         }
 
     # ---- config validation ----------------------------------------------

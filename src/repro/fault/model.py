@@ -21,6 +21,7 @@ import numpy as np
 from .masks import PortMask
 
 __all__ = [
+    "DerateEvent",
     "ExpandEvent",
     "FailureEvent",
     "FaultEvent",
@@ -75,13 +76,35 @@ class ExpandEvent:
     pods: Tuple[int, ...]
 
 
-FaultEvent = Union[FailureEvent, RepairEvent, ExpandEvent]
+@dataclasses.dataclass(frozen=True)
+class DerateEvent:
+    """A *gray* failure: pod ``pod``'s slot on OCS ``(h, k)`` starts
+    carrying ``health`` × its nominal bandwidth at ``time``.
+
+    ``health=1.0`` restores the slot (the gray twin of a
+    :class:`RepairEvent`); always link-scoped — dead-clean failures use
+    :class:`FailureEvent` so the solver routes around them."""
+
+    time: float
+    h: int = 0
+    k: int = 0
+    pod: int = 0
+    health: float = 0.5
+
+    def __post_init__(self) -> None:
+        if not 0.0 < self.health <= 1.0:
+            raise ValueError("health must be in (0, 1]")
+
+
+FaultEvent = Union[FailureEvent, RepairEvent, ExpandEvent, DerateEvent]
 
 
 def apply_event(mask: PortMask, ev: FaultEvent) -> None:
     """Mutate ``mask`` to reflect ``ev``."""
     if isinstance(ev, ExpandEvent):
         mask.expand(ev.pods)
+    elif isinstance(ev, DerateEvent):
+        mask.derate_link(ev.h, ev.k, ev.pod, ev.health)
     elif isinstance(ev, FailureEvent):
         if ev.scope == LINK:
             mask.fail_link(ev.h, ev.k, ev.pod)
@@ -133,11 +156,20 @@ class FaultModel:
     def sample(self, horizon_s: float) -> List[FaultEvent]:
         """Draw every component's alternating up/down timeline to
         ``horizon_s`` and merge.  Repairs falling past the horizon are kept
-        so a consumer can always pair failures with repairs."""
-        rng = np.random.default_rng(self.seed)
+        so a consumer can always pair failures with repairs.
+
+        Each hardware class draws from its *own* ``np.random.Generator``,
+        spawned from one explicit :class:`numpy.random.SeedSequence` — no
+        shared (or module-level) stream.  Toggling one class's parameters
+        therefore cannot perturb another class's event times: the link
+        stream with ``pod_mtbf_s=None`` is bit-identical to the link
+        stream with pod failures enabled
+        (``tests/test_fault.py::test_fault_streams_independent_per_class``).
+        """
+        g_link, g_ocs, g_pod = np.random.SeedSequence(self.seed).spawn(3)
         events: List[FaultEvent] = []
 
-        def renewal(mtbf: float, mttr: float, make) -> None:
+        def renewal(rng, mtbf: float, mttr: float, make) -> None:
             t = float(rng.exponential(mtbf))
             while t < horizon_s:
                 down = float(rng.exponential(mttr))
@@ -148,10 +180,12 @@ class FaultModel:
 
         H, K, P = self.num_groups, self.k_spine, self.num_pods
         if self.link_mtbf_s is not None:
+            rng = np.random.default_rng(g_link)
             for h in range(H):
                 for k in range(K):
                     for p in range(P):
                         renewal(
+                            rng,
                             self.link_mtbf_s,
                             self.link_mttr_s,
                             lambda a, b, h=h, k=k, p=p: (
@@ -160,9 +194,11 @@ class FaultModel:
                             ),
                         )
         if self.ocs_mtbf_s is not None:
+            rng = np.random.default_rng(g_ocs)
             for h in range(H):
                 for k in range(K):
                     renewal(
+                        rng,
                         self.ocs_mtbf_s,
                         self.ocs_mttr_s,
                         lambda a, b, h=h, k=k: (
@@ -171,8 +207,10 @@ class FaultModel:
                         ),
                     )
         if self.pod_mtbf_s is not None:
+            rng = np.random.default_rng(g_pod)
             for p in range(P):
                 renewal(
+                    rng,
                     self.pod_mtbf_s,
                     self.pod_mttr_s,
                     lambda a, b, p=p: (

@@ -65,6 +65,7 @@ __all__ = [
     "CKPT_RESTART",
     "CHEAPEST",
     "checkpoint_bytes",
+    "ckpt_write_s",
     "degrade_demand",
     "masked_aggregate_demand",
     "mdmcf_degraded",
@@ -205,7 +206,9 @@ def mdmcf_degraded(spec, C: np.ndarray, old=None, mask: Optional[PortMask] = Non
         )
         masked_cap = K2 * P - healthy_cap
         plentiful = healthy_cap - units >= max(masked_cap, 1)
-        cost = viol * 3 if plentiful else viol * (4 * P + 1)
+        # primary costs are scaled ×16 so a sub-integer gray-health
+        # tie-break (below) can never reorder violation/overlap decisions
+        cost = (viol * 3 if plentiful else viol * (4 * P + 1)) * 16
         if old is not None:
             old_even = old.x[h, 0::2].astype(np.int64)
             old_odd = old.x[h, 1::2].astype(np.int64)
@@ -213,7 +216,20 @@ def mdmcf_degraded(spec, C: np.ndarray, old=None, mask: Optional[PortMask] = Non
                 np.einsum("cij,tij->ct", cint, old_even)
                 + np.einsum("cji,tij->ct", cint, old_odd)
             )
-            cost = cost - (overlap * 2 if plentiful else overlap)
+            cost = cost - (overlap * 2 if plentiful else overlap) * 16
+        if mask.has_gray():
+            # gray tie-break: among assignments with equal violation /
+            # overlap cost, steer color classes off bandwidth-derated
+            # links.  A circuit i→j on pair t rides 4 links — pods i and
+            # j on both the even and odd OCS — so its weight is the min
+            # health over those, matching ``effective_pair_capacity``.
+            lh = mask.link_health[h]
+            pod_min = np.minimum(lh[0::2], lh[1::2])  # (K2, P)
+            w = np.minimum(pod_min[:, :, None], pod_min[:, None, :])
+            gray = np.einsum("cij,tij->ct", cint, 1.0 - w)
+            gmax = float(gray.max())
+            if gmax > 0:
+                cost = cost + np.rint(gray * (15.0 / gmax)).astype(np.int64)
         classes, pairs = linear_sum_assignment(cost)
         rem = np.zeros((P, P), dtype=np.int64)  # dropped bidirectional units
         row_used = np.zeros((K2, P), dtype=bool)  # even-OCS egress taken
@@ -265,6 +281,15 @@ def checkpoint_bytes(model: str) -> float:
     prof = MODEL_PROFILES.get(model)
     grad = prof.grad_bytes if prof is not None else 14e9
     return CKPT_STATE_FACTOR * grad
+
+
+def ckpt_write_s(model: str, num_gpus: int) -> float:
+    """Wall seconds a running job pauses to write a full checkpoint:
+    sharded dump of the training state at ``PER_GPU_RESTORE_BW`` per
+    participating GPU (write and restore ride the same per-GPU storage
+    NICs).  No fixed reschedule term — the job stays scheduled.  This is
+    what the remediation engine prices a *pre-emptive* checkpoint at."""
+    return checkpoint_bytes(model) / (max(1, num_gpus) * PER_GPU_RESTORE_BW)
 
 
 def restart_cost_s(model: str, num_gpus: int) -> float:

@@ -1,0 +1,305 @@
+"""Closed-loop remediation: health detections → bounded repair actions.
+
+:mod:`repro.obs.health` *detects* trouble while a run is live; this
+module *acts* on it.  A :class:`RemediationEngine` subscribes as the
+scheduler's ``SimConfig.on_health`` hook; the scheduler recognizes the
+``bind`` method and hands the engine its actuator handle, closing the
+loop.  Every action is deferred through
+:meth:`~repro.sim.scheduler.Simulator.schedule_action` — detectors fire
+mid-refresh, so mutations run at top level as ``ACTION`` heap events, in
+deterministic order — and lands in the MetricsRegistry
+(``remediation.*`` counters), the trace (``remediation`` spans), and the
+blame ledger (causes ``remediation`` / ``cordon``).
+
+Action catalogue (each with hysteresis and a budget):
+
+* **cordon** (on ``link_flap``) — take the flapping slot out of TE
+  demand.  The slot stays physically up, but with no circuit on it the
+  next flap changes nothing the solver sees: re-solves become fixed
+  points (rewired = 0) and the flap-induced dark windows stop.
+  Readmission is exponential-backoff gated: the slot re-enters demand
+  only after staying healthy for ``cordon_base_s · 2^k`` (``k`` =
+  cordons/extensions of this slot so far); a failure inside the window
+  doubles it instead.  No flap-thrash, property-tested in
+  ``tests/test_remediate.py``.
+* **drain** (on ``slo_burn`` / ``dark_storm``) — reroute serving load
+  off the sickest pod (most active dark pairs + blocked slots + gray
+  links): its decode pods drain back to the allocator and the re-solve
+  drops its KV circuits.
+* **pre-emptive checkpoint** (same triggers) — burn rate predicts an SLO
+  breach or restart risk, so running training jobs advance their
+  rollback floor now, priced at the ``ckpt/manager`` write cost
+  (:func:`~repro.fault.recover.ckpt_write_s`).  Skipped under
+  ``rewire_around`` (no checkpoint infrastructure).
+* **solver escalation** (on ``solver_fallback``) — the incremental plane
+  is thrashing (StaleStateError → cold solve, repeatedly); pin it to the
+  degraded-mode solver for a bounded window so each solve pays one
+  predictable price.
+
+The engine itself is pure policy: all state mutation goes through the
+simulator's actuators, so conservation of blamed time stays exact.
+
+>>> eng = RemediationEngine(cordon_base_s=600.0)
+>>> [eng.backoff_s(k) for k in range(4)]
+[600.0, 1200.0, 2400.0, 4800.0]
+>>> eng.summary()["cordons"]
+0
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from .recover import REWIRE_AROUND
+
+__all__ = ["RemediationEngine"]
+
+_Slot = Tuple[int, int, int]  # (spine group h, OCS k, pod p)
+
+
+@dataclasses.dataclass
+class _Cordon:
+    """Per-slot cordon hysteresis state."""
+
+    slot: _Slot
+    strikes: int = 0  # cordons + in-window extensions so far (backoff k)
+    active: bool = False
+    since: float = -math.inf  # when the current cordon began
+    until: float = -math.inf  # earliest readmission instant
+
+
+class RemediationEngine:
+    """Maps :class:`~repro.obs.health.HealthEvent` firings to bounded
+    remediation actions (see module docstring).  Use as the
+    ``SimConfig.on_health`` hook; the scheduler calls :meth:`bind`.
+
+    Budgets are per run: at most ``max_cordoned`` slots cordoned at once,
+    ``max_drains`` pool drains, ``max_ckpts`` pre-emptive checkpoints,
+    ``max_solver_escalations`` degraded-solver windows; cooldowns keep a
+    noisy detector from spending a budget in one burst.
+    """
+
+    def __init__(
+        self,
+        cordon_base_s: float = 900.0,
+        max_cordoned: int = 8,
+        max_backoff_doublings: int = 16,
+        drain_cooldown_s: float = 1800.0,
+        max_drains: int = 8,
+        ckpt_cooldown_s: float = 3600.0,
+        max_ckpts: int = 16,
+        solver_window_s: float = 1800.0,
+        max_solver_escalations: int = 4,
+    ):
+        if cordon_base_s <= 0:
+            raise ValueError("cordon_base_s must be > 0")
+        self.cordon_base_s = cordon_base_s
+        self.max_cordoned = max_cordoned
+        self.max_backoff_doublings = max_backoff_doublings
+        self.drain_cooldown_s = drain_cooldown_s
+        self.max_drains = max_drains
+        self.ckpt_cooldown_s = ckpt_cooldown_s
+        self.max_ckpts = max_ckpts
+        self.solver_window_s = solver_window_s
+        self.max_solver_escalations = max_solver_escalations
+        self.sim = None  # set by bind()
+        self._cordons: Dict[_Slot, _Cordon] = {}
+        self._last_drain = -math.inf
+        self._last_ckpt = -math.inf
+        self._counts: Dict[str, int] = {
+            "cordons": 0, "extensions": 0, "readmits": 0,
+            "drains": 0, "ckpts": 0, "solver_escalations": 0,
+            "skipped_budget": 0,
+        }
+
+    # ---- wiring ----------------------------------------------------------
+
+    def bind(self, sim) -> None:
+        """Receive the actuator handle (called by ``Simulator.__init__``
+        when it recognizes this hook's ``bind`` attribute)."""
+        self.sim = sim
+
+    def __call__(self, ev) -> None:
+        """The ``on_health`` hook: dispatch one HealthEvent."""
+        if self.sim is None:
+            return
+        if ev.detector == "link_flap" and ev.detail is not None:
+            self._on_flap(ev)
+        elif ev.detector == "solver_fallback":
+            self._on_fallback(ev)
+        elif ev.detector in ("slo_burn", "dark_storm"):
+            self._on_burn(ev)
+
+    # ---- cordon with exponential-backoff readmission ---------------------
+
+    def backoff_s(self, strikes: int) -> float:
+        """Healthy-residency requirement before readmission: 2^k · base."""
+        return self.cordon_base_s * (
+            2.0 ** min(strikes, self.max_backoff_doublings)
+        )
+
+    def _active_cordons(self) -> int:
+        return sum(1 for st in self._cordons.values() if st.active)
+
+    def _on_flap(self, ev) -> None:
+        slot: _Slot = tuple(ev.detail)  # type: ignore[assignment]
+        st = self._cordons.setdefault(slot, _Cordon(slot))
+        if st.active:
+            return  # already out of demand; readmission check owns it
+        if self._active_cordons() >= self.max_cordoned:
+            self._counts["skipped_budget"] += 1
+            return
+        self.sim.schedule_action(
+            ev.t, lambda t, st=st: self._cordon(t, st), trigger="cordon"
+        )
+
+    def _cordon(self, t: float, st: _Cordon) -> bool:
+        if st.active or not self.sim.cordon_link(t, *st.slot):
+            return False
+        st.active = True
+        st.since = t
+        st.until = t + self.backoff_s(st.strikes)
+        st.strikes += 1
+        self._counts["cordons"] += 1
+        self.sim.schedule_action(
+            st.until, lambda tt, st=st: self._readmit(tt, st),
+            trigger="cordon",
+        )
+        return True
+
+    def _readmit(self, t: float, st: _Cordon) -> bool:
+        """Backoff expired: readmit only if the slot stayed healthy the
+        whole window — otherwise extend with a doubled backoff.  Faults
+        keep landing on the mask while cordoned, so relapse is visible
+        three ways: the slot is down/gray right now, it failed since the
+        cordon began, or its trailing flap window is still above the
+        detector threshold (the hot latch fires only once, so the window
+        must be read directly — a sustained flapper stays cordoned)."""
+        sim = self.sim
+        h, k, p = st.slot
+        mask = sim.mask
+        unhealthy = bool(
+            mask.port_down_eg[h, k, p] or mask.port_down_in[h, k, p]
+            or mask.ocs_down[h, k] or mask.link_health[h, k, p] < 1.0
+        )
+        still_hot = False
+        last = None
+        if sim.health is not None:
+            last = sim.health.last_link_failure(h, k, p)
+            still_hot = (
+                sim.health.flap_score(t, h, k, p) >= sim.health.flap_count
+            )
+        if unhealthy or still_hot or (last is not None and last > st.since):
+            st.since = t  # healthy-residency clock restarts now
+            st.until = t + self.backoff_s(st.strikes)
+            st.strikes += 1
+            self._counts["extensions"] += 1
+            sim.schedule_action(
+                st.until, lambda tt, st=st: self._readmit(tt, st),
+                trigger="cordon",
+            )
+            return False
+        st.active = False
+        if sim.readmit_link(t, *st.slot):
+            self._counts["readmits"] += 1
+            return True
+        return False
+
+    # ---- drain + pre-emptive checkpoint ----------------------------------
+
+    def _sickest_pod(self, t: float) -> Optional[int]:
+        """The pod to route serving load away from: most active dark
+        pairs touching it, plus blocked (down/cordoned) slots, plus gray
+        bandwidth shortfall."""
+        sim = self.sim
+        score = np.zeros(sim.cfg.num_pods)
+        for i, j in sim._dark.active(t):
+            score[i] += 1.0
+            score[j] += 1.0
+        blocked = sim.mask.egress_blocked() | sim.mask.ingress_blocked()
+        score += blocked.sum(axis=(0, 1))
+        score += (1.0 - sim.mask.link_health).sum(axis=(0, 1))
+        return int(np.argmax(score)) if float(score.max()) > 0 else None
+
+    def _on_burn(self, ev) -> None:
+        sim, t = self.sim, ev.t
+        if (
+            t - self._last_drain >= self.drain_cooldown_s
+            and self._counts["drains"] < self.max_drains
+        ):
+            pod = self._sickest_pod(t)
+            jid = self._drain_target(ev, pod)
+            if jid is not None:
+                self._last_drain = t
+                self._counts["drains"] += 1
+                sim.schedule_action(
+                    t,
+                    lambda tt, j=jid, p=pod: sim.remediate_drain(tt, j, p),
+                    trigger="remediation",
+                )
+        elif self._counts["drains"] >= self.max_drains:
+            self._counts["skipped_budget"] += 1
+        if (
+            sim.cfg.recovery_policy != REWIRE_AROUND
+            and t - self._last_ckpt >= self.ckpt_cooldown_s
+            and self._counts["ckpts"] < self.max_ckpts
+        ):
+            jids = [
+                j for j, r in sorted(sim.running.items())
+                if r.job.kind != "serve"
+            ]
+            if jids:
+                self._last_ckpt = t
+                for j in jids[: self.max_ckpts - self._counts["ckpts"]]:
+                    self._counts["ckpts"] += 1
+                    sim.schedule_action(
+                        t,
+                        lambda tt, jj=j: sim.preempt_checkpoint(tt, jj),
+                        trigger="remediation",
+                    )
+
+    def _drain_target(self, ev, pod: Optional[int]) -> Optional[int]:
+        """The serving fleet to drain off ``pod``: the burning fleet
+        itself when it decodes there, else the first (deterministic) one
+        that does and can spare a decode pod."""
+        if pod is None:
+            return None
+        sim = self.sim
+        if ev.detector == "slo_burn" and ev.key is not None:
+            r = sim.running.get(ev.key)
+            if (
+                r is not None and pod in r.decode_pods
+                and len(r.decode_pods) > 1
+            ):
+                return ev.key
+        for j, r in sorted(sim.running.items()):
+            if (
+                r.job.kind == "serve" and pod in r.decode_pods
+                and len(r.decode_pods) > 1
+            ):
+                return j
+        return None
+
+    # ---- solver escalation -----------------------------------------------
+
+    def _on_fallback(self, ev) -> None:
+        if self._counts["solver_escalations"] >= self.max_solver_escalations:
+            self._counts["skipped_budget"] += 1
+            return
+        self._counts["solver_escalations"] += 1
+        self.sim.schedule_action(
+            ev.t,
+            lambda t: self.sim.escalate_solver(t, self.solver_window_s),
+            trigger="remediation",
+        )
+
+    # ---- introspection ---------------------------------------------------
+
+    def summary(self) -> Dict[str, int]:
+        """Action counts of the run (benchmark artifact material)."""
+        out = dict(self._counts)
+        out["active_cordons"] = self._active_cordons()
+        return out

@@ -33,16 +33,25 @@ Cause priority (first match wins per sub-segment):
 2. ``autoscale_lag`` — inside a dark window whose reconfiguration was
    triggered by an autoscale event (capacity arrived, fabric still
    retuning);
-3. ``dark_incremental`` / ``dark_cold`` — inside a dark window opened
+3. ``remediation`` — inside a dark window opened by a remediation
+   action (drain-and-reroute, pre-emptive checkpoint re-solve: the
+   self-healing loop's own footprint, charged to itself, never hidden
+   in the generic dark buckets);
+4. ``dark_incremental`` / ``dark_cold`` — inside a dark window opened
    by an incremental (``mdmcf_delta``) vs cold re-solve;
-4. ``solver`` — inside a control-plane solve span (computation time);
-5. ``degraded`` — the fault mask was non-trivial (failure-degraded
+5. ``solver`` — inside a control-plane solve span (computation time);
+6. ``cordon`` — a cordon-triggered dark window, or any interval during
+   which ≥ 1 link sat administratively cordoned (capacity voluntarily
+   withheld by the remediation engine);
+7. ``degraded`` — the fault mask was non-trivial (failure-degraded
    capacity);
-6. ``phi_shortfall`` — residual φ < 1 from plain oversubscription.
+8. ``phi_shortfall`` — residual φ < 1 from plain oversubscription.
 
 Plus the job-only causes ``restart`` (kill → ready recovery cost) and
 ``rollback`` (work re-done after checkpoint rollback, from-scratch
 restarts, and the analytic engine's OCS switching pauses).
+``remediation`` also carries job work paused for pre-emptive
+checkpoints (:meth:`AttribLog.lose` with cause ``remediation``).
 
 The recording side is :class:`AttribLog`, populated by
 ``sim/scheduler.py`` during the run (solve/dark/degraded intervals,
@@ -81,9 +90,11 @@ __all__ = [
 CAUSES = (
     "queue",
     "autoscale_lag",
+    "remediation",
     "dark_incremental",
     "dark_cold",
     "solver",
+    "cordon",
     "degraded",
     "phi_shortfall",
 )
@@ -103,7 +114,7 @@ class AttribLog:
 
     __slots__ = (
         "solves", "dark", "degraded", "restarts", "lost", "stints", "rate",
-        "_degraded_open",
+        "cordons", "_degraded_open", "_cordon_open", "_cordon_depth",
     )
 
     def __init__(self) -> None:
@@ -114,7 +125,10 @@ class AttribLog:
         self.lost: Dict[int, List[Tuple[float, float, str]]] = {}  # t,work,cause
         self.stints: Dict[int, List[List[float]]] = {}  # [t0, t1] (t1 nan=open)
         self.rate = obs_metrics.Timeline("attrib.rate")  # jid → (t, 1/slowdown)
+        self.cordons: List[Tuple[float, float]] = []  # ≥ 1 link cordoned
         self._degraded_open: Optional[float] = None
+        self._cordon_open: Optional[float] = None
+        self._cordon_depth = 0
 
     # ---- recording (scheduler-facing) -----------------------------------
 
@@ -133,6 +147,19 @@ class AttribLog:
             self.degraded.append((self._degraded_open, t))
             self._degraded_open = None
 
+    def cordon_begin(self, t: float) -> None:
+        """A link was cordoned (ref-counted: the interval stays open
+        while *any* link is cordoned)."""
+        self._cordon_depth += 1
+        if self._cordon_depth == 1:
+            self._cordon_open = t
+
+    def cordon_end(self, t: float) -> None:
+        self._cordon_depth = max(0, self._cordon_depth - 1)
+        if self._cordon_depth == 0 and self._cordon_open is not None:
+            self.cordons.append((self._cordon_open, t))
+            self._cordon_open = None
+
     def stint_begin(self, jid: int, t: float) -> None:
         self.stints.setdefault(jid, []).append([t, math.nan])
 
@@ -149,8 +176,13 @@ class AttribLog:
             self.lost.setdefault(jid, []).append((t, work_s, cause))
 
     def close(self, t: float) -> None:
-        """End-of-run: close the open degraded interval and stints."""
+        """End-of-run: close the open degraded/cordon intervals and
+        stints."""
         self.degraded_end(t)
+        if self._cordon_open is not None:
+            self.cordons.append((self._cordon_open, t))
+            self._cordon_open = None
+            self._cordon_depth = 0
         for spans in self.stints.values():
             if spans and math.isnan(spans[-1][1]):
                 spans[-1][1] = t
@@ -161,13 +193,19 @@ class AttribLog:
         """The recorded intervals grouped by the cause they attribute to
         (dark windows split by trigger/kind per the priority rules)."""
         out: Dict[str, List[Tuple[float, float]]] = {
-            "autoscale_lag": [], "dark_incremental": [], "dark_cold": [],
+            "autoscale_lag": [], "remediation": [],
+            "dark_incremental": [], "dark_cold": [],
             "solver": [(a, b) for a, b, _, _ in self.solves],
+            "cordon": list(self.cordons),
             "degraded": list(self.degraded),
         }
         for t0, t1, kind, trigger in self.dark:
             if trigger == "autoscale":
                 out["autoscale_lag"].append((t0, t1))
+            elif trigger == "remediation":
+                out["remediation"].append((t0, t1))
+            elif trigger == "cordon":
+                out["cordon"].append((t0, t1))
             elif kind == "incremental":
                 out["dark_incremental"].append((t0, t1))
             else:
@@ -273,8 +311,8 @@ class Segmentation:
         n_short = causes.index("phi_shortfall")
         cause_idx = np.full(mid.shape, n_short, dtype=np.int64)
         # reverse priority order so higher-priority assignments overwrite
-        for name in ("degraded", "solver", "dark_cold", "dark_incremental",
-                     "autoscale_lag"):
+        for name in ("degraded", "cordon", "solver", "dark_cold",
+                     "dark_incremental", "remediation", "autoscale_lag"):
             cov = _coverage(mid, ivals[name])
             cause_idx[cov] = causes.index(name)
         cause_idx[queued] = causes.index("queue")

@@ -28,6 +28,14 @@ Detectors (all thresholds are constructor parameters):
 * ``reconfig_churn`` — ≥ ``churn_solves`` control-plane solves in the
   churn window with a cold-solve share ≥ ``churn_cold_frac``: the
   incremental path is thrashing and dark windows are about to pile up.
+* ``link_flap`` — one link (OCS slot) failed or went gray ≥
+  ``flap_count`` times inside ``flap_window_s``: the signature of a
+  flapping transceiver, the input the remediation engine's cordon
+  action keys on (``event.detail`` carries the ``(h, k, pod)`` slot).
+* ``solver_fallback`` — ≥ ``fallback_count`` delta-path fallbacks
+  (``StaleStateError`` / ``DeltaInfeasible`` cold solves) inside
+  ``fallback_window_s``: the incremental control plane has effectively
+  stopped serving events and every solve pays the cold price.
 
 Every firing appends a :class:`HealthEvent`, emits a ``health``-category
 instant into the tracer (rendered as its own Perfetto track), and calls
@@ -68,15 +76,20 @@ class HealthEvent:
     ``None`` for cluster-wide ones); ``value`` / ``threshold`` record
     what was measured against what, so subscribers can act proportionally
     (e.g. a hysteresis policy backing off harder at 2× threshold).
+    ``detail`` carries detector-specific structure — the ``(h, k, pod)``
+    slot for ``link_flap`` — so a subscriber can act on the exact
+    component without re-deriving it.
     """
 
     t: float
     detector: str  # slo_burn | phi_drop | dark_storm | reconfig_churn
+    # | link_flap | solver_fallback
     severity: str  # warn | page
     key: Optional[int] = None
     value: float = 0.0
     threshold: float = 0.0
     window_s: float = 0.0
+    detail: Optional[Tuple[int, ...]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -144,6 +157,10 @@ class HealthMonitor:
         churn_window_s: float = 600.0,
         churn_solves: int = 8,
         churn_cold_frac: float = 0.5,
+        flap_count: int = 3,
+        flap_window_s: float = 3600.0,
+        fallback_count: int = 5,
+        fallback_window_s: float = 600.0,
         on_event: Optional[Callable[[HealthEvent], None]] = None,
         tracer: Optional[obs_trace.NullTracer] = None,
     ):
@@ -155,6 +172,10 @@ class HealthMonitor:
         self.churn_window_s = churn_window_s
         self.churn_solves = churn_solves
         self.churn_cold_frac = churn_cold_frac
+        self.flap_count = flap_count
+        self.flap_window_s = flap_window_s
+        self.fallback_count = fallback_count
+        self.fallback_window_s = fallback_window_s
         self.on_event = on_event
         self.trace = tracer if tracer is not None else obs_trace.NULL
         self.events: List[HealthEvent] = []
@@ -167,6 +188,12 @@ class HealthMonitor:
         self._solves: Deque[Tuple[float, str]] = collections.deque()
         self._storm_hot = False
         self._churn_hot = False
+        # (h, k, pod) → failure/derate times inside the flap window
+        self._flaps: Dict[Tuple[int, int, int], Deque[float]] = {}
+        self._flap_hot: Dict[Tuple[int, int, int], bool] = {}
+        self._last_fail: Dict[Tuple[int, int, int], float] = {}
+        self._fallbacks: Deque[float] = collections.deque()
+        self._fallback_hot = False
 
     # ---- emission --------------------------------------------------------
 
@@ -174,11 +201,12 @@ class HealthMonitor:
         self.events.append(ev)
         tr = self.trace
         if tr.enabled:
+            extra = {} if ev.detail is None else {"detail": list(ev.detail)}
             tr.instant(
                 "health", ev.detector, ts=ev.t,
                 severity=ev.severity, key=ev.key,
                 value=round(ev.value, 9), threshold=ev.threshold,
-                window_s=ev.window_s,
+                window_s=ev.window_s, **extra,
             )
         if self.on_event is not None:
             self.on_event(ev)
@@ -252,6 +280,67 @@ class HealthMonitor:
                 window_s=self.churn_window_s,
             ))
         self._churn_hot = hot
+
+    def observe_fault(
+        self, t: float, h: int, k: int, pod: int, down: bool
+    ) -> None:
+        """A link-scoped fault event landed: ``down=True`` for a failure
+        (or a derate below full health), ``False`` for the repair/restore.
+        Repairs re-evaluate the window (the latch cools once the flap
+        count drains) but never fire."""
+        slot = (h, k, pod)
+        times = self._flaps.get(slot)
+        if times is None:
+            times = self._flaps[slot] = collections.deque()
+        if down:
+            self._last_fail[slot] = t
+            times.append(t)
+        lo = t - self.flap_window_s
+        while times and times[0] < lo:
+            times.popleft()
+        hot = len(times) >= self.flap_count
+        if down and hot and not self._flap_hot.get(slot, False):
+            self._fire(HealthEvent(
+                t, "link_flap", "warn", value=float(len(times)),
+                threshold=float(self.flap_count),
+                window_s=self.flap_window_s, detail=slot,
+            ))
+        self._flap_hot[slot] = hot
+
+    def last_link_failure(self, h: int, k: int, pod: int) -> Optional[float]:
+        """Most recent failure/derate time seen for one slot (the
+        remediation engine's readmission check reads this)."""
+        return self._last_fail.get((h, k, pod))
+
+    def flap_score(self, t: float, h: int, k: int, pod: int) -> int:
+        """Failures of one slot inside the trailing flap window at ``t``.
+
+        The ``link_flap`` detector latches hot while a sustained flapper
+        keeps its count above threshold, so it fires only once — a
+        subscriber deciding whether a cordoned slot is safe to readmit
+        must read the window directly, not wait for a re-fire."""
+        times = self._flaps.get((h, k, pod))
+        if not times:
+            return 0
+        lo = t - self.flap_window_s
+        return sum(1 for x in times if x >= lo)
+
+    def observe_fallback(self, t: float, reason: str) -> None:
+        """The incremental control plane fell back to a cold solve
+        (``reason`` = exception class name, e.g. ``StaleStateError``)."""
+        self._fallbacks.append(t)
+        lo = t - self.fallback_window_s
+        while self._fallbacks and self._fallbacks[0] < lo:
+            self._fallbacks.popleft()
+        n = len(self._fallbacks)
+        hot = n >= self.fallback_count
+        if hot and not self._fallback_hot:
+            self._fire(HealthEvent(
+                t, "solver_fallback", "warn", value=float(n),
+                threshold=float(self.fallback_count),
+                window_s=self.fallback_window_s,
+            ))
+        self._fallback_hot = hot
 
     def finalize(self, t: float) -> None:
         """End of run: flush each fleet's trailing φ segment so burn

@@ -204,6 +204,7 @@ def waterfill_fractions(
     flows: Sequence[JobFlows],
     config: Optional[OCSConfig],
     architecture: str,
+    pair_cap: Optional[np.ndarray] = None,
 ) -> Dict[int, float]:
     """φ per job from vectorized max-min water-filling over edges.
 
@@ -212,6 +213,11 @@ def waterfill_fractions(
     max-min allocation (see :func:`waterfill_levels`).  ``best``/``clos``
     delegate (no OCS edges there).  φ is clipped to the spec's residual-
     electrical floor — zero when ``slowdown_cap`` is None.
+
+    ``pair_cap`` overrides ``config.pair_capacity()`` — the gray-failure
+    path hands in :meth:`PortMask.effective_pair_capacity
+    <repro.fault.masks.PortMask.effective_pair_capacity>` so derated
+    links surface as φ < 1 here too, not only in the fluid engine.
     """
     if architecture in ("best", "clos"):
         return realized_fractions(spec, flows, config, architecture)
@@ -220,7 +226,9 @@ def waterfill_fractions(
     if not flows:
         return {}
 
-    mat = demand_matrix(flows, config.pair_capacity())
+    mat = demand_matrix(
+        flows, config.pair_capacity() if pair_cap is None else pair_cap
+    )
     if mat is None:
         return {f.job_id: 1.0 for f in flows}
     x = waterfill_levels(*mat)

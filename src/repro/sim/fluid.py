@@ -43,6 +43,7 @@ from ..obs import trace as obs_trace
 from . import flowsim
 
 __all__ = [
+    "CLEAR_PAIR_CAP",
     "CapacityEvent",
     "DarkWindows",
     "Flow",
@@ -55,6 +56,7 @@ __all__ = [
 Pair = Tuple[int, int]
 
 _SPEC_CAP = "spec"  # sentinel: read the slowdown cap off the ClusterSpec
+CLEAR_PAIR_CAP = "clear"  # CapacityEvent.pair_cap sentinel: back to nominal
 
 
 @dataclasses.dataclass
@@ -101,6 +103,9 @@ class CapacityEvent:
     dark_pairs: FrozenSet[Pair] = frozenset()
     downtime_s: float = 0.0
     rewired: Optional[int] = None
+    # gray failures: replace the live pair-capacity matrix (None = keep;
+    # use ``CLEAR_PAIR_CAP`` to drop an earlier override back to nominal)
+    pair_cap: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -154,10 +159,18 @@ class DarkWindows:
 
 
 def effective_capacity(
-    config: OCSConfig, dark_pairs: Iterable[Pair] = ()
+    config: OCSConfig,
+    dark_pairs: Iterable[Pair] = (),
+    pair_cap: Optional[np.ndarray] = None,
 ) -> np.ndarray:
-    """Pair capacity of ``config`` with retuning circuits zeroed out."""
-    cap = np.array(config.pair_capacity(), dtype=np.float64)
+    """Pair capacity of ``config`` with retuning circuits zeroed out.
+
+    ``pair_cap`` substitutes the nominal capacity matrix — the gray-
+    failure path passes :meth:`PortMask.effective_pair_capacity
+    <repro.fault.masks.PortMask.effective_pair_capacity>` so derated
+    links carry their fractional bandwidth through the water-filling."""
+    base = config.pair_capacity() if pair_cap is None else pair_cap
+    cap = np.array(base, dtype=np.float64)
     for i, j in dark_pairs:
         cap[i, j] = 0.0
         cap[j, i] = 0.0
@@ -171,6 +184,7 @@ def fluid_fractions(
     architecture: str,
     dark_pairs: Iterable[Pair] = (),
     cap: object = _SPEC_CAP,
+    pair_cap: Optional[np.ndarray] = None,
 ) -> Dict[int, float]:
     """φ per flow via max-min water-filling on the *effective* capacity.
 
@@ -179,8 +193,9 @@ def fluid_fractions(
     circuits in ``dark_pairs`` carry zero bandwidth, and the clip floor
     comes from ``cap`` (default: the spec's ``slowdown_cap``) — with no
     residual electrical fabric (``None``) a fully-dark flow gets φ = 0.
-    ``best``/``clos`` have no OCS circuits to darken and delegate to the
-    closed-form fractions.
+    ``pair_cap`` substitutes the nominal capacity matrix (gray-derated
+    links; see :func:`effective_capacity`).  ``best``/``clos`` have no
+    OCS circuits to darken and delegate to the closed-form fractions.
     """
     if architecture in ("best", "clos"):
         return flowsim.realized_fractions(spec, flows, config, architecture)
@@ -188,7 +203,9 @@ def fluid_fractions(
     flows = list(flows)
     if not flows:
         return {}
-    mat = flowsim.demand_matrix(flows, effective_capacity(config, dark_pairs))
+    mat = flowsim.demand_matrix(
+        flows, effective_capacity(config, dark_pairs, pair_cap=pair_cap)
+    )
     if mat is None:
         return {f.job_id: 1.0 for f in flows}
     x = flowsim.waterfill_levels(*mat)
@@ -254,10 +271,14 @@ class FluidSim:
         slowdown_cap: object = _SPEC_CAP,
         tracer: Optional[obs_trace.NullTracer] = None,
         health: Optional[object] = None,
+        pair_cap: Optional[np.ndarray] = None,
     ):
         self.spec = spec
         self.architecture = architecture
         self.config = config
+        # gray-failure capacity override (None = config.pair_capacity());
+        # CapacityEvents can swap it mid-run as links derate/restore
+        self.pair_cap = pair_cap
         self.cap = (
             getattr(spec, "slowdown_cap", flowsim.SLOWDOWN_CAP)
             if slowdown_cap is _SPEC_CAP
@@ -316,7 +337,8 @@ class FluidSim:
                 phi = np.ones(F)
             else:
                 cap_pair = effective_capacity(
-                    self.config, self._dark.active(now)
+                    self.config, self._dark.active(now),
+                    pair_cap=self.pair_cap,
                 )
                 keys = np.concatenate([a.ekeys for a in acts])
                 w = np.concatenate([a.ew for a in acts])
@@ -423,6 +445,12 @@ class FluidSim:
                 ev = self.capacity_events[payload]
                 if ev.config is not None:
                     self.config = ev.config
+                if ev.pair_cap is not None:
+                    self.pair_cap = (
+                        None if isinstance(ev.pair_cap, str)
+                        and ev.pair_cap == CLEAR_PAIR_CAP
+                        else ev.pair_cap
+                    )
                 if self.trace.enabled:
                     self.trace.instant(
                         "fault", "capacity", ts=t,

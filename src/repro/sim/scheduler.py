@@ -58,6 +58,7 @@ from ..dist import collectives as dist_collectives
 from ..dist import demand as dist_demand
 from ..fault import (
     CHEAPEST,
+    DerateEvent,
     ExpandEvent,
     FailureEvent,
     FaultEvent,
@@ -73,7 +74,7 @@ from ..fault import (
     restart_cost_s,
     rollback_loss,
 )
-from ..fault.recover import POLICY_CAUSE, RESTART_FIXED_S
+from ..fault.recover import POLICY_CAUSE, RESTART_FIXED_S, ckpt_write_s
 from ..obs import attrib as obs_attrib
 from ..obs import health as obs_health
 from ..obs import metrics as obs_metrics
@@ -173,8 +174,11 @@ class SimConfig:
         default=None, compare=False, repr=False
     )  # HealthEvent subscription hook: a callable(HealthEvent) invoked
     # on every streaming-detector firing (repro.obs.health).  Setting it
-    # (or attaching a tracer) activates the in-loop HealthMonitor; like
-    # the tracer it is passive — simulation results never change
+    # (or attaching a tracer) activates the in-loop HealthMonitor.  The
+    # hook itself is passive; a subscriber that additionally exposes
+    # ``bind(sim)`` (repro.fault.remediate.RemediationEngine) is given
+    # the simulator handle and may close the loop by scheduling
+    # remediation actions (``Simulator.schedule_action``)
 
     def __post_init__(self) -> None:
         if self.recovery_policy not in POLICIES:
@@ -233,7 +237,7 @@ class JobRecord:
 class _Running:
     __slots__ = (
         "job", "placement", "edges", "comm_frac", "progress", "slowdown",
-        "last_t", "record", "compute_scale", "cur_gpus",
+        "last_t", "record", "compute_scale", "cur_gpus", "ckpt_progress",
         "prefill_pods", "decode_pods", "kv_links", "replica_gpus",
     )
 
@@ -258,6 +262,9 @@ class _Running:
         # compute stretch (service_time is calibrated to num_gpus)
         self.cur_gpus = job.num_gpus
         self.compute_scale = 1.0
+        # progress floor guaranteed by an explicit (pre-emptive)
+        # checkpoint — a restart never rolls back below this point
+        self.ckpt_progress = 0.0
         # serving-fleet state (kind == "serve"): disaggregated pools and
         # the per-pod link budget its KV flows were sized with
         self.prefill_pods: List[int] = []
@@ -380,6 +387,8 @@ class Simulator:
         self._c_dt_events = m.counter("downtime.events")
         self._c_dt_s = m.counter("downtime.s")
         self._c_dt_circ = m.counter("downtime.circuit_s")
+        self._c_fallbacks = m.counter("control.solver_fallbacks")
+        self._c_derate = m.counter("faults.derates")
         self._phi = m.timeline("serving.phi")
         self._requests_traced: set = set()  # job ids with request spans out
         # ---- attribution + health (repro.obs.attrib / .health) -----------
@@ -395,11 +404,17 @@ class Simulator:
                 on_event=cfg.on_health,  # type: ignore[arg-type]
                 tracer=self.trace,
             )
+        if self.health is not None and hasattr(cfg.on_health, "bind"):
+            # closed-loop subscriber (repro.fault.remediate): hand the
+            # engine its actuator handle before any detector can fire
+            cfg.on_health.bind(self)  # type: ignore[union-attr]
         # ---- incremental control plane (repro.core.incremental) ----------
         self._coloring_state: Optional[ColoringState] = None
         self._last_incremental = False
         self._last_fallback: Optional[str] = None  # delta-path exception name
         self._last_rewired: Optional[int] = None  # Σ|Δx| of the last solve
+        self._solver_degraded_until = -math.inf  # remediation escalation:
+        # while now ≤ this, solves skip the delta path and state rebuilds
         # ---- resilience state (repro.fault) ------------------------------
         self.mask = PortMask(cfg.num_pods, cfg.k_spine, cfg.sim_groups)
         if cfg.active_pods is not None:
@@ -413,6 +428,10 @@ class Simulator:
             fault_events or [], key=lambda e: e.time
         )
         self.carry_progress: Dict[int, float] = {}  # jid → progress kept
+        self._actions: List[Tuple[float, object, str]] = []  # deferred
+        # remediation actions, drained into the event heap as ACTION
+        # events (health hooks fire mid-refresh; mutating there would
+        # corrupt the in-flight refresh — see schedule_action)
         # ---- serving state (repro.sim.serving) ---------------------------
         self._serving_work: Dict[int, Tuple[float, float]] = {}  # jid →
         # (work_s at φ=1, alpha_s), frozen at first start for the latency
@@ -475,6 +494,12 @@ class Simulator:
     @property
     def autoscale_skipped(self) -> int:
         return self._c_scale_skip.value
+
+    @property
+    def solver_fallbacks(self) -> int:
+        """Delta-path fallbacks silently absorbed as cold solves (every
+        StaleStateError / DeltaInfeasible the incremental plane ate)."""
+        return self._c_fallbacks.value
 
     @property
     def downtime_events(self) -> int:
@@ -547,7 +572,9 @@ class Simulator:
             P, H, [r.edges for r in self.running.values()], mask
         )
 
-    def _solve_mdmcf(self, C: np.ndarray, mask: Optional[PortMask]) -> ReconfigResult:
+    def _solve_mdmcf(
+        self, now: float, C: np.ndarray, mask: Optional[PortMask]
+    ) -> ReconfigResult:
         """ITV-MDMCF with a persistent :class:`ColoringState`.
 
         While the mask is unchanged and the demand fits the state's budget,
@@ -556,8 +583,20 @@ class Simulator:
         a cold solve; the state is rebuilt from it when the cold solve is
         the exact clean-pair construction (``mdmcf_degraded``'s salvage
         output has no adoptable coloring, so degraded events stay cold).
+
+        Every swallowed fallback is counted (``control.solver_fallbacks``)
+        and fed to the HealthMonitor — repeated fallbacks mean the delta
+        path has stopped serving events, and the remediation engine may
+        escalate (:meth:`escalate_solver`): inside the escalation window
+        solves go straight to the degraded-mode path, paying one
+        predictable price instead of retry-then-cold thrash.
         """
         self._last_incremental = False
+        if now <= self._solver_degraded_until:
+            self._coloring_state = None
+            if mask is None:
+                return mdmcf_reconfigure(self.spec, C, old=self.old_config)
+            return mdmcf_degraded(self.spec, C, old=self.old_config, mask=mask)
         if not self.cfg.incremental:
             self._coloring_state = None
             if mask is None:
@@ -588,6 +627,14 @@ class Simulator:
                 self.metrics.counter(
                     f"control.fallback.{self._last_fallback}"
                 ).inc()
+                self._c_fallbacks.inc()
+                if self.trace.enabled:
+                    self.trace.instant(
+                        "health", "fallback", ts=now,
+                        reason=self._last_fallback,
+                    )
+                if self.health is not None:
+                    self.health.observe_fallback(now, self._last_fallback)
                 self._coloring_state = None
         if mask is not None and not demand_feasible(C, self.spec, mask=mask):
             # beyond the clean-pair budget: graceful degradation, no state
@@ -619,7 +666,7 @@ class Simulator:
         t0 = time.perf_counter()
         try:
             if st in ("mdmcf", "itv_ilp"):
-                res = self._solve_mdmcf(C, mask)
+                res = self._solve_mdmcf(now, C, mask)
             elif st == "mcf":
                 if mask is None:
                     res = mdmcf_cold(spec, C)
@@ -682,20 +729,31 @@ class Simulator:
             )
         return COMM_FRACTION.get(job.model, 0.2)
 
+    def _pair_cap_arg(self, config: Optional[OCSConfig]):
+        """Gray-failure capacity override for the flow engines: the
+        mask's health-weighted per-pair capacity when any link runs
+        derated, None otherwise — so the all-healthy path stays
+        byte-identical to the pre-gray model."""
+        if config is None or not self.mask.has_gray():
+            return None
+        return self.mask.effective_pair_capacity(config)
+
     def _refresh_slowdowns(self, now: float, config: Optional[OCSConfig]) -> None:
         flows = [
             flowsim.JobFlows(jid, r.edges, r.comm_frac)
             for jid, r in self.running.items()
         ]
         cap = self.spec.slowdown_cap
+        pcap = self._pair_cap_arg(config)
         if self.cfg.engine == "fluid":
             phi = fluid_engine.fluid_fractions(
                 self.spec, flows, config, self.cfg.architecture,
-                dark_pairs=self._dark.active(now), cap=cap,
+                dark_pairs=self._dark.active(now), cap=cap, pair_cap=pcap,
             )
         else:
             phi = flowsim.waterfill_fractions(
-                self.spec, flows, config, self.cfg.architecture
+                self.spec, flows, config, self.cfg.architecture,
+                pair_cap=pcap,
             )
         for jid, r in self.running.items():
             r.advance(now)
@@ -887,6 +945,9 @@ class Simulator:
             lost, cost = r.progress, RESTART_FIXED_S
         else:
             lost = rollback_loss(r.progress, self.cfg.ckpt_interval_s)
+            # a pre-emptive checkpoint (remediation) may be fresher than
+            # the last periodic one: never roll back below its floor
+            lost = min(lost, max(0.0, r.progress - r.ckpt_progress))
             cost = restart_cost_s(r.job.model, r.job.num_gpus)
         self.carry_progress[jid] = r.progress - lost
         r.record.restarts += 1
@@ -930,6 +991,131 @@ class Simulator:
         r.record.shrinks += 1
         self._c_shrinks.inc()
 
+    # ---- remediation actuators (driven by repro.fault.remediate) ---------
+
+    def schedule_action(self, t: float, fn, trigger: str = "remediation") -> None:
+        """Defer a remediation action onto the event heap.
+
+        Health detectors fire mid-refresh, deep inside event processing;
+        mutating topology/demand state there would corrupt the in-flight
+        refresh.  Actions enqueue here instead and run at top level as
+        ``ACTION`` events, in deterministic heap order.  ``fn(t)`` returns
+        True when it changed demand or the mask — the loop then re-solves
+        with ``trigger`` as the blame bucket its dark windows land under
+        (``remediation`` or ``cordon``)."""
+        self._actions.append((t, fn, trigger))
+
+    def cordon_link(self, now: float, h: int, k: int, pod: int) -> bool:
+        """Cordon one OCS slot out of TE demand (both directions).
+
+        The slot stays physically up — faults keep landing on the mask
+        and the flap window keeps counting — but no circuit is placed on
+        it, so once the re-solve settles, subsequent flaps of this slot
+        change nothing the solver sees (rewired = 0, no dark windows).
+        Cordon time is a first-class blame cause (``cordon``)."""
+        if self.mask.cordoned[h, k, pod]:
+            return False
+        was_trivial = self.mask.is_trivial()
+        self.mask.cordon_link(h, k, pod)
+        if was_trivial:
+            self.attrib.degraded_begin(now)
+        self.attrib.cordon_begin(now)
+        self.metrics.counter("remediation.cordons").inc()
+        if self.trace.enabled:
+            self.trace.instant(
+                "remediation", "cordon", ts=now, h=h, k=k, pod=pod
+            )
+        return True
+
+    def readmit_link(self, now: float, h: int, k: int, pod: int) -> bool:
+        """Readmit a cordoned slot into TE demand (backoff expired and
+        the slot stayed healthy — the remediation engine's hysteresis
+        decides when; this just flips the mask and the blame interval)."""
+        if not self.mask.cordoned[h, k, pod]:
+            return False
+        self.mask.readmit_link(h, k, pod)
+        self.attrib.cordon_end(now)
+        if self.mask.is_trivial():
+            self.attrib.degraded_end(now)
+        self.metrics.counter("remediation.readmits").inc()
+        if self.trace.enabled:
+            self.trace.instant(
+                "remediation", "readmit", ts=now, h=h, k=k, pod=pod
+            )
+        return True
+
+    def preempt_checkpoint(self, now: float, jid: int) -> bool:
+        """Pre-emptively checkpoint one running training job.
+
+        The job stalls for the sharded state dump (priced like the
+        ``ckpt/manager`` TrainState write — :func:`~repro.fault.recover.
+        ckpt_write_s`) and its rollback floor advances to the paused
+        progress: a later restart loses only work since this instant.
+        The stall is blamed on ``remediation``.  No-op under
+        ``rewire_around``, which has no checkpoint infrastructure."""
+        r = self.running.get(jid)
+        if (
+            r is None or r.job.kind == "serve"
+            or self.cfg.recovery_policy == REWIRE_AROUND
+        ):
+            return False
+        r.advance(now)
+        pause = min(ckpt_write_s(r.job.model, max(1, r.cur_gpus)), r.progress)
+        if pause > 0:
+            # the write stalls training: the analytic twin of a dark
+            # window, rolled back and blamed exactly like the OCS pause
+            r.progress -= pause
+            self.attrib.lose(jid, now, pause, "remediation")
+        r.ckpt_progress = r.progress
+        self.metrics.counter("remediation.ckpts").inc()
+        if self.trace.enabled:
+            self.trace.span(
+                "remediation", f"ckpt:job{jid}", ts=now, dur=pause,
+                job_id=jid,
+            )
+        return False
+
+    def remediate_drain(self, now: float, jid: int, pod: int) -> bool:
+        """Drain a serving fleet's decode pool off ``pod`` — reroute load
+        away from a pod behind persistently dark/degraded circuits.  Same
+        mechanics as a scale-down autoscale: the freed GPUs return to the
+        allocator and the fleet keeps serving on the survivors.  Returns
+        True when the pool changed, so the caller re-solves and TE drops
+        the pod's KV circuits."""
+        r = self.running.get(jid)
+        if r is None or r.job.kind != "serve":
+            return False
+        if pod not in r.decode_pods or len(r.decode_pods) <= 1:
+            return False
+        r.decode_pods.remove(pod)
+        n = r.pods.pop(pod)
+        self.free[pod] += n
+        r.cur_gpus = max(0, r.cur_gpus - n)
+        r.edges = self._kv_edges(r, now)
+        self.metrics.counter("remediation.drains").inc()
+        if self.trace.enabled:
+            self.trace.instant(
+                "remediation", "drain", ts=now, job_id=jid, pod=pod
+            )
+        return True
+
+    def escalate_solver(self, now: float, window_s: float) -> bool:
+        """Pin the control plane to the degraded-mode solver for
+        ``window_s`` (bounded escalation after repeated delta-path
+        fallbacks): no delta attempts, no state rebuilds — every solve
+        inside the window pays one predictable degraded price instead of
+        the StaleStateError retry-then-cold thrash."""
+        self._solver_degraded_until = max(
+            self._solver_degraded_until, now + window_s
+        )
+        self._coloring_state = None
+        self.metrics.counter("remediation.solver_escalations").inc()
+        if self.trace.enabled:
+            self.trace.span(
+                "remediation", "solver_degraded", ts=now, dur=window_s
+            )
+        return False
+
     def _choose_policy(self, now: float, r: _Running, pod: int) -> str:
         """Pick the cheapest recovery policy for one victim of a pod
         failure, pricing the shrink path with the *fluid-measured*
@@ -953,6 +1139,7 @@ class Simulator:
             phi_shrunk = fluid_engine.fluid_fractions(
                 self.spec, flows, self.old_config, self.cfg.architecture,
                 dark_pairs=dark, cap=self.spec.slowdown_cap,
+                pair_cap=self._pair_cap_arg(self.old_config),
             ).get(r.job.job_id, 1.0)
         costs = policy_costs(
             service_s=r.job.service_time,
@@ -1009,6 +1196,19 @@ class Simulator:
                 if not was_active[p]:  # re-announcing a live pod is a no-op
                     self.free[p] = self.spec.gpus_per_pod
             return requeue
+        if isinstance(ev, DerateEvent):
+            self._c_derate.inc()
+            if self.trace.enabled:
+                self.trace.instant(
+                    "fault", "derate_link", ts=now,
+                    h=ev.h, k=ev.k, pod=ev.pod, health=ev.health,
+                )
+            if self.health is not None:
+                # a derate below full health counts toward the flap window
+                self.health.observe_fault(
+                    now, ev.h, ev.k, ev.pod, down=ev.health < 1.0
+                )
+            return requeue
         if isinstance(ev, FailureEvent):
             self._c_fail.inc()
             if self.trace.enabled:
@@ -1016,6 +1216,8 @@ class Simulator:
                     "fault", f"fail_{ev.scope}", ts=now,
                     scope=ev.scope, h=ev.h, k=ev.k, pod=ev.pod,
                 )
+            if ev.scope == "link" and self.health is not None:
+                self.health.observe_fault(now, ev.h, ev.k, ev.pod, down=True)
             if ev.scope == "pod" and pod_was_up[ev.pod]:
                 self._pod_down_since[ev.pod] = now
                 policy = self.cfg.recovery_policy
@@ -1046,6 +1248,9 @@ class Simulator:
                     "fault", f"repair_{ev.scope}", ts=now,
                     scope=ev.scope, h=ev.h, k=ev.k, pod=ev.pod,
                 )
+            if ev.scope == "link" and self.health is not None:
+                # repairs cool the flap latch but never fire it
+                self.health.observe_fault(now, ev.h, ev.k, ev.pod, down=False)
             if ev.scope == "pod":
                 t0 = self._pod_down_since.pop(ev.pod, None)
                 if t0 is not None:
@@ -1060,9 +1265,10 @@ class Simulator:
         ``until`` caps simulated time (goodput/availability accounting over
         a fixed horizon); running jobs are advanced to the cap and left
         unfinished (``finish`` stays NaN)."""
-        ARRIVE, FINISH, FAULT, REQUEUE, DARK_END, REFRESH = 0, 1, 2, 3, 4, 5
+        ARRIVE, FINISH, FAULT, REQUEUE, DARK_END, REFRESH, ACTION = range(7)
         ev: List[Tuple[float, int, int, int]] = []  # (t, kind, seq, payload)
         seq = 0
+        actions: List[Tuple[object, str]] = []  # ACTION payloads (fn, trigger)
         for j in self.jobs:
             heapq.heappush(ev, (j.arrival, ARRIVE, seq, j.job_id))
             seq += 1
@@ -1288,10 +1494,30 @@ class Simulator:
                 elif kind == REFRESH:  # a dark window just opened
                     self._refresh_slowdowns(t, self.old_config)
                     reschedule_all(t)
+                elif kind == ACTION:  # deferred remediation action
+                    fn, trigger = actions[jid]
+                    for r in self.running.values():
+                        r.advance(t)
+                    if fn(t):  # mask/demand changed: re-solve around it
+                        reconfigure_now(t, trigger=trigger)
+                    self._refresh_slowdowns(t, self.old_config)
+                    reschedule_all(t)
+                    while try_start(t):
+                        pass
                 else:  # ARRIVE / REQUEUE
                     self.queue.append(self.jobs[jid])
                     while try_start(t):
                         pass
+                # drain actions the remediation engine scheduled while
+                # this event was processed (top-level dispatch keeps the
+                # actions re-entrancy safe and deterministically ordered)
+                while self._actions:
+                    at, fn, trigger = self._actions.pop(0)
+                    heapq.heappush(
+                        ev, (max(at, t), ACTION, seq, len(actions))
+                    )
+                    actions.append((fn, trigger))
+                    seq += 1
         if until is not None:
             # the heap may drain before the requested horizon; accounting
             # (capacity integral, downtime) still covers the full window
@@ -1362,6 +1588,7 @@ class Simulator:
         rows: Dict[int, Dict[str, float]] = {}
         pooled: List[np.ndarray] = []
         served = requests = 0.0
+        avail_s = avail_span = 0.0
         for j in self.jobs:
             if j.kind != "serve":
                 continue
@@ -1383,6 +1610,14 @@ class Simulator:
             row = serving_mod.summarize_requests(lat, slo)
             row["ideal_s"] = work + alpha_s
             row["slo_s"] = slo
+            if span > 0:
+                # φ ≥ 1/slo keeps a steady-state request inside the SLO
+                row["availability"] = serving_mod.slo_availability(
+                    self.phi_timeline.get(j.job_id, ()),
+                    1.0 / self.cfg.serving_slo, j.arrival, self._end_time,
+                )
+                avail_s += row["availability"] * span
+                avail_span += span
             rows[j.job_id] = row
             if j.job_id not in self._requests_traced:
                 # summaries may be recomputed; record each fleet once
@@ -1424,6 +1659,7 @@ class Simulator:
             "p50_s": serving_mod.pool_quantile(lat, 0.5),
             "p99_s": serving_mod.pool_quantile(lat, 0.99, strict=True),
             "goodput": served / requests if requests else math.nan,
+            "availability": avail_s / avail_span if avail_span else math.nan,
             "autoscale_applied": float(self.autoscale_applied),
             "autoscale_skipped": float(self.autoscale_skipped),
         }

@@ -58,6 +58,7 @@ __all__ = [
     "request_work_s",
     "serving_job",
     "serving_trace",
+    "slo_availability",
     "summarize_requests",
 ]
 
@@ -370,6 +371,41 @@ def pool_quantile(
     if finite.size == 0 or (strict and finite.size < lat.size):
         return math.inf
     return float(np.quantile(finite, q))
+
+
+def slo_availability(
+    timeline: Sequence[Tuple[float, float]],
+    phi_floor: float,
+    t0: float,
+    t1: float,
+) -> float:
+    """Share of ``[t0, t1]`` during which the fleet's realized bandwidth
+    fraction φ is at least ``phi_floor`` — the *time-based* availability
+    behind the chaos benchmarks (request-based goodput weights by
+    arrivals; this weights by wall clock, so a quiet-hour outage still
+    counts).
+
+    ``timeline`` is the piecewise-constant φ record the scheduler keeps
+    per serving job (same input as :func:`request_latencies`).  Time
+    before the first sample counts as *unavailable* (the fleet was not
+    serving yet); the last sample holds to ``t1``.
+
+    >>> tl = [(0.0, 1.0), (40.0, 0.2), (80.0, 1.0)]
+    >>> slo_availability(tl, 0.5, 0.0, 100.0)
+    0.6
+    >>> slo_availability([], 0.5, 0.0, 100.0)
+    0.0
+    """
+    if t1 <= t0:
+        return math.nan
+    if not timeline:
+        return 0.0
+    ts = [max(t0, min(t1, t)) for t, _ in timeline] + [t1]
+    ok = 0.0
+    for n, (_, phi) in enumerate(timeline):
+        if phi >= phi_floor:
+            ok += max(0.0, ts[n + 1] - ts[n])
+    return ok / (t1 - t0)
 
 
 def summarize_requests(

@@ -1,0 +1,201 @@
+"""repro.fault.chaos: correlated/gray failure injection.
+
+Primitive generators (top-of-pod bursts, SRLG cuts, flapping and derated
+links), the declarative ChaosScenario compiler, the standard catalogue,
+and the PortMask layers gray failures ride on (cordoned + link_health).
+Everything here must be deterministic given the scenario — the chaos
+benchmark's passive/remediate comparison depends on both runs seeing the
+identical fault stream."""
+import numpy as np
+import pytest
+
+from repro.core.topology import ClusterSpec
+from repro.fault import (
+    ChaosScenario,
+    DerateEvent,
+    FailureEvent,
+    PortMask,
+    RepairEvent,
+    apply_event,
+    flapping_link,
+    gray_derate,
+    scenario_events,
+    shared_risk_group,
+    standard_scenarios,
+    top_of_pod_burst,
+)
+
+
+# ---------------------------------------------------------------------------
+# primitive generators
+# ---------------------------------------------------------------------------
+
+def test_top_of_pod_burst_is_correlated_and_paired():
+    evs = top_of_pod_burst(100.0, group=1, first_ocs=6, size=3,
+                           repair_s=50.0, k_spine=8)
+    fails = [e for e in evs if isinstance(e, FailureEvent)]
+    reps = [e for e in evs if isinstance(e, RepairEvent)]
+    # all failures at the same instant (one power domain), consecutive
+    # OCSes wrapping around the spine, all in the blast group
+    assert [e.time for e in fails] == [100.0] * 3
+    assert sorted(e.k for e in fails) == [0, 6, 7]
+    assert all(e.h == 1 and e.scope == "ocs" for e in fails)
+    assert all(e.time == 150.0 for e in reps)
+
+
+def test_top_of_pod_burst_stagger_is_seeded():
+    kw = dict(group=0, first_ocs=0, size=4, repair_s=100.0, k_spine=8,
+              stagger_s=30.0)
+    a = top_of_pod_burst(0.0, seed=1, **kw)
+    b = top_of_pod_burst(0.0, seed=1, **kw)
+    c = top_of_pod_burst(0.0, seed=2, **kw)
+    assert a == b
+    rep = lambda evs: [e.time for e in evs if isinstance(e, RepairEvent)]
+    assert rep(a) != rep(c)
+    assert all(t >= 100.0 for t in rep(a))  # jitter only delays
+
+
+def test_top_of_pod_burst_size_validated():
+    for size in (0, 9):
+        with pytest.raises(ValueError):
+            top_of_pod_burst(0.0, 0, 0, size, 10.0, k_spine=8)
+
+
+def test_shared_risk_group_cuts_together():
+    links = ((0, 1, 2), (1, 3, 4), (0, 5, 2))
+    evs = shared_risk_group(500.0, links, repair_s=250.0)
+    fails = [e for e in evs if isinstance(e, FailureEvent)]
+    assert {(e.h, e.k, e.pod) for e in fails} == set(links)
+    assert all(e.time == 500.0 and e.scope == "link" for e in fails)
+    assert all(
+        e.time == 750.0 for e in evs if isinstance(e, RepairEvent)
+    )
+
+
+def test_flapping_link_alternates_with_duty():
+    evs = flapping_link((0, 2, 3), t0=10.0, until=70.0, period_s=30.0,
+                        duty=0.2)
+    # cycles start at 10 and 40 (60 < until, 70 ends it)
+    assert [(type(e).__name__, e.time) for e in evs] == [
+        ("FailureEvent", 10.0), ("RepairEvent", 16.0),
+        ("FailureEvent", 40.0), ("RepairEvent", 46.0),
+    ]
+    with pytest.raises(ValueError):
+        flapping_link((0, 0, 0), 0.0, 10.0, period_s=0.0)
+    with pytest.raises(ValueError):
+        flapping_link((0, 0, 0), 0.0, 10.0, period_s=5.0, duty=1.0)
+
+
+def test_gray_derate_pairs_with_restore():
+    lo, hi = gray_derate((1, 0, 5), 100.0, 400.0, health=0.3)
+    assert isinstance(lo, DerateEvent) and lo.health == 0.3
+    assert hi.time == 400.0 and hi.health == 1.0
+    with pytest.raises(ValueError):
+        DerateEvent(0.0, health=0.0)
+    with pytest.raises(ValueError):
+        DerateEvent(0.0, health=1.5)
+
+
+# ---------------------------------------------------------------------------
+# scenario compiler
+# ---------------------------------------------------------------------------
+
+def test_scenario_events_compose_sorted_deterministic():
+    sc = ChaosScenario(
+        name="compound", horizon_s=7200.0,
+        burst_at_s=1000.0, burst_size=2, burst_repair_s=2000.0,
+        srlg_at_s=1500.0, srlg_links=((0, 0, 1), (0, 0, 2)),
+        flap_links=((1, 2, 3),), flap_period_s=600.0,
+        derate_links=((0, 4, 5),), derate_health=0.5,
+    )
+    a, b = scenario_events(sc, k_spine=8), scenario_events(sc, k_spine=8)
+    assert a == b
+    times = [e.time for e in a]
+    assert times == sorted(times)
+    # every component family is represented
+    assert any(isinstance(e, DerateEvent) for e in a)
+    assert any(e.scope == "ocs" for e in a if isinstance(e, FailureEvent))
+    assert any(e.scope == "link" for e in a if isinstance(e, FailureEvent))
+
+
+def test_scenario_defaults_span_horizon():
+    sc = ChaosScenario(name="f", horizon_s=3000.0,
+                       flap_links=((0, 0, 0),), flap_period_s=1000.0)
+    evs = scenario_events(sc, k_spine=8)
+    fails = [e.time for e in evs if isinstance(e, FailureEvent)]
+    assert fails == [0.0, 1000.0, 2000.0]  # flap_until defaults to horizon
+    with pytest.raises(ValueError):
+        ChaosScenario(name="bad", horizon_s=0.0)
+
+
+def test_standard_scenarios_catalogue_in_bounds():
+    P, K, H = 12, 8, 8 * 3600.0
+    cat = standard_scenarios(P, K, H)
+    assert [sc.name for sc in cat] == [
+        "top_of_pod_burst", "gray_flap", "burst_flap",
+    ]
+    for sc in cat:
+        evs = scenario_events(sc, K)
+        assert evs, sc.name
+        for e in evs:
+            if isinstance(e, (FailureEvent, RepairEvent, DerateEvent)):
+                assert 0 <= e.h < 2          # sim_groups default
+                assert 0 <= e.k < K
+                assert 0 <= e.pod < P
+        assert min(e.time for e in evs) >= 0.0
+        # failures start inside the horizon (repairs may trail past)
+        fails = [e.time for e in evs if not isinstance(e, RepairEvent)]
+        assert max(fails) <= H
+
+
+# ---------------------------------------------------------------------------
+# the mask layers gray failures ride on
+# ---------------------------------------------------------------------------
+
+def _mask(p=8, k=8, groups=2):
+    return PortMask.healthy(ClusterSpec(num_pods=p, k_spine=k, k_leaf=k),
+                            num_groups=groups)
+
+
+def test_cordon_blocks_te_but_is_not_a_failure():
+    m = _mask()
+    m.cordon_link(0, 2, 3)
+    assert not m.is_trivial()
+    assert m.egress_blocked()[0, 2, 3] and m.ingress_blocked()[0, 2, 3]
+    # underlying port layers untouched: the slot is administratively
+    # out, not broken
+    assert not m.port_down_eg[0, 2, 3] and not m.port_down_in[0, 2, 3]
+    m.readmit_link(0, 2, 3)
+    assert m.is_trivial()
+
+
+def test_derate_layer_scales_effective_capacity():
+    spec = ClusterSpec(num_pods=4, k_spine=4, k_leaf=4)
+    m = PortMask.healthy(spec, num_groups=1)
+    from repro.core.reconfig import mdmcf_reconfigure
+    from repro.core.logical import random_feasible_demand
+    C = random_feasible_demand(
+        spec, np.random.default_rng(0), num_groups=1
+    )
+    cfg = mdmcf_reconfigure(spec, C).config
+    full = cfg.pair_capacity()
+    assert np.array_equal(m.effective_pair_capacity(cfg), full)
+    apply_event(m, DerateEvent(0.0, h=0, k=1, pod=2, health=0.5))
+    assert m.has_gray() and not m.is_trivial()
+    eff = m.effective_pair_capacity(cfg)
+    assert (eff <= full + 1e-12).all()
+    assert eff.sum() < full.sum()  # the gray slot's circuits derated
+    apply_event(m, DerateEvent(1.0, h=0, k=1, pod=2, health=1.0))
+    assert not m.has_gray() and m.is_trivial()
+
+
+def test_gray_and_cordon_change_fingerprint():
+    m = _mask()
+    f0 = m.fingerprint()
+    m.derate_link(0, 0, 0, 0.7)
+    f1 = m.fingerprint()
+    assert f1 != f0
+    m.cordon_link(1, 1, 1)
+    assert m.fingerprint() not in (f0, f1)
+    counts = m.counts()
+    assert counts["derated_links"] == 1 and counts["cordoned_links"] == 1

@@ -23,7 +23,9 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOCTEST_MODULES = [
     "repro.core.incremental",
     "repro.dist.demand",
+    "repro.fault.chaos",
     "repro.fault.masks",
+    "repro.fault.remediate",
     "repro.obs.attrib",
     "repro.obs.health",
     "repro.obs.metrics",
@@ -39,6 +41,7 @@ REQUIRED_DOCS = [
     os.path.join("docs", "simulation.md"),
     os.path.join("docs", "serving.md"),
     os.path.join("docs", "observability.md"),
+    os.path.join("docs", "resilience.md"),
 ]
 
 

@@ -116,6 +116,33 @@ def test_fault_model_deterministic_sorted_paired():
             assert rep, ev
 
 
+def test_fault_streams_independent_per_class():
+    """Per-class RNG isolation (the seed discipline model.py promises):
+    toggling or retuning one hardware class's failure process must not
+    perturb any other class's event times."""
+    H = 48 * 3600.0
+    base = dict(link_mtbf_s=5e4, link_mttr_s=3600, ocs_mtbf_s=2e5,
+                pod_mtbf_s=4e5, seed=7)
+
+    def stream(evs, scope):
+        return [
+            (e.time, type(e).__name__, e.h, e.k, e.pod)
+            for e in evs if e.scope == scope
+        ]
+
+    a = FaultModel(8, 8, 2, **base).sample(H)
+    # disabling pod failures entirely: link + OCS streams bit-identical
+    b = FaultModel(8, 8, 2, **{**base, "pod_mtbf_s": None}).sample(H)
+    assert stream(a, "link") == stream(b, "link")
+    assert stream(a, "ocs") == stream(b, "ocs")
+    assert stream(a, "pod") and not stream(b, "pod")
+    # retuning the OCS process: link + pod streams bit-identical
+    c = FaultModel(8, 8, 2, **{**base, "ocs_mtbf_s": 5e4}).sample(H)
+    assert stream(a, "link") == stream(c, "link")
+    assert stream(a, "pod") == stream(c, "pod")
+    assert stream(a, "ocs") != stream(c, "ocs")
+
+
 # ---------------------------------------------------------------------------
 # degraded-mode topology engineering
 # ---------------------------------------------------------------------------

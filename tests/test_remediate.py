@@ -1,0 +1,301 @@
+"""repro.fault.remediate: the closed-loop self-healing engine.
+
+Centerpiece: the no-flap-thrash property — a cordoned link re-enters TE
+demand only after its exponential backoff expires with the slot healthy
+the whole window, and a *sustained* flapper never re-enters at all.
+Plus: every remediation actuator lands in the metrics registry and the
+blame ledger (conservation stays exact with remediation causes in
+play), the solver-fallback counter satellite, and budget enforcement."""
+import math
+
+import pytest
+
+from repro import obs
+from repro.fault import (
+    ChaosScenario,
+    RemediationEngine,
+    flapping_link,
+    scenario_events,
+    standard_scenarios,
+)
+from repro.obs import attribute_jobs, attribute_requests
+from repro.sim import SimConfig, Simulator, generate_trace
+
+P, K = 12, 8
+GPUS = P * K * K
+
+
+def _cfg(**kw):
+    kw.setdefault("reconfig_delay_s", 0.01)
+    return SimConfig(
+        architecture="cross_wiring", strategy="mdmcf",
+        num_pods=P, k_spine=K, k_leaf=K, engine="fluid",
+        recovery_policy="ckpt_restart", **kw,
+    )
+
+
+def _jobs(n=10, serving_gpus=256, **kw):
+    return generate_trace(
+        n, num_gpus=GPUS, workload_level=0.9, seed=3,
+        max_job_gpus=GPUS // 4, serving_jobs=1, serving_gpus=serving_gpus,
+        **kw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# pure policy: backoff + budgets
+# ---------------------------------------------------------------------------
+
+def test_backoff_doubles_and_caps():
+    eng = RemediationEngine(cordon_base_s=100.0, max_backoff_doublings=3)
+    assert [eng.backoff_s(k) for k in range(5)] == [
+        100.0, 200.0, 400.0, 800.0, 800.0,  # capped at 2^3
+    ]
+    with pytest.raises(ValueError):
+        RemediationEngine(cordon_base_s=0.0)
+
+
+def test_unbound_engine_is_inert():
+    eng = RemediationEngine()
+    eng(object())  # no sim bound: must swallow anything silently
+    assert eng.summary() == {
+        "cordons": 0, "extensions": 0, "readmits": 0, "drains": 0,
+        "ckpts": 0, "solver_escalations": 0, "skipped_budget": 0,
+        "active_cordons": 0,
+    }
+
+
+# ---------------------------------------------------------------------------
+# the no-flap-thrash property
+# ---------------------------------------------------------------------------
+
+def _flap_run(flap_until, until=None, base=600.0):
+    """One sim with a single scripted flapper (period 600 s, duty 0.5)
+    active over [600, flap_until) and a cordon-only engine."""
+    eng = RemediationEngine(cordon_base_s=base, max_drains=0, max_ckpts=0,
+                            max_solver_escalations=0)
+    tr = obs.Tracer()
+    sim = Simulator(
+        _cfg(on_health=eng, tracer=tr),
+        _jobs(),
+        fault_events=flapping_link((0, 1, 1), 600.0, flap_until, 600.0),
+    )
+    sim.run(until=until)
+    return sim, eng, tr
+
+
+def test_sustained_flapper_stays_cordoned():
+    """A link that flaps for the whole observed window is cordoned once
+    and NEVER readmitted inside it: each backoff expiry sees the
+    trailing flap window still hot (or a failure since the cordon) and
+    doubles the backoff instead."""
+    H = 6 * 3600.0
+    sim, eng, tr = _flap_run(flap_until=H, until=H)
+    s = eng.summary()
+    assert s["cordons"] == 1
+    assert s["readmits"] == 0 and s["active_cordons"] == 1
+    assert s["extensions"] >= 1  # backoff doubled, not readmitted
+    assert sim.mask.cordoned[0, 1, 1]
+    assert sim.metrics.counter("remediation.readmits").value == 0
+    names = [e["name"] for e in tr.events("remediation")]
+    assert names.count("cordon") == 1 and "readmit" not in names
+
+
+def test_readmission_waits_out_the_backoff():
+    """A flapper that goes quiet re-enters TE demand — but only after a
+    full backoff window of healthy residency, never earlier."""
+    base = 600.0
+    sim, eng, tr = _flap_run(flap_until=2400.0, base=base)
+    s = eng.summary()
+    assert s["cordons"] == 1 and s["readmits"] == 1
+    assert s["active_cordons"] == 0 and not sim.mask.cordoned[0, 1, 1]
+    evs = tr.events("remediation")
+    t_cordon = next(e["ts"] for e in evs if e["name"] == "cordon")
+    t_readmit = next(e["ts"] for e in evs if e["name"] == "readmit")
+    # trace timestamps are microseconds of simulated time
+    assert t_readmit - t_cordon >= base * 1e6
+    # ... and the slot was healthy for >= base before re-entry: the last
+    # scripted failure is at 1800 s, so readmission cannot predate 2400 s
+    assert t_readmit >= (1800.0 + base) * 1e6
+    # relapse extensions (if any) each restarted the residency clock
+    last = sim.health.last_link_failure(0, 1, 1)
+    assert last is not None and t_readmit >= (last + base) * 1e6
+
+
+def test_cordon_budget_is_enforced():
+    """With max_cordoned=0 every flap detection is a budget skip — the
+    mask is never touched."""
+    eng = RemediationEngine(cordon_base_s=600.0, max_cordoned=0,
+                            max_drains=0, max_ckpts=0,
+                            max_solver_escalations=0)
+    sim = Simulator(
+        _cfg(on_health=eng),
+        _jobs(),
+        fault_events=flapping_link((0, 1, 1), 600.0, 6 * 3600.0, 600.0),
+    )
+    sim.run()
+    s = eng.summary()
+    assert s["cordons"] == 0 and s["skipped_budget"] >= 1
+    assert not sim.mask.cordoned.any()
+
+
+# ---------------------------------------------------------------------------
+# actuators land in metrics + blame, conservation stays exact
+# ---------------------------------------------------------------------------
+
+def test_preempt_checkpoint_pauses_and_blames():
+    jobs = _jobs()
+    train = next(j for j in jobs if j.kind != "serve")
+    sim = Simulator(_cfg(), jobs)
+    sim.schedule_action(
+        train.arrival + 1800.0,
+        lambda t: sim.preempt_checkpoint(t, train.job_id),
+    )
+    sim.run()
+    assert sim.metrics.counter("remediation.ckpts").value == 1
+    blames = attribute_jobs(sim)
+    b = blames[train.job_id]
+    assert b.causes.get("remediation", 0.0) > 0
+    assert abs(b.residual) <= 1e-6
+
+
+def test_remediate_drain_frees_pod_and_counts():
+    sim = Simulator(_cfg(), _jobs())
+
+    def act(t):
+        for j, r in sorted(sim.running.items()):
+            if r.job.kind == "serve" and len(r.decode_pods) > 1:
+                return sim.remediate_drain(t, j, sorted(r.decode_pods)[-1])
+        return False
+
+    sim.schedule_action(1800.0, act, trigger="remediation")
+    sim.run()
+    assert sim.metrics.counter("remediation.drains").value == 1
+    res = attribute_requests(sim)
+    assert res["conserved"]
+
+
+def test_escalate_solver_is_bounded():
+    sim = Simulator(_cfg(), _jobs())
+    sim.schedule_action(
+        1000.0, lambda t: sim.escalate_solver(t, 1800.0)
+    )
+    sim.run()
+    assert sim.metrics.counter("remediation.solver_escalations").value == 1
+    assert sim._solver_degraded_until == pytest.approx(1000.0 + 1800.0)
+
+
+# ---------------------------------------------------------------------------
+# satellite: swallowed delta-path fallbacks are first-class signals
+# ---------------------------------------------------------------------------
+
+def test_solver_fallbacks_counted_and_detected():
+    """Sustained flapping invalidates the incremental solver's state on
+    every mask change: the swallowed StaleStateError cold solves must
+    land in the counter, the trace, and the fallback-rate detector."""
+    tr = obs.Tracer()
+    sc = ChaosScenario(
+        name="flap", horizon_s=4 * 3600.0,
+        # 3 flappers × (fail + repair) per 450 s period ≈ 8 cold solves
+        # per 600 s — above the default fallback-rate threshold (5/600 s)
+        flap_links=((0, 1, 1), (1, 2, 5), (0, 3, 7)), flap_from_s=600.0,
+        flap_period_s=450.0,
+    )
+    sim = Simulator(
+        _cfg(on_health=[].append, tracer=tr),
+        _jobs(),
+        fault_events=scenario_events(sc, K),
+    )
+    sim.run()
+    assert sim.solver_fallbacks > 0
+    assert sim.metrics.counter("control.solver_fallbacks").value == \
+        sim.solver_fallbacks
+    falls = [e for e in tr.events("health") if e["name"] == "fallback"]
+    assert len(falls) == sim.solver_fallbacks
+    assert "link_flap" in {e.detector for e in sim.health.events}
+
+
+def test_fallback_rate_detector_and_escalation_budget():
+    """≥ fallback_count cold solves inside the window fire the
+    ``solver_fallback`` detector once (hot latch); the engine answers
+    each firing with a bounded escalation until its budget is spent."""
+    from repro.obs.health import HealthMonitor
+
+    class _StubSim:
+        def __init__(self):
+            self.scheduled = []
+            self.escalated = []
+            self.health = None
+
+        def schedule_action(self, t, fn, trigger="remediation"):
+            self.scheduled.append((t, fn, trigger))
+            fn(t)
+
+        def escalate_solver(self, t, window_s):
+            self.escalated.append((t, window_s))
+            return False
+
+    stub = _StubSim()
+    eng = RemediationEngine(solver_window_s=900.0, max_solver_escalations=2)
+    eng.bind(stub)
+    mon = HealthMonitor(on_event=eng, fallback_count=3,
+                        fallback_window_s=100.0)
+    stub.health = mon
+    for n in range(3):
+        mon.observe_fallback(float(n), "StaleStateError")
+    assert [e.detector for e in mon.events] == ["solver_fallback"]
+    assert stub.escalated == [(2.0, 900.0)]
+    # re-arm by letting the window cool, then refire twice more: the
+    # second firing escalates (budget 2), the third is a budget skip
+    for t0 in (1000.0, 2000.0):
+        for n in range(3):
+            mon.observe_fallback(t0 + n, "DeltaInfeasible")
+    assert len(stub.escalated) == 2
+    assert eng.summary()["solver_escalations"] == 2
+    assert eng.summary()["skipped_budget"] == 1
+
+
+# ---------------------------------------------------------------------------
+# the closed loop end to end: engine helps, blame still conserves
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_closed_loop_improves_and_conserves():
+    """The acceptance scenario (correlated top-of-pod burst + gray
+    flapping + derated links) under an overloaded mixed workload:
+    remediation strictly improves serving availability and SLO goodput
+    over passive, and the blame ledger still conserves exactly with the
+    new causes in play."""
+    H = 8 * 3600.0
+    sc = standard_scenarios(P, K, H)[2]
+    assert sc.name == "burst_flap"
+
+    def one(engine):
+        sim = Simulator(
+            _cfg(on_health=engine, reconfig_delay_s=30.0, serving_slo=2.0),
+            generate_trace(
+                12, num_gpus=GPUS, workload_level=1.1, seed=3,
+                max_job_gpus=GPUS // 4, serving_jobs=2, serving_gpus=256,
+            ),
+            fault_events=scenario_events(sc, K),
+        )
+        sim.run(until=H)
+        return sim, sim.serving_summary()
+
+    passive, p_ss = one([].append)
+    eng = RemediationEngine(cordon_base_s=600.0)
+    healed, h_ss = one(eng)
+    # the engine acted, and acting shrank the dark + fallback bill ...
+    assert eng.summary()["cordons"] >= 1
+    assert healed.downtime_s < passive.downtime_s
+    assert healed.solver_fallbacks < passive.solver_fallbacks
+    # ... which the users see: strictly better availability and goodput
+    assert h_ss["availability"] > p_ss["availability"]
+    assert h_ss["goodput"] > p_ss["goodput"]
+    # every remediation second is attributed; conservation exact
+    res = attribute_requests(healed)
+    assert res["conserved"] and res["max_residual"] <= 1e-6
+    assert res["totals"].get("cordon", 0.0) > 0
+    assert res["totals"].get("remediation", 0.0) > 0
+    blames = attribute_jobs(healed)
+    assert max(abs(b.residual) for b in blames.values()) <= 1e-6
