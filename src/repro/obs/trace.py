@@ -57,6 +57,7 @@ CATEGORY_TIDS = {
     "flow": 7,
     "serving": 8,
     "health": 9,
+    "router": 10,  # request-routing decisions (pool/demand restatements)
 }
 _PID = 1  # one synthetic process: "cluster"
 # export-time lane tids: category c's overflow lanes start here so they

@@ -1,0 +1,451 @@
+"""Request routing between ``serving_trace`` arrivals and decode pools.
+
+The scheduler's disaggregated serving fleets (``Job.kind == "serve"``,
+PR 5) place requests by a *static* pool split: one pooled arrival stream,
+one fleet-level φ timeline, no per-request decisions.  This module adds
+the control plane the ROADMAP's "millions of users" half calls for — a
+router in the style of vLLM production-stack's ``routing_logic.py``
+(round-robin / session / prefix-aware / overload detection), extended
+with a policy that *sees the optical fabric*:
+
+``random``
+    uniform choice over the live decode pool — the baseline every other
+    policy must beat.
+``round_robin``
+    cycle through the live pool in pod-id order.
+``session_affinity``
+    sessions pin to a decode pod by rendezvous (highest-random-weight)
+    hashing: a repeat request finds its KV prefix resident (*hit*) and
+    skips the prefill→decode KV stream entirely; pool membership changes
+    move only the sessions of departed pods.
+``kv_aware``
+    session affinity plus overload detection: within each
+    ``overload_window_s`` window, pods drawing more than
+    ``overload_factor ×`` their fair share of requests spill the excess
+    to their rendezvous runner-up — trading prefix-cache hits (the
+    spilled requests re-stream their KV) for tail latency.
+``topology_aware``
+    session affinity scored by φ headroom: the rendezvous weight of pod
+    ``p`` for a request at ``t`` is ``φ_p(t)^headroom_gamma``, where
+    ``φ_p`` is the per-pod realized-bandwidth timeline the scheduler
+    records for the fleet's prefill→p KV circuits.  Pods behind dark
+    windows (φ = 0) or :class:`~repro.fault.masks.PortMask` cordons are
+    *hard-excluded* while any healthy alternative exists, so load sheds
+    away from retuning or quarantined circuits (the remediation engine's
+    drain signals remove pods from the pool outright, via the
+    scheduler's pool log).
+
+Cache-hit-rate vs transfer-bytes is an explicit tradeoff: a *hit* costs
+only the circuit latency ``alpha_s``; a *miss* pays the full ``kv_flow``
+transfer under the pod's φ timeline.  ``random`` / ``round_robin`` never
+pin sessions, so they never hit — exactly the legacy pooled behaviour,
+which keeps the scheduler-level differential (`random` on a one-pod
+fleet reproduces the unrouted numbers bit-for-bit).
+
+Routing is *replayed* after the run, like the request streams
+themselves: the scheduler records what the router needs (decode-pool
+membership history, per-pod φ timelines, per-pod cordon counts) and
+:meth:`Router.replay` deterministically re-derives every per-request
+decision — requests never enter the event heap, so the simulator stays
+O(events), not O(requests).
+
+>>> import numpy as np
+>>> r = Router("round_robin", seed=1)
+>>> res = r.replay(np.array([0.5, 1.0, 1.5, 2.0]), [(0.0, (3, 4))], {})
+>>> res.pods.tolist()
+[3, 4, 3, 4]
+>>> r = Router("topology_aware", seed=1)
+>>> tls = {3: [(0.0, 0.0)], 4: [(0.0, 1.0)]}   # pod 3 dark throughout
+>>> res = r.replay(np.array([0.5, 1.0, 1.5, 2.0]), [(0.0, (3, 4))], tls)
+>>> res.pods.tolist(), int(res.stats["sheds"]) > 0
+([4, 4, 4, 4], True)
+>>> int(res.stats["hits"]) + int(res.stats["misses"]) == 4
+True
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "AFFINITY_POLICIES",
+    "POLICIES",
+    "RouteResult",
+    "Router",
+    "partition_edges",
+]
+
+POLICIES = (
+    "random", "round_robin", "session_affinity", "kv_aware",
+    "topology_aware",
+)
+# policies that pin sessions to pods (and therefore can *hit* the
+# decode-side prefix cache); random / round_robin stay stateless
+AFFINITY_POLICIES = frozenset(
+    {"session_affinity", "kv_aware", "topology_aware"}
+)
+
+_MIX1 = np.uint64(0x9E3779B97F4A7C15)
+_MIX2 = np.uint64(0xBF58476D1CE4E5B9)
+_MIX3 = np.uint64(0xFF51AFD7ED558CCD)
+_MIX4 = np.uint64(0xC4CEB9FE1A85EC53)
+_S33 = np.uint64(33)
+
+
+def _hash01(sid: np.ndarray, pod: int, salt: int) -> np.ndarray:
+    """Per-(session, pod) uniforms in (0, 1] — splitmix64-style mixing,
+    so rendezvous choices are deterministic, stable across runs, and
+    independent of pool iteration order."""
+    with np.errstate(over="ignore"):
+        x = sid.astype(np.uint64) * _MIX1
+        x ^= np.uint64((pod + 1) * 0x9E3779B9) * _MIX2
+        x ^= np.uint64(salt & 0xFFFFFFFF) * _MIX4
+        x ^= x >> _S33
+        x *= _MIX3
+        x ^= x >> _S33
+        x *= _MIX4
+        x ^= x >> _S33
+    # top 53 bits → (0, 1]: never exactly 0, so -log(u) stays finite
+    return ((x >> np.uint64(11)).astype(np.float64) + 1.0) * (2.0 ** -53)
+
+
+def _step_at(
+    timeline: Sequence[Tuple[float, float]],
+    query: np.ndarray,
+    default: float,
+) -> np.ndarray:
+    """Piecewise-constant lookup: value holding at each query time
+    (``default`` before the first breakpoint / for an empty timeline)."""
+    if not len(timeline):
+        return np.full(query.shape, default, dtype=np.float64)
+    ts = np.asarray([t for t, _ in timeline], dtype=np.float64)
+    vs = np.asarray([v for _, v in timeline], dtype=np.float64)
+    idx = np.searchsorted(ts, query, side="right") - 1
+    out = np.full(query.shape, default, dtype=np.float64)
+    ok = idx >= 0
+    out[ok] = vs[idx[ok]]
+    return out
+
+
+def partition_edges(
+    edges: Dict[Tuple[int, int], int], decode_pods: Iterable[int]
+) -> Dict[int, Dict[Tuple[int, int], int]]:
+    """Split a serving fleet's KV edge demand by owning decode pod.
+
+    Each prefill→decode edge belongs to its decode endpoint; a
+    decode↔decode edge (the MoE EP-spill clique) is charged to the lower
+    pod id, and an edge touching no decode pod falls to the lowest pod so
+    no demand is ever dropped from the flow model.  The scheduler turns
+    each part into its own :class:`~repro.sim.flowsim.JobFlows`, giving
+    every decode pod a φ timeline of its own — the signal
+    ``topology_aware`` routing scores by.
+
+    >>> parts = partition_edges({(0, 2): 4, (0, 3): 4, (2, 3): 1}, [2, 3])
+    >>> sorted((p, sorted(e)) for p, e in parts.items())
+    [(2, [(0, 2), (2, 3)]), (3, [(0, 3)])]
+    """
+    dec = sorted(set(decode_pods))
+    dset = set(dec)
+    parts: Dict[int, Dict[Tuple[int, int], int]] = {}
+    for e, w in edges.items():
+        a, b = e
+        if a in dset and b in dset:
+            pod = min(a, b)
+        elif a in dset:
+            pod = a
+        elif b in dset:
+            pod = b
+        else:
+            pod = dec[0]
+        parts.setdefault(pod, {})[e] = w
+    return parts
+
+
+@dataclasses.dataclass
+class RouteResult:
+    """Outcome of one :meth:`Router.replay` pass.
+
+    ``pods[i]`` is request *i*'s decode pod (−1 = no decode pool at that
+    time: single-pod fleet or a fleet that died — the caller prices such
+    requests against the fleet-level φ timeline), ``hits[i]`` whether its
+    KV prefix was already resident (the request skips the KV stream).
+    ``stats`` carries the ``routing.*`` counter values."""
+
+    pods: np.ndarray
+    hits: np.ndarray
+    stats: Dict[str, float]
+
+
+class Router:
+    """Deterministic request router for one serving fleet (see module
+    docstring for the policy axis).  ``seed`` may be anything
+    ``np.random.default_rng`` accepts — the scheduler passes
+    ``(sim_seed, job_id)`` so fleets draw independent session streams.
+    """
+
+    def __init__(
+        self,
+        policy: str,
+        seed=0,
+        session_mean: float = 8.0,
+        working_set: int = 64,
+        overload_window_s: float = 60.0,
+        overload_factor: float = 2.0,
+        phi_floor: float = 0.25,
+        headroom_gamma: float = 2.0,
+    ):
+        if policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}")
+        if session_mean < 1.0:
+            raise ValueError("session_mean must be >= 1 request/session")
+        self.policy = policy
+        self.seed = seed
+        self.session_mean = float(session_mean)
+        self.working_set = int(working_set)
+        self.overload_window_s = float(overload_window_s)
+        self.overload_factor = float(overload_factor)
+        self.phi_floor = float(phi_floor)
+        self.headroom_gamma = float(headroom_gamma)
+        # stable per-router salt for the rendezvous hash (NOT drawn from
+        # the replay rng: replay must be pure / repeatable per call)
+        self._salt = int(
+            np.random.default_rng(seed).integers(0, 2**31 - 1)
+        )
+
+    # ---- event-time hook (scheduler demand shaping) ----------------------
+
+    def demand_weights(
+        self,
+        decode_pods: Sequence[int],
+        phi_by_pod: Dict[int, float],
+        cordoned_by_pod: Dict[int, int],
+    ) -> Optional[Dict[int, float]]:
+        """Per-decode-pod KV-circuit weights for the next demand
+        restatement — the router-shaped ``kv_flow``.
+
+        Only ``topology_aware`` shapes demand (its replay *sends* load
+        where φ has headroom, so TE should provision circuits there);
+        every other policy returns None and the legacy even spread is
+        byte-identical.  Weights are floored at 0.1 for non-cordoned
+        pods — φ dips are transient, and a starved pair could never
+        recover (demand restatements happen at event cadence, not per
+        request).
+
+        >>> r = Router("topology_aware")
+        >>> w = r.demand_weights([2, 3], {2: 1.0, 3: 0.25}, {3: 1})
+        >>> w[2] > w[3] == 0.0
+        True
+        >>> Router("round_robin").demand_weights([2], {2: 1.0}, {}) is None
+        True
+        """
+        if self.policy != "topology_aware":
+            return None
+        out: Dict[int, float] = {}
+        for p in decode_pods:
+            if cordoned_by_pod.get(p, 0):
+                out[p] = 0.0
+            else:
+                phi = float(phi_by_pod.get(p, 1.0))
+                out[p] = max(0.1, phi ** self.headroom_gamma)
+        if all(v == 0.0 for v in out.values()):
+            out = {p: 1.0 for p in decode_pods}  # everything cordoned
+        return out
+
+    # ---- session stream --------------------------------------------------
+
+    def _sessions(self, n: int, rng: np.random.Generator) -> np.ndarray:
+        """Session id per request: a new session opens with probability
+        1/session_mean (geometric session lengths), otherwise a recent
+        session from the working set re-issues."""
+        new = rng.random(n) < 1.0 / self.session_mean
+        off = rng.integers(0, max(1, self.working_set), size=n)
+        if n:
+            new[0] = True
+        latest = np.cumsum(new) - 1
+        return np.where(new, latest, np.maximum(0, latest - off))
+
+    # ---- replay ----------------------------------------------------------
+
+    def replay(
+        self,
+        arrivals: np.ndarray,
+        pool_log: Sequence[Tuple[float, Tuple[int, ...]]],
+        phi_timelines: Dict[int, Sequence[Tuple[float, float]]],
+        cordon_log: Optional[Dict[int, Sequence[Tuple[float, float]]]] = None,
+    ) -> RouteResult:
+        """Route every request post-hoc from the scheduler's records.
+
+        ``pool_log`` is the decode-pool membership history ``[(t,
+        (pods...)), ...]`` (drains/autoscales/failures appear as new
+        entries), ``phi_timelines`` the per-pod φ breakpoints recorded
+        under ``(job_id, pod)`` keys, ``cordon_log`` per-pod cordoned
+        OCS-slot counts over time.  Pure: a fresh rng is derived from
+        ``seed`` on every call, so two replays of the same run agree
+        bit-for-bit (``serving_summary`` is recomputed freely).
+        """
+        arrivals = np.asarray(arrivals, dtype=np.float64)
+        n = arrivals.size
+        pods = np.full(n, -1, dtype=np.int64)
+        hits = np.zeros(n, dtype=bool)
+        stats = {
+            "policy": self.policy, "requests": float(n), "hits": 0.0,
+            "misses": float(n), "sheds": 0.0, "overloads": 0.0,
+            "hit_rate": 0.0, "pods_used": 0.0,
+        }
+        if n == 0 or not pool_log:
+            return RouteResult(pods, hits, stats)
+        rng = np.random.default_rng(self.seed)
+        # draw order is fixed and policy-independent: same seed, same
+        # request stream → same sessions under every policy
+        r_pod = rng.integers(0, np.iinfo(np.int64).max, size=n)
+        sid = self._sessions(n, rng)
+        cordon_log = cordon_log or {}
+
+        # segments of constant router state: pool membership + cordons
+        # (φ varies *within* a segment and is looked up per request)
+        bounds = sorted(
+            {t for t, _ in pool_log}
+            | {t for tl in cordon_log.values() for t, _ in tl}
+        )
+        seg_of = np.clip(
+            np.searchsorted(bounds, arrivals, side="right") - 1,
+            0, len(bounds) - 1,
+        )
+        pool_ts = [t for t, _ in pool_log]
+        rr_base = 0  # round-robin cursor carries across segments
+        sheds = overloads = 0
+        for s in np.unique(seg_of):
+            mask = seg_of == s
+            t_seg = bounds[s]
+            k = min(
+                len(pool_log) - 1,
+                max(0, np.searchsorted(pool_ts, t_seg, side="right") - 1),
+            )
+            pool = list(pool_log[k][1])
+            cnt = int(mask.sum())
+            if not pool:
+                continue  # no decode pool: fleet-level fallback (-1)
+            m = len(pool)
+            if self.policy == "random":
+                pods[mask] = np.asarray(pool)[r_pod[mask] % m]
+                continue
+            if self.policy == "round_robin":
+                pods[mask] = np.asarray(pool)[
+                    (rr_base + np.arange(cnt)) % m
+                ]
+                rr_base += cnt
+                continue
+            # ---- affinity policies: rendezvous hashing -------------------
+            sid_seg = sid[mask]
+            u = np.stack(
+                [_hash01(sid_seg, p, self._salt) for p in pool], axis=1
+            )
+            plain = np.argmax(u, axis=1)  # health-blind sticky choice
+            if self.policy == "topology_aware":
+                t_req = arrivals[mask]
+                phi = np.stack(
+                    [
+                        _step_at(phi_timelines.get(p, ()), t_req, 1.0)
+                        for p in pool
+                    ],
+                    axis=1,
+                )
+                cord = np.asarray(
+                    [
+                        _step_at(
+                            cordon_log.get(p, ()), np.asarray([t_seg]), 0.0
+                        )[0] > 0
+                        for p in pool
+                    ]
+                )
+                eligible = (phi > 0.0) & ~cord[None, :]
+                # soft floor: shed from pods far below the pool's best φ
+                best = np.max(np.where(eligible, phi, 0.0), axis=1)
+                strong = eligible & (
+                    phi >= self.phi_floor * best[:, None]
+                )
+                use = np.where(
+                    strong.any(axis=1)[:, None], strong,
+                    np.where(eligible.any(axis=1)[:, None], eligible, True),
+                )
+                w = np.maximum(phi, 1e-9) ** self.headroom_gamma
+                score = -np.log(u) / w  # weighted rendezvous: argmin
+                score[~use] = np.inf
+                choice = np.argmin(score, axis=1)
+                # a shed is load *forced off* an unhealthy sticky pod —
+                # φ-headroom re-weighting alone is not a shed
+                sheds += int(
+                    (~use[np.arange(plain.size), plain]).sum()
+                )
+            else:
+                choice = plain
+                if self.policy == "kv_aware":
+                    choice, spilled = self._spill_overloads(
+                        arrivals[mask], choice, u, m
+                    )
+                    overloads += spilled
+                    sheds += spilled
+            pods[mask] = np.asarray(pool)[choice]
+
+        # hits: an affinity-pinned request whose session's previous
+        # request landed on the same (valid) pod — its KV prefix is
+        # still resident, so the prefill→decode stream is skipped
+        if self.policy in AFFINITY_POLICIES:
+            order = np.argsort(sid, kind="stable")
+            ps, ss = pods[order], sid[order]
+            h = np.zeros(n, dtype=bool)
+            h[1:] = (ss[1:] == ss[:-1]) & (ps[1:] == ps[:-1]) & (ps[1:] >= 0)
+            hits[order] = h
+        nhits = int(hits.sum())
+        stats.update(
+            hits=float(nhits), misses=float(n - nhits),
+            sheds=float(sheds), overloads=float(overloads),
+            hit_rate=nhits / n, pods_used=float(len(set(pods[pods >= 0]))),
+        )
+        return RouteResult(pods, hits, stats)
+
+    def _spill_overloads(
+        self,
+        t_req: np.ndarray,
+        choice: np.ndarray,
+        u: np.ndarray,
+        m: int,
+    ) -> Tuple[np.ndarray, int]:
+        """kv_aware overload detection: inside each window, pods above
+        ``overload_factor ×`` fair share spill their latest-arriving
+        excess to the rendezvous runner-up among non-overloaded pods."""
+        choice = choice.copy()
+        spilled = 0
+        if m < 2 or t_req.size == 0:
+            return choice, spilled
+        t0, t1 = float(t_req[0]), float(t_req[-1])
+        edges = np.arange(t0, t1 + self.overload_window_s,
+                          self.overload_window_s)
+        win = np.clip(
+            np.searchsorted(edges, t_req, side="right") - 1,
+            0, max(0, len(edges) - 1),
+        )
+        for wdx in np.unique(win):
+            sel = np.nonzero(win == wdx)[0]
+            counts = np.bincount(choice[sel], minlength=m)
+            cap = max(1, int(math.ceil(
+                self.overload_factor * sel.size / m
+            )))
+            ok = counts <= cap
+            if ok.all() or not ok.any():
+                continue
+            runner = np.argsort(-u[sel], axis=1)  # per-request preference
+            for p in np.nonzero(~ok)[0]:
+                mine = sel[choice[sel] == p]
+                excess = mine[cap:]  # earliest keep their pin
+                if excess.size == 0:
+                    continue
+                # best-ranked non-overloaded pod per spilled request
+                alt = runner[np.searchsorted(sel, excess)]
+                pick = np.argmax(ok[alt], axis=1)
+                choice[excess] = alt[np.arange(excess.size), pick]
+                spilled += int(excess.size)
+        return choice, spilled

@@ -29,6 +29,8 @@ from .serving import (
     serving_job,
     serving_trace,
 )
+from ..serve.router import POLICIES as ROUTER_POLICIES
+from ..serve.router import RouteResult, Router
 from .trace import arrival_rate_for, generate_trace
 
 __all__ = [
@@ -39,6 +41,9 @@ __all__ = [
     "FluidSim",
     "JobFlows",
     "JobRecord",
+    "ROUTER_POLICIES",
+    "RouteResult",
+    "Router",
     "ScaleEvent",
     "SimConfig",
     "Simulator",

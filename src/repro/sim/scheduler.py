@@ -80,6 +80,7 @@ from ..obs import health as obs_health
 from ..obs import metrics as obs_metrics
 from ..obs import recorder as obs_recorder
 from ..obs import trace as obs_trace
+from ..serve import router as serve_router
 from . import flowsim
 from . import fluid as fluid_engine
 from . import serving as serving_mod
@@ -165,6 +166,12 @@ class SimConfig:
     # latency stays within serving_slo × the ideal (φ=1) transfer time
     serving_period_s: float = 86400.0  # diurnal period of serving load
     # (shared by request arrivals and scripted autoscale schedules)
+    router: Optional[str] = None  # request-routing policy for serving
+    # fleets (repro.serve.router.POLICIES).  None = legacy pooled
+    # placement, byte-identical to the pre-router simulator; a policy
+    # name gives every fleet per-decode-pod φ accounting, per-request
+    # placement in serving_summary, and (topology_aware) router-shaped
+    # KV demand
     # ---- observability (repro.obs) ---------------------------------------
     tracer: Optional[obs_trace.NullTracer] = dataclasses.field(
         default=None, compare=False, repr=False
@@ -187,6 +194,10 @@ class SimConfig:
             raise ValueError(f"engine must be one of {ENGINES}")
         if self.reconfig_delay_s < 0:
             raise ValueError("reconfig_delay_s must be >= 0")
+        if self.router is not None and self.router not in serve_router.POLICIES:
+            raise ValueError(
+                f"router must be None or one of {serve_router.POLICIES}"
+            )
 
     @property
     def spec(self) -> ClusterSpec:
@@ -239,6 +250,7 @@ class _Running:
         "job", "placement", "edges", "comm_frac", "progress", "slowdown",
         "last_t", "record", "compute_scale", "cur_gpus", "ckpt_progress",
         "prefill_pods", "decode_pods", "kv_links", "replica_gpus",
+        "router",
     )
 
     def __init__(
@@ -271,6 +283,8 @@ class _Running:
         self.decode_pods: List[int] = []
         self.kv_links = 0
         self.replica_gpus = 0
+        # per-fleet request router (None = legacy pooled placement)
+        self.router: Optional[serve_router.Router] = None
 
     @property
     def pods(self) -> Dict[int, int]:
@@ -328,7 +342,8 @@ def _split_pools(
         got += pods[p]
         if got >= want:
             break
-    return prefill, [p for p in order if p not in prefill]
+    taken = set(prefill)  # O(1) membership: fleets can span many pods
+    return prefill, [p for p in order if p not in taken]
 
 
 class Simulator:
@@ -436,6 +451,16 @@ class Simulator:
         self._serving_work: Dict[int, Tuple[float, float]] = {}  # jid →
         # (work_s at φ=1, alpha_s), frozen at first start for the latency
         # integration (pool reshapes show up through φ, not the stripe)
+        # ---- request routing (repro.serve.router) ------------------------
+        # replay inputs the router needs after the run: decode-pool
+        # membership history, and per-pod cordoned-slot counts; per-pod
+        # φ lands in the shared timeline under (jid, pod) keys.  All
+        # three stay empty when cfg.router is None, so pooled runs keep
+        # their exact pre-router metric surface
+        self._routers: Dict[int, serve_router.Router] = {}
+        self._pool_log: Dict[int, List[Tuple[float, Tuple[int, ...]]]] = {}
+        self._cordon_log: Dict[int, List[Tuple[float, float]]] = {}
+        self._routing_counted: set = set()  # jids with routing.* counted
         # ---- fluid engine state (repro.sim.fluid) ------------------------
         self._dark = fluid_engine.DarkWindows()  # circuits retuning now
         self._pod_down_since: Dict[int, float] = {}
@@ -739,10 +764,23 @@ class Simulator:
         return self.mask.effective_pair_capacity(config)
 
     def _refresh_slowdowns(self, now: float, config: Optional[OCSConfig]) -> None:
-        flows = [
-            flowsim.JobFlows(jid, r.edges, r.comm_frac)
-            for jid, r in self.running.items()
-        ]
+        # routed serving fleets are decomposed into one sub-flow per
+        # decode pod (repro.serve.router.partition_edges), so every pod
+        # gets its own φ timeline — the signal topology-aware routing
+        # scores by.  Unrouted jobs keep the exact legacy single-flow
+        # path (pooled runs stay byte-identical)
+        flows = []
+        routed: List[Tuple[int, _Running, Dict]] = []
+        for jid, r in self.running.items():
+            if r.router is not None and r.decode_pods and r.edges:
+                parts = serve_router.partition_edges(r.edges, r.decode_pods)
+                for pod, pe in sorted(parts.items()):
+                    flows.append(
+                        flowsim.JobFlows((jid, pod), pe, r.comm_frac)
+                    )
+                routed.append((jid, r, parts))
+            else:
+                flows.append(flowsim.JobFlows(jid, r.edges, r.comm_frac))
         cap = self.spec.slowdown_cap
         pcap = self._pair_cap_arg(config)
         if self.cfg.engine == "fluid":
@@ -755,8 +793,11 @@ class Simulator:
                 self.spec, flows, config, self.cfg.architecture,
                 pair_cap=pcap,
             )
+        routed_ids = {jid for jid, _, _ in routed}
         for jid, r in self.running.items():
             r.advance(now)
+            if jid in routed_ids:
+                continue  # per-pod accounting below
             p = phi.get(jid, 1.0)
             # compute_scale > 1 after shrink-collective: fewer GPUs do the
             # same work, on top of any communication stretch
@@ -770,6 +811,23 @@ class Simulator:
                 # blame replay integrates exactly these breakpoints —
                 # the progress-rate twin of the serving φ timeline
                 self.attrib.rate.point(jid, now, 1.0 / r.slowdown)
+        for jid, r, parts in routed:
+            pod_phi = []
+            for p in r.decode_pods:
+                # a pod the router-shaped demand starved of circuits
+                # (weight 0: cordoned) has no sub-flow and no bandwidth
+                pp = float(phi.get((jid, p), 1.0)) if p in parts else 0.0
+                pod_phi.append(pp)
+                self._phi.point((jid, p), now, pp)
+            # fleet-level φ = worst pod: the timeline blame replay and
+            # the health monitor integrate (conservative aggregate — a
+            # single struggling pod is exactly what they should see)
+            pf = min(pod_phi) if pod_phi else 1.0
+            r.slowdown = r.compute_scale * flowsim.job_slowdown(
+                r.comm_frac, pf, cap=cap
+            )
+            r.record.min_phi = min(r.record.min_phi, pf)
+            self._phi_point(now, jid, pf)
 
     def _phi_point(self, t: float, jid: int, phi: float) -> None:
         """Append a (t, φ) breakpoint to a serving job's realized-bandwidth
@@ -803,11 +861,50 @@ class Simulator:
         phase = 2 * math.pi * (now - job.arrival) / self.cfg.serving_period_s
         return job.req_rate * (1.0 + job.diurnal * math.sin(phase))
 
+    def _phi_last(self, key, default: float = 1.0) -> float:
+        """Last recorded value of one φ timeline (1.0 before any point)."""
+        tl = self._phi.get(key, ())
+        return float(tl[-1][1]) if len(tl) else default
+
     def _kv_edges(self, r: _Running, now: float):
+        weights = None
+        if r.router is not None and r.decode_pods:
+            jid = r.job.job_id
+            weights = r.router.demand_weights(
+                r.decode_pods,
+                {p: self._phi_last((jid, p)) for p in r.decode_pods},
+                {
+                    p: int(self.mask.cordoned[:, :, p].sum())
+                    for p in r.decode_pods
+                },
+            )
+            if weights is not None and self.trace.enabled:
+                self.trace.instant(
+                    "router", "demand_weights", ts=now, job_id=jid,
+                    weights={
+                        str(p): round(w, 4)
+                        for p, w in sorted(weights.items())
+                    },
+                )
         return dist_demand.serving_edges(
             r.job.model, r.prefill_pods, r.decode_pods, r.kv_links,
             self._rate_at(r.job, now), r.job.kv_tokens,
+            weights=weights,
         )
+
+    def _log_pool(self, t: float, r: _Running) -> None:
+        """Record a decode-pool membership breakpoint — the router's
+        replay input.  Every pool mutation (start, autoscale, failure
+        shrink, remediation drain) appends one entry."""
+        if r.router is not None:
+            self._pool_log.setdefault(r.job.job_id, []).append(
+                (t, tuple(r.decode_pods))
+            )
+            if self.trace.enabled:
+                self.trace.instant(
+                    "router", "pool", ts=t, job_id=r.job.job_id,
+                    decode_pods=list(r.decode_pods),
+                )
 
     def _start_serving(
         self, job: Job, pods: Dict[int, int], rec: JobRecord, start_t: float
@@ -828,6 +925,14 @@ class Simulator:
                 // max(1, len(run.decode_pods)))
             if run.decode_pods else self.spec.gpus_per_pod
         )
+        if self.cfg.router is not None:
+            run.router = self._routers.get(job.job_id)
+            if run.router is None:
+                run.router = serve_router.Router(
+                    self.cfg.router, seed=(self.seed, job.job_id)
+                )
+                self._routers[job.job_id] = run.router
+            self._log_pool(start_t, run)
         run.edges = self._kv_edges(run, start_t)
         ab = dist_collectives.AlphaBeta()
         if run.edges:
@@ -897,6 +1002,7 @@ class Simulator:
             )
         if changed == 0:
             return
+        self._log_pool(now, r)
         r.edges = self._kv_edges(r, now)
 
     def _shrink_serving(self, now: float, r: _Running, pod: int) -> None:
@@ -922,7 +1028,9 @@ class Simulator:
         if not r.pods:
             del self.running[r.job.job_id]
             self._phi_point(now, r.job.job_id, 0.0)
+            self._log_pool(now, r)  # fleet died: empty decode pool
             return
+        self._log_pool(now, r)
         r.edges = self._kv_edges(r, now)
         r.record.shrinks += 1
         self._c_shrinks.inc()
@@ -1020,6 +1128,12 @@ class Simulator:
         if was_trivial:
             self.attrib.degraded_begin(now)
         self.attrib.cordon_begin(now)
+        if self._routers:
+            # routers shed load off cordoned pods: record the per-pod
+            # cordon-count breakpoint their replay reads
+            self._cordon_log.setdefault(pod, []).append(
+                (now, float(self.mask.cordoned[:, :, pod].sum()))
+            )
         self.metrics.counter("remediation.cordons").inc()
         if self.trace.enabled:
             self.trace.instant(
@@ -1037,6 +1151,10 @@ class Simulator:
         self.attrib.cordon_end(now)
         if self.mask.is_trivial():
             self.attrib.degraded_end(now)
+        if self._routers:
+            self._cordon_log.setdefault(pod, []).append(
+                (now, float(self.mask.cordoned[:, :, pod].sum()))
+            )
         self.metrics.counter("remediation.readmits").inc()
         if self.trace.enabled:
             self.trace.instant(
@@ -1091,6 +1209,7 @@ class Simulator:
         n = r.pods.pop(pod)
         self.free[pod] += n
         r.cur_gpus = max(0, r.cur_gpus - n)
+        self._log_pool(now, r)
         r.edges = self._kv_edges(r, now)
         self.metrics.counter("remediation.drains").inc()
         if self.trace.enabled:
@@ -1602,12 +1721,62 @@ class Simulator:
                 if span > 0 and j.req_rate > 0 else _EMPTY
             )
             work, alpha_s = self._serving_work.get(j.job_id, (0.0, 0.0))
-            lat = serving_mod.request_latencies(
-                arrivals, work, self.phi_timeline.get(j.job_id, ()),
-                alpha_s=alpha_s,
-            )
+            fleet_tl = self.phi_timeline.get(j.job_id, ())
+            router = self._routers.get(j.job_id)
+            route = None
+            phi_tls: Dict[int, object] = {}
+            if router is not None:
+                # per-request placement, replayed deterministically from
+                # the run's records (pool membership, per-pod φ, cordon
+                # counts) — requests never entered the event heap
+                pool_log = self._pool_log.get(j.job_id, [])
+                phi_tls = {
+                    p: self.phi_timeline.get((j.job_id, p), ())
+                    for p in sorted(
+                        {q for _, pool in pool_log for q in pool}
+                    )
+                }
+                route = router.replay(
+                    arrivals, pool_log, phi_tls, self._cordon_log
+                )
+                lat = np.empty(arrivals.shape, dtype=np.float64)
+                miss = ~route.hits
+                for pod in np.unique(route.pods):
+                    sel = miss & (route.pods == pod)
+                    if not sel.any():
+                        continue
+                    # pod −1 = no decode pool at that time (single-pod
+                    # fleet / dead fleet): fleet-level timeline
+                    tl = fleet_tl if pod < 0 else phi_tls.get(int(pod), ())
+                    lat[sel] = serving_mod.request_latencies(
+                        arrivals[sel], work, tl, alpha_s=alpha_s
+                    )
+                # a hit finds its KV prefix resident on the decode pod:
+                # the prefill→decode stream is skipped entirely and the
+                # request pays only the circuit latency
+                lat[route.hits] = alpha_s
+            else:
+                lat = serving_mod.request_latencies(
+                    arrivals, work, fleet_tl, alpha_s=alpha_s
+                )
             slo = self.cfg.serving_slo * (work + alpha_s)
             row = serving_mod.summarize_requests(lat, slo)
+            if route is not None:
+                kvb = (
+                    j.kv_tokens * dist_demand.kv_bytes_per_token(j.model)
+                )
+                row["routing"] = dict(
+                    route.stats,
+                    kv_bytes_streamed=route.stats["misses"] * kvb,
+                    kv_bytes_saved=route.stats["hits"] * kvb,
+                )
+                if j.job_id not in self._routing_counted:
+                    # summaries may be recomputed; count each fleet once
+                    self._routing_counted.add(j.job_id)
+                    for key in ("hits", "misses", "sheds", "overloads"):
+                        self.metrics.counter(f"routing.{key}").inc(
+                            route.stats[key]
+                        )
             row["ideal_s"] = work + alpha_s
             row["slo_s"] = slo
             if span > 0:
@@ -1628,7 +1797,6 @@ class Simulator:
                         hist.observe(float(v))
                 tr = self.trace
                 if tr.enabled:
-                    tl = self.phi_timeline.get(j.job_id, ())
                     cap = min(len(arrivals), tr.request_cap)
                     tr.dropped += len(arrivals) - cap
                     for n in range(cap):
@@ -1639,6 +1807,11 @@ class Simulator:
                                 job_id=j.job_id, req=n,
                             )
                             continue
+                        tl = fleet_tl
+                        if route is not None and route.pods[n] >= 0:
+                            # routed miss: phases against *its* pod's
+                            # timeline (hits have zero transfer anyway)
+                            tl = phi_tls.get(int(route.pods[n]), fleet_tl)
                         q, x, d = serving_mod.request_phases(
                             a, l, tl, alpha_s=alpha_s
                         )

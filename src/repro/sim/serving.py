@@ -36,8 +36,10 @@ The scheduler-facing entry points are :func:`serving_job` (build a
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import math
+import operator
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -64,6 +66,8 @@ __all__ = [
 
 # per-transfer circuit latency: one cross-pod hop of the alpha-beta model
 KV_ALPHA_S = AlphaBeta().alpha_cross_pod
+
+_T0 = operator.itemgetter(0)  # breakpoint time, for bisect key=
 
 
 @dataclasses.dataclass(frozen=True)
@@ -241,8 +245,16 @@ def request_latencies(
         arrivals[inside] - ts[idx[inside]]
     ) * phis[idx[inside]]
     target = I_a + work_s
-    # first breakpoint whose cumulative integral reaches the target
+    # first breakpoint whose cumulative integral reaches the target; the
+    # finish segment can never precede the arrival's segment.  When the
+    # target lands *exactly* on a zero-φ plateau's cumulative value
+    # (work_s → 0, or an arrival inside a dark window), side="left"
+    # picks the plateau's first breakpoint — possibly before the arrival
+    # itself, which used to yield a negative latency.  Clamp to the
+    # arrival's segment; for work_s > 0 the searchsorted result already
+    # satisfies ``j >= idx + 1`` (target > I_a >= I[idx]).
     j = np.searchsorted(I, target, side="left")
+    j[inside] = np.maximum(j[inside], idx[inside] + 1)
     finish = np.empty_like(arrivals)
     open_end = j >= len(ts)  # target lands beyond the last breakpoint
     inner = ~open_end
@@ -314,11 +326,20 @@ def request_phases(
         return math.inf, 0.0, alpha_s
     finish = arrival + latency - alpha_s
     busy = 0.0  # time with φ > 0 inside [arrival, finish]
-    for n, (t, phi) in enumerate(timeline):
-        seg_end = timeline[n + 1][0] if n + 1 < len(timeline) else finish
-        a, b = max(t, arrival), min(seg_end, finish)
-        if b > a and phi > 0:
-            busy += b - a
+    if timeline and finish > arrival:
+        # only segments overlapping [arrival, finish] can contribute —
+        # binary-search the window bounds instead of scanning the whole
+        # timeline (chaos runs accumulate thousands of breakpoints, and
+        # this runs once per traced request)
+        n_seg = len(timeline)
+        lo = max(0, bisect.bisect_right(timeline, arrival, key=_T0) - 1)
+        hi = bisect.bisect_left(timeline, finish, lo, n_seg, key=_T0)
+        for n in range(lo, hi):
+            t, phi = timeline[n]
+            seg_end = timeline[n + 1][0] if n + 1 < n_seg else finish
+            a, b = max(t, arrival), min(seg_end, finish)
+            if b > a and phi > 0:
+                busy += b - a
     transfer = min(busy, finish - arrival)
     return (finish - arrival) - transfer, transfer, alpha_s
 

@@ -31,6 +31,7 @@ DOCTEST_MODULES = [
     "repro.obs.metrics",
     "repro.obs.report",
     "repro.obs.trace",
+    "repro.serve.router",
     "repro.sim.scheduler",
     "repro.sim.serving",
 ]

@@ -306,3 +306,92 @@ def test_fluid_latency_sensitive_history():
     assert tl and all(p == 1.0 for _, p in tl)
     lat = request_latencies(np.array([1.0, 20.0]), 0.5, tl, alpha_s=0.0)
     np.testing.assert_allclose(lat, 0.5, rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# zero-φ plateau regression + phase decomposition invariants
+# ---------------------------------------------------------------------------
+
+def test_request_latencies_zero_phi_plateau_exact_target():
+    """Regression: a request whose cumulative-work target lands exactly
+    on a zero-φ plateau must wait for the plateau to end, not finish at
+    its start (searchsorted(side="left") used to return the plateau's
+    own breakpoint, yielding a negative latency)."""
+    tl = [(0.0, 1.0), (1.0, 0.0), (3.0, 1.0)]
+    # arrival 2.0 sits inside the dark [1, 3) plateau with zero work:
+    # the transfer cannot complete before bandwidth returns at t = 3
+    lat = request_latencies(np.array([2.0]), 0.0, tl, alpha_s=0.0)
+    assert lat[0] == pytest.approx(1.0)
+    assert lat[0] >= 0.0
+
+    # the work → 0 limit is continuous: tiny positive work agrees
+    lat_eps = request_latencies(np.array([2.0]), 1e-12, tl, alpha_s=0.0)
+    assert lat_eps[0] == pytest.approx(1.0, abs=1e-9)
+
+    # zero work in a live segment still finishes instantly...
+    assert request_latencies(
+        np.array([0.5]), 0.0, tl, alpha_s=0.0
+    )[0] == pytest.approx(0.0)
+    # ...and zero work after a dead tail never finishes
+    assert math.isinf(request_latencies(
+        np.array([5.0]), 0.0, [(0.0, 1.0), (4.0, 0.0)], alpha_s=0.0
+    )[0])
+
+
+def test_request_latencies_never_negative_on_plateau_sweep():
+    """No arrival × work combination may price below zero on a timeline
+    riddled with dark plateaus."""
+    tl = [(0.0, 1.0), (1.0, 0.0), (2.0, 0.5), (4.0, 0.0), (6.0, 1.0),
+          (8.0, 0.0)]
+    arrivals = np.linspace(0.0, 7.5, 151)  # hits every breakpoint
+    for work in (0.0, 1e-9, 0.25, 1.0):
+        lat = request_latencies(arrivals, work, tl, alpha_s=0.0)
+        finite = lat[np.isfinite(lat)]
+        assert (finite >= -1e-12).all(), (work, finite.min())
+
+
+def test_request_phases_sum_invariant_long_timeline():
+    """queue + transfer + decode == latency on a long mixed timeline,
+    for every finite request (the binary-search window must not drop
+    segments)."""
+    from repro.sim.serving import request_phases
+
+    rng = np.random.default_rng(0)
+    # 500 breakpoints alternating dark / degraded / live
+    times = np.cumsum(rng.uniform(0.05, 0.4, size=500))
+    phis = rng.choice([0.0, 0.25, 0.5, 1.0], size=500,
+                      p=[0.2, 0.3, 0.2, 0.3])
+    tl = list(zip(times.tolist(), phis.tolist()))
+    arrivals = rng.uniform(0.0, times[-1], size=200)
+    lat = request_latencies(arrivals, 0.3, tl, alpha_s=0.01)
+    for a, l in zip(arrivals, lat):
+        q, x, d = request_phases(float(a), float(l), tl, alpha_s=0.01)
+        if math.isfinite(l):
+            assert q + x + d == pytest.approx(l, abs=1e-9)
+            assert q >= -1e-12 and x >= -1e-12
+        else:
+            assert math.isinf(q)
+
+
+def test_split_pools_partition_properties():
+    """_split_pools yields a partition: both pools non-empty on ≥ 2-pod
+    fleets, prefill GPU share ≥ prefill_frac minus one pod, and the
+    union (in id order, no duplicates) reconstructs the fleet."""
+    from repro.sim.scheduler import _split_pools
+
+    rng = np.random.default_rng(1)
+    for trial in range(50):
+        n = int(rng.integers(1, 40))
+        pods = {int(p): int(rng.integers(8, 65))
+                for p in rng.choice(1000, size=n, replace=False)}
+        frac = float(rng.uniform(0.05, 0.95))
+        pre, dec = _split_pools(pods, frac)
+        assert sorted(pre + dec) == sorted(pods)
+        assert not set(pre) & set(dec)
+        if n >= 2:
+            assert pre and dec
+            got = sum(pods[p] for p in pre)
+            want = frac * sum(pods.values())
+            assert got >= want - max(pods.values())
+        else:
+            assert dec == []
