@@ -1,0 +1,130 @@
+"""ours — the scenario suite end to end: goldens + calibration drift.
+
+Runs every catalogued multi-day scenario (``repro.scenario.CATALOG``)
+and emits one row per scenario with the headline summary metrics (JCT,
+goodput, SLO availability, p50/p99 TTFT, dark circuit-seconds, blame
+residual, action counts) plus the *calibration table* — the per-arch
+step times the suite derives from the committed ``BENCH_step.json``
+constants.
+
+Quick (CI) mode runs the reduced-scale ``quick_spec`` twins — same
+composition (chaos, expansion, routing, remediation), minutes of
+simulated time — and checks run-level byte-determinism per scenario.
+Full mode (``--full`` via benchmarks.run) runs the catalogued specs and
+additionally asserts each canonical summary matches its committed
+golden under ``tests/golden/scenarios/`` byte for byte.
+
+The ``check_regression.py --scenarios`` gate re-derives the invariants
+from this block's rows (golden match, determinism, blame conservation)
+and pins the recorded calibration constants against the current
+``BENCH_step.json`` — a re-bench that moves step times must ship
+regenerated scenario goldens with it.
+"""
+from __future__ import annotations
+
+import hashlib
+import math
+import os
+
+from repro.scenario import (
+    CATALOG,
+    calibration_report,
+    get_scenario,
+    quick_spec,
+    run_scenario,
+)
+
+from .common import save
+
+_GOLDEN_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "tests", "golden", "scenarios",
+)
+
+
+def _sha(text: str) -> str:
+    return hashlib.sha256(text.encode()).hexdigest()
+
+
+def _run_one(name: str, quick: bool) -> dict:
+    spec = quick_spec(get_scenario(name)) if quick else get_scenario(name)
+    summary, sim = run_scenario(spec)
+    text = summary.to_json() + "\n"
+    rerun, _ = run_scenario(spec)
+    t = summary.table
+    row = {
+        "scenario": name,
+        "quick": quick,
+        "horizon_s": spec.horizon_s,
+        "avg_jct": t["train"]["avg_jct"],
+        "train_finished": t["train"]["finished"],
+        "goodput": t["goodput"],
+        "availability": t["availability"],
+        "dark_circuit_s": t["dark"]["circuit_s"],
+        "blame_max_residual": t["blame"]["max_residual"],
+        "blame_conserved": bool(t["blame"]["conserved"]),
+        "deterministic": rerun.to_json() + "\n" == text,
+        "summary_sha256": _sha(text),
+        "actions_reconfig": t["actions"]["reconfig_calls"],
+        "actions_delta": t["actions"]["delta_calls"],
+    }
+    sv = t.get("serving")
+    if sv is not None:
+        row.update(
+            requests=sv["requests"],
+            p50_ttft_s=sv["p50_ttft_s"],
+            p99_ttft_s=sv["p99_ttft_s"],
+            serving_goodput=sv["goodput"],
+            slo_availability=sv["slo_availability"],
+        )
+    if not quick:
+        path = os.path.join(_GOLDEN_DIR, f"{name}.json")
+        golden = open(path).read() if os.path.exists(path) else None
+        row["golden_match"] = golden == text
+    return row
+
+
+def run(quick: bool = True) -> dict:
+    rows = [_run_one(name, quick) for name in CATALOG]
+    calib = calibration_report()
+    checks = {
+        "all_deterministic": all(r["deterministic"] for r in rows),
+        "blame_conserved": all(r["blame_conserved"] for r in rows),
+        "calibrated_archs": sorted(calib),
+    }
+    if not quick:
+        checks["all_golden_match"] = all(r.get("golden_match") for r in rows)
+    payload = {
+        "rows": rows,
+        "calibration": [
+            {"arch": arch, **vals} for arch, vals in sorted(calib.items())
+        ],
+        "checks": checks,
+    }
+    save("scenarios", payload)
+    return payload
+
+
+def main() -> None:
+    quick = os.environ.get("BENCH_FULL", "") != "1"
+    payload = run(quick=quick)
+    print("scenario,avg_jct,goodput,p99_ttft_s,dark_circuit_s,residual")
+    for r in payload["rows"]:
+        print(
+            f"{r['scenario']},{r['avg_jct']:.1f},{r['goodput']:.3f},"
+            f"{r.get('p99_ttft_s', math.nan):.3f},"
+            f"{r['dark_circuit_s']:.2f},{r['blame_max_residual']:.2e}"
+        )
+    for arch in payload["calibration"]:
+        print(
+            f"calib,{arch['arch']},step_ms={arch['measured_step_ms']:.3f},"
+            f"compute_s={arch['compute_s']:.3f}"
+        )
+    for k, v in payload["checks"].items():
+        print(f"check,{k},{v}")
+        if isinstance(v, bool):
+            assert v, k
+
+
+if __name__ == "__main__":
+    main()

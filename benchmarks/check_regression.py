@@ -56,6 +56,19 @@ replay no longer matches what the scheduler integrated; a dark-share
 inversion means the headline p99 win is no longer coming from the
 mechanism the paper claims (fewer, cheaper reconfigurations).
 
+A sixth gate for the scenario suite (``repro.scenario``):
+
+    python benchmarks/check_regression.py --scenarios \
+        artifacts/bench/BENCH_scenarios.json --step-bench BENCH_step.json
+
+re-derives the suite invariants from the block's rows — every scenario
+summary byte-deterministic, blame conservation ≤ ``--tol``, and (full
+runs) every canonical summary matching its committed golden under
+``tests/golden/scenarios/`` — and pins the recorded per-architecture
+calibration constants against the current ``BENCH_step.json`` within
+``--cal-tol`` relative (default 0.25): re-benching step times on new
+hardware without regenerating the scenario goldens fails the gate.
+
 A fifth gate for the request router (``repro.serve.router``):
 
     python benchmarks/check_regression.py --routing \
@@ -296,6 +309,91 @@ def check_chaos(path: str, tol: float) -> int:
     return 0
 
 
+def _calibration_rows(doc: dict) -> list:
+    """The scenarios block's calibration table, from either format: the
+    raw payload carries a ``calibration`` list; the repro-bench/1 block
+    flattens it into ``metrics`` as ``calibration.<i>.<field>``."""
+    if doc.get("calibration"):
+        return doc["calibration"]
+    rows = {}
+    for k, v in _metrics(doc).items():
+        parts = k.split(".")
+        if len(parts) == 3 and parts[0] == "calibration":
+            rows.setdefault(int(parts[1]), {})[parts[2]] = v
+    return [rows[i] for i in sorted(rows)]
+
+
+def check_scenarios(path: str, step_path: str, tol: float,
+                    cal_tol: float) -> int:
+    """Scenario-suite gate: golden/determinism/conservation invariants
+    from the rows, plus calibration drift — the per-arch step constants
+    recorded in the scenarios block must match the current
+    ``BENCH_step.json`` within ``cal_tol`` relative.  A re-bench that
+    moves step times without regenerated scenario goldens fails here."""
+    doc = _load(path)
+    rows = doc.get("rows", [])
+    if not rows:
+        print(f"check_regression,scenarios: no rows in {path}",
+              file=sys.stderr)
+        return 1
+    failures = []
+
+    worst = max(r.get("blame_max_residual", float("inf")) for r in rows)
+    if not worst <= tol:
+        failures.append(
+            f"blame conservation broken: max residual {worst:.3e} > {tol:g}"
+        )
+    for r in rows:
+        sc = r.get("scenario", "?")
+        print(
+            f"check_regression,scenarios,{sc},"
+            f"goodput={r.get('goodput', float('nan')):.4f},"
+            f"dark_circuit_s={r.get('dark_circuit_s', float('nan')):.2f},"
+            f"deterministic={r.get('deterministic')},"
+            f"golden_match={r.get('golden_match', 'n/a')}"
+        )
+        if not r.get("deterministic", False):
+            failures.append(f"{sc}: summary not byte-deterministic")
+        if r.get("golden_match") is False:
+            failures.append(
+                f"{sc}: summary drifted from tests/golden/scenarios/"
+                f"{sc}.json — regenerate with "
+                "`PYTHONPATH=src python -m tests.golden.regen`"
+            )
+
+    calib = {c["arch"]: c for c in _calibration_rows(doc)}
+    if not calib:
+        failures.append("no calibration table in scenarios block")
+    try:
+        step_rows = {r["arch"]: r for r in _load(step_path)["rows"]}
+    except (OSError, KeyError) as e:
+        step_rows = {}
+        failures.append(f"cannot read step constants from {step_path}: {e}")
+    for arch, c in sorted(calib.items()):
+        s = step_rows.get(arch)
+        if s is None:
+            failures.append(f"{arch}: calibrated but absent from {step_path}")
+            continue
+        rec, cur = c["measured_step_ms"], s["train_ms"]
+        drift = abs(rec - cur) / max(abs(cur), 1e-12)
+        print(
+            f"check_regression,scenarios,calib,{arch},"
+            f"recorded_ms={rec:.3f},step_bench_ms={cur:.3f},"
+            f"drift={drift:.3e}(tol {cal_tol:g})"
+        )
+        if drift > cal_tol:
+            failures.append(
+                f"{arch}: calibration drift {drift:.3e} > {cal_tol:g} "
+                f"(recorded {rec:.3f} ms vs BENCH_step {cur:.3f} ms) — "
+                "rerun the scenarios bench and regenerate goldens"
+            )
+    if failures:
+        print("SCENARIO REGRESSION:", *failures, sep="\n  ", file=sys.stderr)
+        return 1
+    print("check_regression,scenarios,ok")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current")
@@ -306,6 +404,12 @@ def main() -> int:
     ap.add_argument("--attribution", action="store_true")
     ap.add_argument("--routing", action="store_true")
     ap.add_argument("--chaos", action="store_true")
+    ap.add_argument("--scenarios", action="store_true")
+    ap.add_argument(
+        "--step-bench", default="BENCH_step.json",
+        help="step-constant block the calibration drift is pinned against",
+    )
+    ap.add_argument("--cal-tol", type=float, default=0.25)
     ap.add_argument("--tol", type=float, default=1e-6)
     args = ap.parse_args()
 
@@ -317,6 +421,10 @@ def main() -> int:
         return check_routing(args.current)
     if args.chaos:
         return check_chaos(args.current, args.tol)
+    if args.scenarios:
+        return check_scenarios(
+            args.current, args.step_bench, args.tol, args.cal_tol
+        )
     if args.baseline is None:
         ap.error("baseline is required unless --tracing-overhead")
 

@@ -29,6 +29,7 @@ from . import (
     bench_mrar,
     bench_reconfig_interval,
     bench_reconfig_time,
+    bench_scenarios,
     bench_serving,
     bench_step,
     bench_throughput,
@@ -67,6 +68,10 @@ BENCHES = {
     "serving": (
         bench_serving,
         "ours: serving p99 KV-transfer latency + goodput per fabric",
+    ),
+    "scenarios": (
+        bench_scenarios,
+        "ours: multi-day scenario suite, goldens + calibration drift",
     ),
 }
 

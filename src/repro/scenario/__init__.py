@@ -1,0 +1,49 @@
+"""End-to-end scenario suite: multi-day cluster life as data.
+
+The composition layer over everything below it — declarative
+:class:`ScenarioSpec`\\ s (:mod:`repro.scenario.spec`) compiled to one
+deterministic event stream and run to a canonical, golden-checked
+:class:`ScenarioSummary` (:mod:`repro.scenario.runner`), a catalogue of
+named scenarios (:mod:`repro.scenario.catalog`), and the closed
+calibration loop tying simulated compute seconds to measured
+``bench_step.py`` constants (:mod:`repro.scenario.calibrate`).
+"""
+from .calibrate import (
+    Uncalibrated,
+    calibrated_profile,
+    calibration_report,
+    measured_archs,
+    measured_step_s,
+    register_calibrated,
+)
+from .catalog import CATALOG, SCENARIO_NAMES, get_scenario, quick_spec
+from .runner import (
+    CompiledScenario,
+    ScenarioSummary,
+    canonical_json,
+    compile_scenario,
+    run_scenario,
+)
+from .spec import FleetSpec, ScenarioSpec, load_spec, spec_from_dict
+
+__all__ = [
+    "CATALOG",
+    "CompiledScenario",
+    "FleetSpec",
+    "SCENARIO_NAMES",
+    "ScenarioSpec",
+    "ScenarioSummary",
+    "Uncalibrated",
+    "calibrated_profile",
+    "calibration_report",
+    "canonical_json",
+    "compile_scenario",
+    "get_scenario",
+    "load_spec",
+    "measured_archs",
+    "measured_step_s",
+    "quick_spec",
+    "register_calibrated",
+    "run_scenario",
+    "spec_from_dict",
+]

@@ -1,0 +1,212 @@
+"""Closed calibration loop: measured trainstep constants → sim profiles.
+
+Everything the simulator charges for *compute* ultimately flows through
+:class:`repro.dist.collectives.ModelProfile.compute_s`.  For the paper's
+trace models that number is an analytic placeholder (a hand-set
+"seconds per step on the reference accelerator").  This module replaces
+the placeholder for every architecture the repo actually *measures*: it
+derives per-architecture step times from the committed
+``bench_step.py`` constants (``BENCH_step.json``, schema repro-bench/1)
+and registers calibrated :class:`ModelProfile`\\ s under the registry
+arch ids, so scenario jobs priced as ``model="olmo-1b"`` stretch a
+*measured* compute time by the flow model's 1/φ — simulated goodput now
+maps to hardware seconds.
+
+Derivation (deterministic, pinned byte-for-byte by
+``tests/test_scenario.py``):
+
+* ``compute_s = train_ms/1e3 × active(full)/active(smoke)`` — the
+  measured smoke-config step (:data:`REF_TOKENS` tokens), scaled to the
+  full architecture by the active-parameter ratio (FLOPs/token ≈
+  6·active params, token count held fixed).
+* ``grad_bytes = 2 × total params`` (bf16 gradient).
+* ``kv_bytes_per_token`` — the analytic GQA/MLA/hybrid formula
+  (:func:`repro.dist.demand.kv_bytes_per_token`) on the *full* config;
+  the same formula is pinned against a live
+  :meth:`repro.serve.engine.ServeEngine.comm_profile` measurement on the
+  smoke config for every registered architecture (satellite sweep in
+  ``tests/test_serving.py``).
+* MoE / PP byte fields from the config structure (dispatch payload of
+  :data:`REF_TOKENS` tokens; one activation tensor per stage boundary).
+
+Only architectures with a measured ``BENCH_step.json`` row calibrate —
+:func:`measured_step_s` raises :class:`Uncalibrated` for the rest, and
+the test sweep *skips visibly* rather than passing silently.
+
+>>> round(measured_step_s("olmo-1b"), 4)  # committed BENCH_step.json
+0.0144
+>>> "olmo-1b" in register_calibrated()
+True
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Dict, Optional, Sequence
+
+from ..dist import collectives as _coll
+from ..dist import demand as _demand
+
+__all__ = [
+    "REF_TOKENS",
+    "Uncalibrated",
+    "calibrated_profile",
+    "calibration_report",
+    "load_measured",
+    "measured_archs",
+    "measured_step_s",
+    "register_calibrated",
+]
+
+# bench_step.py measures B=4 × S=64 token steps on the smoke configs
+REF_TOKENS = 256
+
+# repo root (src/repro/scenario/calibrate.py → three levels up from src)
+_REPO = os.path.dirname(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+)
+_BENCH_PATHS = (
+    os.path.join(_REPO, "BENCH_step.json"),
+    os.path.join(_REPO, "artifacts", "bench", "step.json"),
+)
+
+
+class Uncalibrated(KeyError):
+    """Architecture has no measured ``bench_step`` row — the caller must
+    skip it *visibly* (``pytest.skip``), never default silently."""
+
+
+def load_measured(path: Optional[str] = None) -> Dict[str, Dict[str, float]]:
+    """Measured per-arch constants from a repro-bench/1 ``step`` block.
+
+    Returns ``{arch: {"train_ms": ..., "decode_ms": ...}}`` from the
+    committed ``BENCH_step.json`` (or ``path``).  Raises
+    ``FileNotFoundError`` when no block exists — calibration never
+    invents constants.
+    """
+    paths = (path,) if path is not None else _BENCH_PATHS
+    for p in paths:
+        if p and os.path.exists(p):
+            with open(p) as fh:
+                block = json.load(fh)
+            rows = block.get("rows", [])
+            out = {
+                str(r["arch"]): {
+                    "train_ms": float(r["train_ms"]),
+                    "decode_ms": float(r["decode_ms"]),
+                }
+                for r in rows
+            }
+            if out:
+                return out
+    raise FileNotFoundError(
+        f"no measured step constants found (looked in {paths}); run "
+        "`python -m benchmarks.bench_step` and commit BENCH_step.json"
+    )
+
+
+def measured_archs(path: Optional[str] = None) -> tuple:
+    """Arch ids with a measured row, sorted (the calibratable set)."""
+    return tuple(sorted(load_measured(path)))
+
+
+def measured_step_s(arch: str, path: Optional[str] = None) -> float:
+    """Measured smoke-config train-step seconds (:data:`REF_TOKENS`
+    tokens) for ``arch``; raises :class:`Uncalibrated` if unmeasured."""
+    rows = load_measured(path)
+    if arch not in rows:
+        raise Uncalibrated(
+            f"{arch!r} has no bench_step row — measured archs: "
+            f"{sorted(rows)}"
+        )
+    return rows[arch]["train_ms"] / 1e3
+
+
+def _param_scale(arch: str) -> float:
+    """active(full) / active(smoke) — the FLOPs ratio at fixed tokens."""
+    from ..models.registry import ARCHS, smoke_config  # lazy: pulls jax
+
+    _, full_active = ARCHS[arch].param_counts()
+    _, smoke_active = smoke_config(arch).param_counts()
+    return full_active / max(1, smoke_active)
+
+
+def calibrated_profile(
+    arch: str, path: Optional[str] = None
+) -> _coll.ModelProfile:
+    """Measured-constant :class:`ModelProfile` for a registered arch."""
+    from ..models.registry import ARCHS  # lazy: pulls jax
+
+    step_s = measured_step_s(arch, path)
+    cfg = ARCHS[arch]
+    n_total, _ = cfg.param_counts()
+    moe = cfg.moe
+    moe_layers = 0
+    if moe is not None:
+        span = cfg.num_layers - moe.first_dense
+        moe_layers = max(0, -(-span // max(1, moe.every)))
+    return _coll.ModelProfile(
+        grad_bytes=2.0 * n_total,
+        compute_s=step_s * _param_scale(arch),
+        layers=cfg.num_layers,
+        moe=moe is not None,
+        moe_layers=moe_layers,
+        moe_tokens_bytes=(
+            REF_TOKENS * cfg.d_model * 2.0 * moe.capacity_factor
+            if moe is not None else 0.0
+        ),
+        # experts past the ~100B total-parameter mark cannot share a pod's
+        # HBM: the EP all-to-all spills onto the optical core (§3.1)
+        ep_spill=moe is not None and n_total > 100e9,
+        pp_act_bytes=REF_TOKENS * cfg.d_model * 2.0,
+        kv_bytes_per_token=_demand.kv_bytes_per_token(cfg),
+    )
+
+
+def register_calibrated(
+    archs: Optional[Sequence[str]] = None, path: Optional[str] = None
+) -> Dict[str, _coll.ModelProfile]:
+    """Install calibrated profiles into ``MODEL_PROFILES`` (idempotent).
+
+    ``archs`` defaults to every measured architecture.  Registration
+    makes the arch ids valid ``Job.model`` names for both the training
+    path (planner-derived comm fractions off measured ``compute_s``) and
+    the serving path (``kv_bytes_per_token > 0``).  The
+    ``comm_fraction_for`` cache is cleared so earlier fallback lookups
+    cannot go stale.
+    """
+    names = tuple(archs) if archs is not None else measured_archs(path)
+    out: Dict[str, _coll.ModelProfile] = {}
+    changed = False
+    for arch in names:
+        prof = calibrated_profile(arch, path)
+        if _coll.MODEL_PROFILES.get(arch) != prof:
+            _coll.MODEL_PROFILES[arch] = prof
+            changed = True
+        out[arch] = prof
+    if changed:
+        _demand.comm_fraction_for.cache_clear()
+    return out
+
+
+def calibration_report(path: Optional[str] = None) -> Dict[str, Dict[str, float]]:
+    """Flat per-arch calibration table (benchmark-artifact material).
+
+    The ``check_regression.py --scenarios`` gate re-derives this from the
+    current ``BENCH_step.json`` and asserts the recorded
+    ``BENCH_scenarios.json`` copy drifted by at most the documented
+    tolerance — a re-bench on different hardware that moves step times
+    must ship regenerated scenario goldens with it.
+    """
+    out: Dict[str, Dict[str, float]] = {}
+    for arch, prof in register_calibrated(path=path).items():
+        step = measured_step_s(arch, path)
+        out[arch] = {
+            "measured_step_ms": step * 1e3,
+            "compute_s": prof.compute_s,
+            "grad_bytes": prof.grad_bytes,
+            "kv_bytes_per_token": prof.kv_bytes_per_token,
+            "scale": prof.compute_s / step if step > 0 else math.nan,
+        }
+    return out

@@ -1,0 +1,167 @@
+"""The catalogued scenarios: named multi-day cluster-life compositions.
+
+Each entry is a frozen :class:`~repro.scenario.spec.ScenarioSpec` with a
+committed golden summary under ``tests/golden/scenarios/<name>.json``
+(regenerate with ``PYTHONPATH=src python -m tests.golden.regen``) and a
+YAML twin under ``examples/scenarios/`` (pinned equal in tests — the
+YAML front door can never drift from the catalogue).
+
+* ``steady_week`` — seven quiet days: Poisson training arrivals over two
+  diurnal serving regions, no faults.  The baseline every other scenario
+  is read against.
+* ``diurnal_burst`` — three regions whose load peaks sweep around the
+  clock (phases 0/8/16 h) with scripted autoscaling, hit by a correlated
+  top-of-pod OCS burst at the second day's peak.
+* ``expansion_under_load`` — the cluster starts at P−3 pods under a
+  heavy training load; the missing pods go live mid-run (the paper's
+  incremental-expansion regime) while one flat fleet keeps serving.
+* ``burst_flap_remediated`` — the compound chaos regime (burst + gray
+  flapping links) with the closed loop on: remediation engine,
+  topology-aware routing, checkpoint-restart recovery under a tight
+  checkpoint interval, and a 5 s reconfiguration delay so dark windows
+  are visible in every metric.
+* ``static_calib`` — serialized (contention-free) training jobs priced
+  by the *calibrated* measured-constant profiles, no faults, no serving:
+  the scenario where ``engine="analytic"`` and ``engine="fluid"`` must
+  agree to 1e-6, and where simulated seconds tie directly back to
+  ``bench_step.py`` wall-clock.
+
+>>> sorted(CATALOG) == sorted(SCENARIO_NAMES)
+True
+>>> get_scenario("steady_week").days
+7.0
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+from ..fault.chaos import ChaosScenario
+from .spec import FleetSpec, ScenarioSpec
+
+__all__ = ["CATALOG", "SCENARIO_NAMES", "get_scenario", "quick_spec"]
+
+# calibrated archetypes: the architectures bench_step.py measures (dense,
+# MoE/MLA, linear-attention RNN, encoder–decoder audio)
+_CALIBRATED = ("olmo-1b", "deepseek-v3-671b", "rwkv6-1.6b", "whisper-small")
+
+_DAY = 86400.0
+
+
+def _build() -> Dict[str, ScenarioSpec]:
+    steady_week = ScenarioSpec(
+        name="steady_week", days=7.0, seed=11,
+        num_train_jobs=16, workload_level=0.6,
+        fleets=(
+            FleetSpec(model="llama2-13b", req_rate=0.02, diurnal=0.4,
+                      phase_offset_s=0.0),
+            FleetSpec(model="mixtral-8x7b", req_rate=0.02, diurnal=0.4,
+                      kv_tokens=4096, phase_offset_s=0.5 * _DAY),
+        ),
+    )
+    diurnal_burst = ScenarioSpec(
+        name="diurnal_burst", days=2.0, seed=5,
+        num_train_jobs=12, workload_level=0.5,
+        fleets=tuple(
+            FleetSpec(model="llama2-13b", req_rate=0.04, diurnal=0.6,
+                      phase_offset_s=n * _DAY / 3.0, autoscale_pods=1)
+            for n in range(3)
+        ),
+        chaos=ChaosScenario(
+            name="peak_burst", horizon_s=2.0 * _DAY,
+            burst_at_s=1.25 * _DAY, burst_size=2,
+            burst_repair_s=7200.0,
+        ),
+        reconfig_delay_s=1.0,
+    )
+    expansion_under_load = ScenarioSpec(
+        name="expansion_under_load", days=2.0, seed=3,
+        num_train_jobs=18, workload_level=0.85,
+        expand_pods=3, expand_at_s=1.0 * _DAY,
+        fleets=(FleetSpec(model="llama2-13b", req_rate=0.03),),
+    )
+    flap = ((0, 1, 1), (0, 3, 2), (1, 2, 5))
+    burst_flap_remediated = ScenarioSpec(
+        name="burst_flap_remediated", days=1.0, seed=7,
+        num_train_jobs=12, workload_level=0.9,
+        fleets=(
+            FleetSpec(model="llama2-13b", req_rate=0.05, diurnal=0.3),
+        ),
+        chaos=ChaosScenario(
+            name="burst_flap", horizon_s=_DAY,
+            burst_at_s=0.25 * _DAY, burst_size=2,
+            burst_repair_s=0.15 * _DAY,
+            flap_links=flap, flap_from_s=(1.0 / 3.0) * _DAY,
+            flap_until_s=0.75 * _DAY, flap_period_s=3600.0,
+        ),
+        remediation=True, router="topology_aware",
+        recovery_policy="ckpt_restart", ckpt_interval_s=900.0,
+        reconfig_delay_s=5.0, serving_slo=2.0,
+    )
+    static_calib = ScenarioSpec(
+        name="static_calib", days=4.0, seed=2, engine="analytic",
+        num_train_jobs=6, workload_level=0.3,
+        train_models=_CALIBRATED, spacing="serial",
+        reconfig_delay_s=0.0,
+    )
+    out = (steady_week, diurnal_burst, expansion_under_load,
+           burst_flap_remediated, static_calib)
+    return {s.name: s for s in out}
+
+
+CATALOG: Dict[str, ScenarioSpec] = _build()
+SCENARIO_NAMES: Tuple[str, ...] = tuple(CATALOG)
+
+
+def get_scenario(name: str) -> ScenarioSpec:
+    """Catalogue lookup with the valid names in the error message."""
+    try:
+        return CATALOG[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; catalogued: {SCENARIO_NAMES}"
+        ) from None
+
+
+def quick_spec(spec: ScenarioSpec) -> ScenarioSpec:
+    """Reduced-scale twin for CI smoke runs: same composition (chaos,
+    expansion, routing, remediation all preserved), shorter horizon and
+    lighter request load — minutes of simulated cluster life, not days.
+    Chaos timing scales with the horizon so every burst/flap still
+    lands inside the run."""
+    scale = min(1.0, 0.25 / spec.days)
+    chaos = spec.chaos
+    if chaos is not None and scale < 1.0:
+        chaos = dataclasses.replace(
+            chaos,
+            horizon_s=chaos.horizon_s * scale,
+            burst_at_s=(
+                None if chaos.burst_at_s is None
+                else chaos.burst_at_s * scale
+            ),
+            burst_repair_s=chaos.burst_repair_s * scale,
+            srlg_at_s=(
+                None if chaos.srlg_at_s is None else chaos.srlg_at_s * scale
+            ),
+            flap_from_s=chaos.flap_from_s * scale,
+            flap_until_s=(
+                None if chaos.flap_until_s is None
+                else chaos.flap_until_s * scale
+            ),
+        )
+    return dataclasses.replace(
+        spec,
+        days=spec.days * scale,
+        num_train_jobs=min(spec.num_train_jobs, 8),
+        chaos=chaos,
+        expand_at_s=(
+            None if spec.expand_at_s is None else spec.expand_at_s * scale
+        ),
+        fleets=tuple(
+            dataclasses.replace(
+                f, req_rate=min(f.req_rate, 0.05),
+                phase_offset_s=f.phase_offset_s * scale,
+            )
+            for f in spec.fleets
+        ),
+    )

@@ -1,0 +1,266 @@
+"""Scenario compiler + harness: spec → event stream → canonical summary.
+
+:func:`compile_scenario` lowers a :class:`~repro.scenario.spec.
+ScenarioSpec` into the three things the simulator consumes — a
+:class:`~repro.sim.scheduler.SimConfig`, a job list (training trace +
+serving fleets, ids positional), and ONE time-sorted fault-event stream
+(chaos + expansion + autoscale, merged) — deterministically: same spec ⇒
+identical jobs and events, byte for byte.
+
+:func:`run_scenario` runs the compiled scenario and folds the run into a
+:class:`ScenarioSummary`: per-job JCTs, training JCT statistics, goodput
+/ availability (:meth:`~repro.sim.scheduler.Simulator.fault_summary`),
+serving SLO availability and p50/p99 TTFT, dark circuit-seconds, the
+full per-cause blame split with its conservation residual
+(:mod:`repro.obs.attrib`), and the action ledger (remediation counts,
+autoscale applied/skipped, control-plane call counts).
+
+:func:`canonical_json` renders a summary to the byte-stable form the
+golden files under ``tests/golden/scenarios/`` freeze: keys sorted,
+floats at 10 significant digits, non-finite values spelled ``"inf"`` /
+``"nan"`` (JSON has neither).
+
+>>> canonical_json({"b": 1 / 3, "a": float("inf")})
+'{\\n "a": "inf",\\n "b": 0.3333333333\\n}'
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+from ..fault.model import ExpandEvent, merge_events
+from ..fault.chaos import scenario_events
+from ..fault.remediate import RemediationEngine
+from ..obs.attrib import CAUSES, attribute_jobs, attribute_requests
+from ..sim.scheduler import SimConfig, Simulator, summarize
+from ..sim.serving import autoscale_events, serving_job
+from ..sim.trace import generate_trace
+from . import calibrate
+from .spec import ScenarioSpec
+
+__all__ = [
+    "CompiledScenario",
+    "ScenarioSummary",
+    "canonical_json",
+    "compile_scenario",
+    "run_scenario",
+]
+
+
+@dataclasses.dataclass
+class CompiledScenario:
+    """The simulator-ready lowering of one spec."""
+
+    spec: ScenarioSpec
+    cfg: SimConfig
+    jobs: List[Any]
+    events: List[Any]
+    remediation: Optional[RemediationEngine]
+
+
+def _train_jobs(spec: ScenarioSpec) -> List[Any]:
+    gpus = spec.num_pods * spec.k_spine * spec.k_leaf
+    jobs = generate_trace(
+        spec.num_train_jobs, num_gpus=gpus,
+        workload_level=spec.workload_level, seed=spec.seed,
+        max_job_gpus=max(spec.k_spine * spec.k_leaf,
+                         int(gpus * spec.max_gpu_frac)),
+    )
+    if spec.train_models:
+        # price trace jobs with calibrated measured-constant profiles:
+        # round-robin over the requested archs, parallelism reset to what
+        # the calibrated profile implies (EP only for MoE archs)
+        profs = calibrate.register_calibrated(spec.train_models)
+        jobs = [
+            dataclasses.replace(
+                j, model=arch, ep=2 if profs[arch].moe else 1, pp=1
+            )
+            for j, arch in zip(
+                jobs,
+                (spec.train_models[n % len(spec.train_models)]
+                 for n in range(len(jobs))),
+            )
+        ]
+    if spec.spacing == "serial":
+        # contention-free respacing: slowdown is capped at 4×, so gaps of
+        # 4·service + 60 s guarantee one job in flight at a time — the
+        # static regime where both progress engines agree to 1e-6
+        t, out = 0.0, []
+        for j in jobs:
+            out.append(dataclasses.replace(j, arrival=t))
+            t += 4.0 * j.service_time + 60.0
+        jobs = out
+    return jobs
+
+
+def compile_scenario(spec: ScenarioSpec) -> CompiledScenario:
+    """Deterministically lower ``spec`` (same spec ⇒ identical output)."""
+    jobs = _train_jobs(spec)
+    horizon = spec.horizon_s
+
+    streams: List[List[Any]] = []
+    for fs in spec.fleets:
+        if fs.model in calibrate.measured_archs():
+            calibrate.register_calibrated((fs.model,))
+        fleet = serving_job(
+            len(jobs), fs.num_gpus, arrival=fs.phase_offset_s,
+            model=fs.model, req_rate=fs.req_rate, kv_tokens=fs.kv_tokens,
+            diurnal=fs.diurnal,
+        )
+        jobs.append(fleet)
+        if fs.autoscale_pods > 0:
+            streams.append(autoscale_events(
+                fleet, horizon - fs.phase_offset_s,
+                period_s=spec.serving_period_s, pods=fs.autoscale_pods,
+                cycles=fs.autoscale_cycles,
+            ))
+    if spec.chaos is not None:
+        streams.append(scenario_events(spec.chaos, spec.k_spine))
+    active = None
+    if spec.expand_pods:
+        active = spec.num_pods - spec.expand_pods
+        t_exp = (
+            spec.expand_at_s if spec.expand_at_s is not None
+            else 0.5 * horizon
+        )
+        streams.append([ExpandEvent(
+            t_exp, tuple(range(active, spec.num_pods))
+        )])
+
+    eng = RemediationEngine() if spec.remediation else None
+    cfg = SimConfig(
+        architecture=spec.architecture, strategy=spec.strategy,
+        num_pods=spec.num_pods, k_spine=spec.k_spine, k_leaf=spec.k_leaf,
+        sim_groups=spec.sim_groups, engine=spec.engine,
+        incremental=spec.incremental,
+        reconfig_delay_s=spec.reconfig_delay_s,
+        recovery_policy=spec.recovery_policy,
+        ckpt_interval_s=spec.ckpt_interval_s,
+        active_pods=active, router=spec.router,
+        serving_slo=spec.serving_slo,
+        serving_period_s=spec.serving_period_s,
+        on_health=eng,
+    )
+    return CompiledScenario(spec, cfg, jobs, merge_events(*streams), eng)
+
+
+@dataclasses.dataclass
+class ScenarioSummary:
+    """Canonical outcome of one scenario run (the golden payload)."""
+
+    name: str
+    table: Dict[str, Any]
+
+    def to_json(self) -> str:
+        return canonical_json({"name": self.name, **self.table})
+
+
+def run_scenario(
+    spec: ScenarioSpec, tracer: Optional[Any] = None, seed: int = 0
+) -> Tuple[ScenarioSummary, Simulator]:
+    """Compile and run ``spec``; return (summary, finished simulator).
+
+    ``tracer`` (a :class:`repro.obs.Tracer`) attaches the flight
+    recorder; tracing is passive, so the summary must be byte-identical
+    with it on or off (property-tested per catalogued scenario).
+    """
+    comp = compile_scenario(spec)
+    cfg = (
+        dataclasses.replace(comp.cfg, tracer=tracer)
+        if tracer is not None else comp.cfg
+    )
+    sim = Simulator(cfg, comp.jobs, seed=seed, fault_events=comp.events)
+    records = sim.run(until=spec.horizon_s)
+
+    train = [r for r in records if r.job.kind != "serve"]
+    done = [r for r in train if math.isfinite(r.finish)]
+    jct = {
+        str(r.job.job_id): (r.jct if math.isfinite(r.finish) else None)
+        for r in train
+    }
+    fault = sim.fault_summary()
+    serving = sim.serving_summary() if spec.fleets else None
+
+    req = attribute_requests(sim)
+    blames = attribute_jobs(sim)
+    job_totals = {c: 0.0 for c in CAUSES}
+    job_residual = 0.0
+    for b in blames.values():
+        job_residual = max(job_residual, abs(b.residual))
+        for c, v in b.causes.items():
+            if c in job_totals:
+                job_totals[c] += v
+
+    ledger: Dict[str, float] = {
+        "reconfig_calls": float(sim.reconfig_calls),
+        "delta_calls": float(sim.delta_calls),
+        "solver_fallbacks": float(sim.solver_fallbacks),
+        "autoscale_applied": float(sim.autoscale_applied),
+        "autoscale_skipped": float(sim.autoscale_skipped),
+        "restarts": fault["restarts"],
+        "shrinks": fault["shrinks"],
+    }
+    if comp.remediation is not None:
+        for k, v in comp.remediation.summary().items():
+            ledger[f"remedy_{k}"] = float(v)
+
+    table: Dict[str, Any] = {
+        "spec": spec.to_dict(),
+        "train": {**summarize(train), "jct": jct, "submitted": len(train),
+                  "finished": len(done)},
+        "goodput": fault["goodput"],
+        "availability": fault["availability"],
+        "lost_gpu_s": fault["lost_gpu_s"],
+        "dark": {
+            "events": float(sim.downtime_events),
+            "window_s": sim.downtime_s,
+            "circuit_s": sim.downtime_circuit_s,
+        },
+        "blame": {
+            "requests": req["totals"],
+            "jobs": job_totals,
+            "max_residual": max(req["max_residual"], job_residual),
+            "conserved": bool(req["conserved"]) and job_residual <= 1e-6,
+        },
+        "actions": ledger,
+    }
+    if serving is not None:
+        table["serving"] = {
+            "requests": serving["requests"],
+            "p50_ttft_s": serving["p50_s"],
+            "p99_ttft_s": serving["p99_s"],
+            "goodput": serving["goodput"],
+            "slo_availability": serving["availability"],
+        }
+    return ScenarioSummary(spec.name, table), sim
+
+
+# ---------------------------------------------------------------------------
+# canonical JSON (golden byte-stability)
+# ---------------------------------------------------------------------------
+
+def _canon(v: Any) -> Any:
+    if isinstance(v, dict):
+        return {str(k): _canon(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_canon(x) for x in v]
+    if isinstance(v, bool) or v is None or isinstance(v, (int, str)):
+        return v
+    if isinstance(v, float):
+        if math.isnan(v):
+            return "nan"
+        if math.isinf(v):
+            return "inf" if v > 0 else "-inf"
+        if v == int(v) and abs(v) < 1e15:
+            return int(v)
+        # 10 significant digits: stable across runs, diffs stay readable
+        return float(f"{v:.10g}")
+    raise TypeError(f"non-canonical value {v!r} in scenario summary")
+
+
+def canonical_json(table: Dict[str, Any]) -> str:
+    """Byte-stable JSON for golden summaries (sorted keys, 10-sig-digit
+    floats, ``"inf"``/``"nan"`` strings for non-finite values)."""
+    return json.dumps(_canon(table), indent=1, sort_keys=True)

@@ -1,0 +1,152 @@
+"""Declarative scenario specification (frozen, YAML-loadable).
+
+A :class:`ScenarioSpec` names everything a multi-day cluster-life run
+composes — cluster shape, fabric/strategy/engine, a mixed train+serve
+trace with regional diurnal phases, correlated chaos from the
+:mod:`repro.fault.chaos` catalogue, live P−k→P expansion, fleet
+autoscaling, request-router policy, remediation on/off, and
+checkpoint-restart pressure — as *data*.  The compiler
+(:func:`repro.scenario.runner.compile_scenario`) turns a spec into one
+deterministic event stream; same spec + seed ⇒ byte-identical
+:class:`~repro.scenario.runner.ScenarioSummary` (property-tested).
+
+Specs are frozen dataclasses so they can live in the catalogue and in
+YAML files under ``examples/scenarios/`` interchangeably:
+:func:`load_spec` reads the YAML form, :meth:`ScenarioSpec.to_dict` /
+:func:`spec_from_dict` round-trip it.
+
+>>> s = ScenarioSpec(name="tiny", days=0.5)
+>>> spec_from_dict(s.to_dict()) == s
+True
+>>> s.horizon_s
+43200.0
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+from ..fault.chaos import ChaosScenario
+
+__all__ = ["FleetSpec", "ScenarioSpec", "load_spec", "spec_from_dict"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """One serving fleet: a region's diurnal request population.
+
+    ``phase_offset_s`` is both the fleet's arrival time and its diurnal
+    phase origin (the load sine starts at the arrival), so fleets with
+    offsets 0 / 8h / 16h model three regions whose peaks sweep around the
+    clock.  ``autoscale_pods > 0`` scripts the diurnal scale-up/down
+    schedule of :func:`repro.sim.serving.autoscale_events`.
+    """
+
+    model: str = "llama2-13b"
+    num_gpus: int = 128
+    req_rate: float = 0.05
+    kv_tokens: int = 2048
+    diurnal: float = 0.0
+    phase_offset_s: float = 0.0
+    autoscale_pods: int = 0
+    autoscale_cycles: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """Everything one multi-day cluster-life scenario composes."""
+
+    name: str
+    days: float = 2.0
+    seed: int = 0
+
+    # ---- cluster + control plane ----------------------------------------
+    num_pods: int = 12
+    k_spine: int = 8
+    k_leaf: int = 8
+    sim_groups: int = 2
+    architecture: str = "cross_wiring"
+    strategy: str = "mdmcf"
+    engine: str = "fluid"
+    incremental: bool = True
+    reconfig_delay_s: float = 0.01
+
+    # ---- training trace -------------------------------------------------
+    num_train_jobs: int = 16
+    workload_level: float = 0.6
+    max_gpu_frac: float = 0.25  # per-job cap as a share of the cluster
+    # round-robin remap of trace-job models onto calibrated registry archs
+    # (() = keep the paper's trace models); "serial" spacing respaces
+    # arrivals so no two training jobs ever overlap (the contention-free
+    # regime where analytic and fluid engines agree to 1e-6)
+    train_models: Tuple[str, ...] = ()
+    spacing: str = "poisson"  # poisson | serial
+
+    # ---- serving fleets -------------------------------------------------
+    fleets: Tuple[FleetSpec, ...] = ()
+    serving_slo: float = 4.0
+    serving_period_s: float = 86400.0
+    router: Optional[str] = None
+
+    # ---- faults / expansion / remediation -------------------------------
+    chaos: Optional[ChaosScenario] = None
+    expand_pods: int = 0  # start at P − expand_pods, grow back at…
+    expand_at_s: Optional[float] = None  # …this time (default: mid-run)
+    remediation: bool = False
+    recovery_policy: str = "rewire_around"
+    ckpt_interval_s: float = 1800.0
+
+    @property
+    def horizon_s(self) -> float:
+        return self.days * 86400.0
+
+    def __post_init__(self) -> None:
+        if self.days <= 0:
+            raise ValueError("days must be positive")
+        if self.spacing not in ("poisson", "serial"):
+            raise ValueError("spacing must be 'poisson' or 'serial'")
+        if not 0 <= self.expand_pods < self.num_pods:
+            raise ValueError("expand_pods must be in [0, num_pods)")
+
+    # ---- dict / YAML round-trip -----------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        """Plain-dict form (nested dataclasses → dicts), YAML-safe."""
+        d = dataclasses.asdict(self)
+        d["fleets"] = [dataclasses.asdict(f) for f in self.fleets]
+        d["train_models"] = list(self.train_models)
+        if self.chaos is not None:
+            d["chaos"] = dataclasses.asdict(self.chaos)
+        return d
+
+
+def spec_from_dict(d: Dict[str, Any]) -> ScenarioSpec:
+    """Inverse of :meth:`ScenarioSpec.to_dict` (YAML loader backend)."""
+    kw = dict(d)
+    kw["fleets"] = tuple(
+        f if isinstance(f, FleetSpec) else FleetSpec(**f)
+        for f in kw.get("fleets", ())
+    )
+    kw["train_models"] = tuple(kw.get("train_models", ()))
+    chaos = kw.get("chaos")
+    if chaos is not None and not isinstance(chaos, ChaosScenario):
+        links = ("srlg_links", "flap_links", "derate_links")
+        chaos = ChaosScenario(**{
+            k: tuple(tuple(x) for x in (v or ())) if k in links else v
+            for k, v in chaos.items()
+        })
+    kw["chaos"] = chaos
+    return ScenarioSpec(**kw)
+
+
+def load_spec(path: str) -> ScenarioSpec:
+    """Load a :class:`ScenarioSpec` from a YAML file.
+
+    Requires PyYAML (available in the dev environment); the catalogue in
+    :mod:`repro.scenario.catalog` never goes through YAML, so the core
+    path has no third-party dependency.
+    """
+    import yaml  # local: optional dependency, only the YAML front door
+
+    with open(path) as fh:
+        return spec_from_dict(yaml.safe_load(fh))

@@ -1,24 +1,39 @@
-"""Golden fluid-engine trace: scenario definition + regeneration.
+"""Golden regression tables: every family, one regeneration entrypoint.
 
-The golden table freezes the per-job JCTs of one seeded fluid-engine run
-(Cross Wiring, incremental MDMCF, a link failure/repair mid-trace and a
-nonzero reconfiguration delay) so that *any* behavioral drift in the
-engine — water-filling, dark windows, mask handling, scheduler event
-ordering — shows up as a reviewed diff instead of a silent change.
+Two golden families live under ``tests/golden/``:
 
-Regenerate after an intentional change with:
+* ``fluid_trace.json`` — per-job JCTs of one seeded fluid-engine run
+  (Cross Wiring, incremental MDMCF, a link failure/repair mid-trace and
+  a nonzero reconfiguration delay), so *any* behavioral drift in the
+  engine — water-filling, dark windows, mask handling, scheduler event
+  ordering — shows up as a reviewed diff instead of a silent change.
+* ``scenarios/<name>.json`` — the canonical
+  :class:`~repro.scenario.runner.ScenarioSummary` of every catalogued
+  multi-day scenario (:data:`repro.scenario.CATALOG`), byte-identical
+  across reruns and across tracer on/off.
+
+Regenerate *all* families after an intentional behavioral change with:
 
     PYTHONPATH=src python -m tests.golden.regen
 
-and commit the updated ``fluid_trace.json`` together with the change.
+and commit the updated files together with the change.  The entrypoint
+prints a per-file ``wrote``/``unchanged`` line so the diff surface is
+explicit — no per-suite knowledge needed.
 """
 from __future__ import annotations
 
 import json
 import math
 import os
+from typing import Callable, Dict
 
-GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "fluid_trace.json")
+GOLDEN_DIR = os.path.dirname(__file__)
+GOLDEN_PATH = os.path.join(GOLDEN_DIR, "fluid_trace.json")
+SCENARIO_DIR = os.path.join(GOLDEN_DIR, "scenarios")
+
+# ---------------------------------------------------------------------------
+# family 1: the pinned fluid-engine trace
+# ---------------------------------------------------------------------------
 
 SCENARIO = {
     "num_pods": 12,
@@ -84,13 +99,50 @@ def build_table(tracer=None):
     }
 
 
+def _fluid_trace_bytes() -> str:
+    return json.dumps(build_table(), indent=1, sort_keys=True) + "\n"
+
+
+# ---------------------------------------------------------------------------
+# family 2: scenario-suite summaries (repro.scenario catalogue)
+# ---------------------------------------------------------------------------
+
+def scenario_summary_bytes(name: str) -> str:
+    """Canonical golden bytes for one catalogued scenario."""
+    from repro.scenario import get_scenario, run_scenario as run_spec
+
+    summary, _ = run_spec(get_scenario(name))
+    return summary.to_json() + "\n"
+
+
+def families() -> Dict[str, Callable[[], str]]:
+    """Every golden file → a thunk producing its canonical bytes."""
+    from repro.scenario import SCENARIO_NAMES
+
+    fams: Dict[str, Callable[[], str]] = {GOLDEN_PATH: _fluid_trace_bytes}
+    for name in SCENARIO_NAMES:
+        fams[os.path.join(SCENARIO_DIR, f"{name}.json")] = (
+            lambda n=name: scenario_summary_bytes(n)
+        )
+    return fams
+
+
 def main() -> None:
-    table = build_table()
-    with open(GOLDEN_PATH, "w") as fh:
-        json.dump(table, fh, indent=1, sort_keys=True)
-        fh.write("\n")
-    print(f"wrote {GOLDEN_PATH}: {len(table['jct'])} jobs, "
-          f"{table['downtime_events']} downtime windows")
+    os.makedirs(SCENARIO_DIR, exist_ok=True)
+    for path, build in sorted(families().items()):
+        new = build()
+        old = None
+        if os.path.exists(path):
+            with open(path) as fh:
+                old = fh.read()
+        rel = os.path.relpath(path, GOLDEN_DIR)
+        if old == new:
+            print(f"unchanged {rel}")
+            continue
+        with open(path, "w") as fh:
+            fh.write(new)
+        print(f"wrote     {rel} "
+              f"({'new file' if old is None else 'contents changed'})")
 
 
 if __name__ == "__main__":

@@ -31,6 +31,10 @@ DOCTEST_MODULES = [
     "repro.obs.metrics",
     "repro.obs.report",
     "repro.obs.trace",
+    "repro.scenario.calibrate",
+    "repro.scenario.catalog",
+    "repro.scenario.runner",
+    "repro.scenario.spec",
     "repro.serve.router",
     "repro.sim.scheduler",
     "repro.sim.serving",
@@ -43,6 +47,7 @@ REQUIRED_DOCS = [
     os.path.join("docs", "serving.md"),
     os.path.join("docs", "observability.md"),
     os.path.join("docs", "resilience.md"),
+    os.path.join("docs", "scenarios.md"),
 ]
 
 

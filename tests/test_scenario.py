@@ -1,0 +1,382 @@
+"""Scenario suite: golden summaries, determinism, calibration loop.
+
+Four pillars, matching the suite's contract:
+
+* **Golden byte-identity** — every catalogued scenario's canonical
+  summary reproduces the committed bytes under
+  ``tests/golden/scenarios/`` exactly, seeded, with the flight recorder
+  on or off (tracing is passive).  Per-file diff messages point at the
+  single regeneration entrypoint.
+* **Compiler invariants** — same spec ⇒ identical jobs and one
+  time-sorted event stream; ids positional; autoscale events reference
+  real fleets; hypothesis-generated specs (when available) uphold the
+  same plus run-level byte-determinism.
+* **Cross-engine differential** — ``static_calib`` (contention-free by
+  construction) agrees between ``engine="analytic"`` and ``"fluid"`` to
+  1e-6 per job; on the faulted scenarios the fluid-only invariant holds:
+  incremental reconfiguration never darkens more circuit-seconds than
+  cold solves.  (``burst_flap_remediated`` is excluded from the latter:
+  its checkpoint-restart recovery makes the two control-plane modes
+  diverge into *different trajectories* — restart timing shifts every
+  later event — so their dark totals are not comparable; the invariant
+  is about identical event sequences priced two ways.)
+* **Calibration loop** — per-arch step times derive exactly from the
+  committed ``BENCH_step.json`` constants, calibrated profiles carry the
+  measured numbers (grad bytes = 2 × params, analytic KV formula), and
+  a slow order-of-magnitude guard re-measures one real trainstep so a
+  units regression (ms vs s) can never hide behind the goldens.
+"""
+import dataclasses
+import functools
+import json
+import math
+import os
+
+import pytest
+
+from repro.fault.model import ExpandEvent
+from repro.scenario import (
+    CATALOG,
+    SCENARIO_NAMES,
+    ScenarioSpec,
+    Uncalibrated,
+    calibrated_profile,
+    compile_scenario,
+    get_scenario,
+    load_spec,
+    measured_archs,
+    measured_step_s,
+    quick_spec,
+    register_calibrated,
+    run_scenario,
+    spec_from_dict,
+)
+from repro.sim.serving import ScaleEvent
+
+from tests.golden import regen
+
+REGEN_CMD = "PYTHONPATH=src python -m tests.golden.regen"
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# trajectory-divergent recovery (ckpt_restart): incremental-vs-cold runs
+# reorder restarts, so dark totals are not comparable — see module docstring
+_INVARIANT_SCENARIOS = tuple(
+    n for n in SCENARIO_NAMES
+    if CATALOG[n].recovery_policy != "ckpt_restart"
+    and CATALOG[n].engine == "fluid"
+)
+
+
+@functools.lru_cache(maxsize=None)
+def _run(name):
+    """One shared run per catalogued scenario (summary, sim)."""
+    return run_scenario(get_scenario(name))
+
+
+# ---------------------------------------------------------------------------
+# golden byte-identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", SCENARIO_NAMES)
+def test_golden_summary_reproduces(name):
+    path = os.path.join(regen.SCENARIO_DIR, f"{name}.json")
+    assert os.path.exists(path), (
+        f"golden summary {path} missing — regenerate with: {REGEN_CMD}"
+    )
+    with open(path) as fh:
+        golden = fh.read()
+    summary, _ = _run(name)
+    got = summary.to_json() + "\n"
+    if got != golden:
+        gd, nd = json.loads(golden), json.loads(got)
+        keys = sorted(set(gd) | set(nd))
+        drift = [k for k in keys if gd.get(k) != nd.get(k)]
+        pytest.fail(
+            f"scenario {name!r} drifted from tests/golden/scenarios/"
+            f"{name}.json in sections {drift} — if intentional, "
+            f"regenerate with: {REGEN_CMD}"
+        )
+
+
+@pytest.mark.parametrize("name", SCENARIO_NAMES)
+def test_golden_summary_tracer_passive(name):
+    """The flight recorder must never change a summary byte."""
+    from repro.obs import Tracer
+
+    base, _ = _run(name)
+    traced, sim = run_scenario(get_scenario(name), tracer=Tracer())
+    assert traced.to_json() == base.to_json(), (
+        f"scenario {name!r}: attaching a Tracer changed the summary — "
+        "tracing must stay passive"
+    )
+    assert sim.trace.enabled and len(sim.trace.events()) > 0
+
+
+# ---------------------------------------------------------------------------
+# compiler invariants
+# ---------------------------------------------------------------------------
+
+def _check_compiled(spec):
+    comp_a = compile_scenario(spec)
+    comp_b = compile_scenario(spec)
+    assert comp_a.jobs == comp_b.jobs, "job stream not deterministic"
+    assert comp_a.events == comp_b.events, "event stream not deterministic"
+    times = [e.time for e in comp_a.events]
+    assert times == sorted(times), "event stream not time-sorted"
+    assert all(0.0 <= t for t in times)
+    for n, j in enumerate(comp_a.jobs):
+        assert j.job_id == n, "job ids must be positional"
+    serve_ids = {j.job_id for j in comp_a.jobs if j.kind == "serve"}
+    for e in comp_a.events:
+        if isinstance(e, ScaleEvent):
+            assert e.job_id in serve_ids, "autoscale targets a non-fleet"
+        if isinstance(e, ExpandEvent):
+            assert comp_a.cfg.active_pods is not None
+            assert max(e.pods) < spec.num_pods
+    return comp_a
+
+
+@pytest.mark.parametrize("name", SCENARIO_NAMES)
+def test_compile_deterministic_and_ordered(name):
+    _check_compiled(get_scenario(name))
+
+
+@pytest.mark.parametrize("name", SCENARIO_NAMES)
+def test_blame_conservation(name):
+    summary, _ = _run(name)
+    blame = summary.table["blame"]
+    assert blame["conserved"] is True
+    assert blame["max_residual"] <= 1e-6
+
+
+@pytest.mark.parametrize("name", SCENARIO_NAMES)
+def test_quick_twin_runs(name):
+    """The CI-smoke twin preserves the composition and still runs."""
+    spec = get_scenario(name)
+    q = quick_spec(spec)
+    assert (q.chaos is None) == (spec.chaos is None)
+    assert q.remediation == spec.remediation
+    assert q.router == spec.router
+    assert len(q.fleets) == len(spec.fleets)
+    summary, _ = run_scenario(q)
+    assert summary.table["blame"]["max_residual"] <= 1e-6
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests (clear skip when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+def _spec_strategy(st):
+    from repro.scenario import FleetSpec
+
+    return st.builds(
+        ScenarioSpec,
+        name=st.just("prop"),
+        days=st.floats(0.02, 0.1),
+        seed=st.integers(0, 2**16),
+        num_train_jobs=st.integers(2, 6),
+        workload_level=st.floats(0.2, 0.9),
+        num_pods=st.sampled_from([8, 12]),
+        reconfig_delay_s=st.sampled_from([0.0, 0.5]),
+        expand_pods=st.integers(0, 2),
+        fleets=st.lists(
+            st.builds(
+                FleetSpec,
+                req_rate=st.floats(0.01, 0.05),
+                diurnal=st.sampled_from([0.0, 0.5]),
+                phase_offset_s=st.floats(0.0, 600.0),
+                autoscale_pods=st.integers(0, 1),
+            ),
+            max_size=2,
+        ).map(tuple),
+    )
+
+
+def test_property_compile_invariants():
+    pytest.importorskip("hypothesis")  # property tests need hypothesis
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @settings(
+        max_examples=8, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    @given(spec=_spec_strategy(st))
+    def check(spec):
+        _check_compiled(spec)
+
+    check()
+
+
+def test_property_run_determinism():
+    pytest.importorskip("hypothesis")  # property tests need hypothesis
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    from repro.obs import Tracer
+
+    @settings(
+        max_examples=4, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    @given(spec=_spec_strategy(st))
+    def check(spec):
+        a, _ = run_scenario(spec)
+        b, _ = run_scenario(spec)
+        c, _ = run_scenario(spec, tracer=Tracer())
+        assert a.to_json() == b.to_json()
+        assert a.to_json() == c.to_json()
+        assert a.table["blame"]["max_residual"] <= 1e-6
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# cross-engine differential + fluid-only invariant
+# ---------------------------------------------------------------------------
+
+def test_static_scenario_engines_agree():
+    """Contention-free by construction ⇒ analytic and fluid JCTs match
+    to 1e-6 per job (the scenario-level twin of
+    ``tests/test_fluid_differential.py``)."""
+    spec = get_scenario("static_calib")
+    assert spec.spacing == "serial" and spec.chaos is None
+    analytic, _ = _run("static_calib")
+    fluid, _ = run_scenario(dataclasses.replace(spec, engine="fluid"))
+    a, f = analytic.table["train"]["jct"], fluid.table["train"]["jct"]
+    assert set(a) == set(f) and a
+    for k, v in a.items():
+        assert v is not None and f[k] is not None
+        assert f[k] == pytest.approx(v, rel=1e-6)
+
+
+@pytest.mark.parametrize("name", _INVARIANT_SCENARIOS)
+def test_incremental_darkens_no_more_than_cold(name):
+    spec = get_scenario(name)
+    if spec.engine != "fluid":
+        pytest.skip("fluid-only invariant")
+    _, inc = _run(name) if spec.incremental else run_scenario(spec)
+    _, cold = run_scenario(dataclasses.replace(spec, incremental=False))
+    assert inc.downtime_circuit_s <= cold.downtime_circuit_s + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# YAML twins
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", SCENARIO_NAMES)
+def test_yaml_twin_matches_catalog(name):
+    path = os.path.join(REPO, "examples", "scenarios", f"{name}.yaml")
+    assert os.path.exists(path), f"missing YAML twin {path}"
+    assert load_spec(path) == get_scenario(name), (
+        f"examples/scenarios/{name}.yaml drifted from the catalogue — "
+        "regenerate it from ScenarioSpec.to_dict()"
+    )
+
+
+def test_spec_dict_round_trip():
+    for spec in CATALOG.values():
+        assert spec_from_dict(spec.to_dict()) == spec
+
+
+# ---------------------------------------------------------------------------
+# calibration loop
+# ---------------------------------------------------------------------------
+
+def test_measured_step_matches_committed_bench():
+    with open(os.path.join(REPO, "BENCH_step.json")) as fh:
+        rows = {r["arch"]: r for r in json.load(fh)["rows"]}
+    archs = measured_archs()
+    assert set(archs) == set(rows)
+    for arch in archs:
+        assert measured_step_s(arch) == rows[arch]["train_ms"] / 1e3
+
+
+def test_calibrated_profiles_carry_measured_constants():
+    from repro.models.registry import ARCHS, smoke_config
+
+    profs = register_calibrated()
+    assert set(profs) == set(measured_archs())
+    for arch, prof in profs.items():
+        n_total, n_active = ARCHS[arch].param_counts()
+        _, n_smoke = smoke_config(arch).param_counts()
+        assert prof.grad_bytes == 2.0 * n_total
+        assert prof.compute_s == pytest.approx(
+            measured_step_s(arch) * n_active / n_smoke, rel=1e-12
+        )
+        assert prof.layers == ARCHS[arch].num_layers
+        # registered: arch ids are now valid Job.model names
+        from repro.dist.collectives import MODEL_PROFILES
+        assert MODEL_PROFILES[arch] == prof
+
+
+def test_uncalibrated_arch_raises_not_defaults():
+    from repro.configs import ARCH_IDS
+
+    unmeasured = sorted(set(ARCH_IDS) - set(measured_archs()))
+    assert unmeasured, "every arch measured — drop this guard"
+    with pytest.raises(Uncalibrated):
+        measured_step_s(unmeasured[0])
+    with pytest.raises(Uncalibrated):
+        calibrated_profile(unmeasured[0])
+
+
+def test_calibration_report_round_trips():
+    from repro.scenario import calibration_report
+
+    rep = calibration_report()
+    for arch, row in rep.items():
+        assert row["compute_s"] == pytest.approx(
+            row["measured_step_ms"] / 1e3 * row["scale"], rel=1e-9
+        )
+        assert row["kv_bytes_per_token"] >= 0.0
+
+
+@pytest.mark.slow
+def test_live_trainstep_within_order_of_magnitude():
+    """Re-measure one real trainstep and compare against the committed
+    constant.  Tolerance is deliberately huge (×25 either way): this is
+    a *units* guard — a ms/s mix-up (1000×) or a broken measurement path
+    fails; machine speed differences never do."""
+    import benchmarks.bench_step as bench_step
+
+    arch = "olmo-1b"
+    committed = measured_step_s(arch)
+    payload = _bench_one(bench_step, arch)
+    live = payload / 1e3
+    assert committed / 25 <= live <= committed * 25, (
+        f"live {arch} step {live * 1e3:.2f} ms vs committed "
+        f"{committed * 1e3:.2f} ms — rerun `python -m benchmarks.bench_step` "
+        "and regenerate scenario goldens"
+    )
+
+
+def _bench_one(bench_step, arch):
+    """One arch through the exact bench_step measurement path."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    import time
+
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import get_api, make_smoke_batch, smoke_config
+    from repro.train.optimizer import OptConfig
+    from repro.train.trainstep import (
+        TrainHparams, make_train_state, make_train_step,
+    )
+
+    cfg = smoke_config(arch)
+    api = get_api(cfg)
+    batch = make_smoke_batch(cfg, rng=np.random.default_rng(0), batch=4, seq=64)
+    sds = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}
+    step, *_ = make_train_step(
+        api, cfg, OptConfig(), make_host_mesh(), TrainHparams(), sds
+    )
+    state = make_train_state(api, jax.random.PRNGKey(0))
+    jb = {k: jnp.asarray(v) for k, v in batch.items()}
+    state, m = step(state, jb)
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for _ in range(5):
+        state, m = step(state, jb)
+    jax.block_until_ready(m["loss"])
+    return (time.perf_counter() - t0) / 5 * 1e3
